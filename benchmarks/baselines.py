@@ -1,0 +1,233 @@
+"""Baseline solvers the paper compares against (implemented here, since the
+originals are CPU/Cython packages not available offline):
+
+  vanilla_cd   cyclic coordinate descent, no working set, no acceleration
+               (the paper's "CD" baseline; scikit-learn/glmnet's algorithm)
+  ista/fista   proximal gradient + Nesterov (full-gradient methods)
+  irl1         iteratively reweighted L1 for the MCP (Candes et al. 2008 —
+               the paper's Fig. 5 sparse baseline)
+  admm_lasso   ADMM with cached factorization (Appendix E.2 comparison)
+  pgd_box      projected gradient for the SVM dual (liblinear-style baseline)
+
+Every solver records a (time, objective) trajectory with the same objective
+definition as repro.core so curves are directly comparable.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cd import cd_epoch_xb
+from repro.core.datafits import Quadratic
+from repro.core.penalties import L1, soft_threshold
+from repro.core.solver import _apply_T
+
+
+def _obj(X, y, beta, datafit, penalty, offset=None):
+    Xb = X @ beta
+    lin = 0.0 if offset is None else float(jnp.vdot(offset, beta))
+    return float(datafit.value(Xb, y) + lin + penalty.value(beta))
+
+
+def trajectory_recorder(X, y, datafit, penalty, offset=None):
+    t0 = time.perf_counter()
+    traj = []
+
+    def record(beta):
+        traj.append((time.perf_counter() - t0,
+                     _obj(X, y, beta, datafit, penalty, offset)))
+    return traj, record
+
+
+@partial(jax.jit, static_argnames=("epochs",), donate_argnums=(2, 3))
+def _cd_epochs(Xt, y, beta, Xb, L, offset, datafit, penalty, epochs):
+    def body(i, s):
+        b, xb = s
+        return cd_epoch_xb(Xt, y, b, xb, L, offset, datafit, penalty)
+    return jax.lax.fori_loop(0, epochs, body, (beta, Xb))
+
+
+def vanilla_cd(X, y, datafit, penalty, *, max_epochs=2000, record_every=10,
+               tol_obj=0.0):
+    """Full cyclic CD (paper Algorithm 3 on all p coordinates)."""
+    n, p = X.shape
+    Xt = X.T
+    L = datafit.lipschitz(X)
+    offset = datafit.grad_offset(p, X.dtype)
+    beta = jnp.zeros(p, X.dtype)
+    Xb = jnp.zeros(X.shape[0], X.dtype)
+    traj, record = trajectory_recorder(X, y, datafit, penalty, offset)
+    record(beta)
+    for _ in range(max_epochs // record_every):
+        beta, Xb = _cd_epochs(Xt, y, beta, Xb, L, offset, datafit, penalty,
+                              record_every)
+        record(beta)
+        if len(traj) > 2 and abs(traj[-2][1] - traj[-1][1]) < tol_obj:
+            break
+    return np.asarray(beta), traj
+
+
+def ista(X, y, lam, *, max_iter=2000, record_every=10, penalty=None):
+    datafit = Quadratic()
+    penalty = penalty if penalty is not None else L1(lam)
+    n, p = X.shape
+    Lg = float(jnp.linalg.norm(X, 2) ** 2 / n)
+
+    @jax.jit
+    def step(beta):
+        grad = X.T @ (X @ beta - y) / n
+        return penalty.prox(beta - grad / Lg, 1.0 / Lg)
+
+    beta = jnp.zeros(p, X.dtype)
+    traj, record = trajectory_recorder(X, y, datafit, penalty)
+    record(beta)
+    for it in range(max_iter):
+        beta = step(beta)
+        if (it + 1) % record_every == 0:
+            record(beta)
+    return np.asarray(beta), traj
+
+
+def fista(X, y, lam, *, max_iter=2000, record_every=10):
+    datafit = Quadratic()
+    penalty = L1(lam)
+    n, p = X.shape
+    Lg = float(jnp.linalg.norm(X, 2) ** 2 / n)
+
+    @jax.jit
+    def step(beta, z, t):
+        grad = X.T @ (X @ z - y) / n
+        beta_new = penalty.prox(z - grad / Lg, 1.0 / Lg)
+        t_new = 0.5 * (1 + jnp.sqrt(1 + 4 * t * t))
+        z_new = beta_new + (t - 1) / t_new * (beta_new - beta)
+        return beta_new, z_new, t_new
+
+    beta = jnp.zeros(p, X.dtype)
+    z = beta
+    t = jnp.asarray(1.0, X.dtype)
+    traj, record = trajectory_recorder(X, y, datafit, penalty)
+    record(beta)
+    for it in range(max_iter):
+        beta, z, t = step(beta, z, t)
+        if (it + 1) % record_every == 0:
+            record(beta)
+    return np.asarray(beta), traj
+
+
+def irl1_mcp(X, y, lam, gamma, *, n_reweight=15, inner_tol=1e-6,
+             mcp_penalty=None):
+    """Iteratively reweighted L1 for the MCP (paper Fig. 5 baseline): solve a
+    weighted Lasso with w_j = max(0, lam - |beta_j|/gamma) (MCP derivative —
+    zero weights for |beta| > gamma lam)."""
+    from repro.core.penalties import MCP
+    from repro.core.solver import solve
+    import dataclasses
+
+    @jax.tree_util.register_pytree_node_class
+    @dataclasses.dataclass(frozen=True)
+    class WeightedL1:
+        w: jnp.ndarray
+        HAS_SUBDIFF = True
+
+        def tree_flatten(self):
+            return (self.w,), None
+
+        @classmethod
+        def tree_unflatten(cls, aux, children):
+            return cls(*children)
+
+        def value(self, beta):
+            return jnp.sum(self.w * jnp.abs(beta))
+
+        def prox(self, x, step):
+            return soft_threshold(x, step * self.w)
+
+        def prox_at(self, x, step, j):
+            return soft_threshold(x, step * self.w[j])
+
+        def subdiff_dist(self, grad, beta):
+            at0 = jnp.maximum(jnp.abs(grad) - self.w, 0.0)
+            away = jnp.abs(grad + self.w * jnp.sign(beta))
+            return jnp.where(beta == 0.0, at0, away)
+
+        def generalized_support(self, beta):
+            return beta != 0.0
+
+        def restricted(self, ws):
+            return WeightedL1(self.w[ws])
+
+    mcp = mcp_penalty or MCP(lam, gamma)
+    datafit = Quadratic()
+    p = X.shape[1]
+    beta = jnp.zeros(p, X.dtype)
+    traj, record = trajectory_recorder(X, y, datafit, mcp)
+    record(beta)
+    for _ in range(n_reweight):
+        w = jnp.maximum(lam - jnp.abs(beta) / gamma, 0.0)
+        res = solve(X, y, datafit, WeightedL1(w), tol=inner_tol, beta0=beta)
+        beta = res.beta
+        record(beta)
+    return np.asarray(beta), traj
+
+
+def admm_lasso(X, y, lam, *, rho=1.0, max_iter=500, record_every=5):
+    """ADMM with a cached Cholesky factorization (Appendix E.2: the p x p
+    system solve per iteration is the scaling barrier)."""
+    X_np = np.asarray(X)
+    y_np = np.asarray(y)
+    n, p = X_np.shape
+    datafit = Quadratic()
+    penalty = L1(lam)
+    t_fact = time.perf_counter()
+    if n >= p:
+        Lc = np.linalg.cholesky(X_np.T @ X_np / n + rho * np.eye(p))
+    else:                                        # Woodbury for n < p
+        Lc = np.linalg.cholesky(np.eye(n) + X_np @ X_np.T / (n * rho))
+    Xty = X_np.T @ y_np / n
+    beta = np.zeros(p)
+    z = np.zeros(p)
+    u = np.zeros(p)
+    traj = []                       # timed from factorization start
+
+    def rec(b):
+        traj.append((time.perf_counter() - t_fact,
+                     _obj(X, y, jnp.asarray(b), datafit, penalty)))
+    rec(z)
+    for it in range(max_iter):
+        q = Xty + rho * (z - u)
+        if n >= p:
+            beta = np.linalg.solve(Lc.T, np.linalg.solve(Lc, q))
+        else:
+            t = X_np @ q / (n * rho)
+            beta = q / rho - X_np.T @ np.linalg.solve(
+                Lc.T, np.linalg.solve(Lc, t)) / rho
+        z = np.sign(beta + u) * np.maximum(np.abs(beta + u) - lam / rho, 0)
+        u = u + beta - z
+        if (it + 1) % record_every == 0:
+            rec(z)
+    return z, traj
+
+
+def pgd_box(Q_mul, lin, C, n, *, step, max_iter=1000, record_every=10,
+            obj_fn=None):
+    """Projected gradient on the SVM dual (box-constrained QP)."""
+    alpha = jnp.zeros(n)
+
+    @jax.jit
+    def it(a):
+        g = Q_mul(a) - lin
+        return jnp.clip(a - step * g, 0.0, C)
+
+    t0 = time.perf_counter()
+    traj = []
+    if obj_fn is not None:
+        traj.append((0.0, float(obj_fn(alpha))))
+    for k in range(max_iter):
+        alpha = it(alpha)
+        if obj_fn is not None and (k + 1) % record_every == 0:
+            traj.append((time.perf_counter() - t0, float(obj_fn(alpha))))
+    return np.asarray(alpha), traj

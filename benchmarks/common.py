@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: trajectory post-processing + result I/O."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def skglm_trajectory(res):
+    """(time, objective) pairs from a SolveResult's outer-iteration history."""
+    return list(zip(res.time_history, res.obj_history))
+
+
+def time_to_tol(traj, f_star, tol):
+    """First wall-time at which obj - f_star <= tol * max(1, |f_star|)."""
+    thresh = f_star + tol * max(1.0, abs(f_star))
+    for t, f in traj:
+        if f <= thresh:
+            return t
+    return float("inf")
+
+
+def best_objective(trajs):
+    return min(min(f for _, f in tr) for tr in trajs if tr)
+
+
+def summarize(name, trajs_by_solver, tols=(1e-4, 1e-6)):
+    """Rows: solver, final obj, time-to-tol for each tol."""
+    f_star = best_objective(list(trajs_by_solver.values()))
+    rows = []
+    for solver, traj in trajs_by_solver.items():
+        row = {"bench": name, "solver": solver,
+               "final_obj": min(f for _, f in traj),
+               "total_s": traj[-1][0]}
+        for tol in tols:
+            row[f"t@{tol:g}"] = time_to_tol(traj, f_star, tol)
+        rows.append(row)
+    return rows
+
+
+def print_rows(rows, cols=None):
+    if not rows:
+        return
+    cols = cols or list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        out = []
+        for c in cols:
+            v = r.get(c, "")
+            out.append(f"{v:.4g}" if isinstance(v, float) else str(v))
+        print(",".join(out))
+
+
+def save_rows(rows, path):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,57 @@
+"""Figure 2: Lasso — suboptimality vs. time across solvers and lambdas.
+
+Offline stand-ins for the paper's competitors (same algorithms, our JAX
+implementations): vanilla CD (scikit-learn/glmnet's algorithm), ISTA/FISTA
+(full-gradient methods), ADMM (Appendix E.2). skglm = Algorithm 1 (ours).
+Also reports the final duality gap per solver (Fig. 2's y-axis).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import lambda_max, lasso, lasso_gap
+from repro.core.datafits import Quadratic
+from repro.core.penalties import L1
+from repro.data.synth import make_correlated_design
+
+from .baselines import admm_lasso, fista, ista, vanilla_cd
+from .common import print_rows, save_rows, skglm_trajectory, summarize
+
+SIZES = {"small": dict(n=300, p=1500, n_nonzero=30),
+         "paper": dict(n=1000, p=10000, n_nonzero=100)}
+
+
+def run(scale="small", lam_fracs=(10, 100), seed=0):
+    cfgd = SIZES[scale]
+    X, y, _ = make_correlated_design(seed=seed, rho=0.5, snr=5.0, **cfgd)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lmax = lambda_max(X, y)
+    rows = []
+    for frac in lam_fracs:
+        lam = lmax / frac
+        trajs = {}
+        res = lasso(X, y, lam, tol=1e-10, max_outer=100)
+        trajs["skglm"] = skglm_trajectory(res)
+        _, trajs["cd"] = vanilla_cd(X, y, Quadratic(), L1(lam),
+                                    max_epochs=min(800, 40 * frac))
+        _, trajs["ista"] = ista(X, y, lam, max_iter=min(2000, 100 * frac))
+        _, trajs["fista"] = fista(X, y, lam, max_iter=min(2000, 60 * frac))
+        _, trajs["admm"] = admm_lasso(X, y, lam, max_iter=300)
+        for r in summarize(f"lasso_lam/{frac}", trajs):
+            if r["solver"] == "skglm":
+                gap, _ = lasso_gap(X, y, res.beta, lam)
+                r["final_gap"] = gap
+            rows.append(r)
+    return rows
+
+
+def main(scale="small"):
+    rows = run(scale)
+    print_rows(rows)
+    save_rows(rows, "experiments/bench/fig2_lasso.json")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Figure 4 (simulated analog): the M/EEG inverse problem — multitask
+regression with block penalties.
+
+The paper's experiment: two neural sources (one per auditory cortex) must be
+recovered from surface measurements; the convex l_{2,1} fails to localize one
+source per hemisphere while block non-convex penalties succeed. Offline
+analog: a forward operator whose columns are highly correlated *within* each
+of two "hemisphere" blocks (leadfield-like coherence), ground truth = exactly
+one active row per hemisphere, T=20 time samples. Scored: does the estimator
+place (at least) one detected source in EACH hemisphere, and how many
+spurious sources does it add at the lambda giving the best F1 along the path?
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.api import lambda_max
+from repro.core.datafits import MultitaskQuadratic
+from repro.core.penalties import BlockL1, BlockMCP
+from repro.core.solver import solve
+
+from .common import print_rows, save_rows
+
+SIZES = {"small": dict(n=60, p_per_hemi=150, T=20),
+         "paper": dict(n=120, p_per_hemi=500, T=50)}
+
+
+def make_leadfield(n, p_per_hemi, T, *, coherence=0.98, snr=1.5, seed=0):
+    """Two column-coherent "hemisphere" blocks; one true source per block,
+    the second 4x weaker (the paper's hard case: the l_{2,1} amplitude bias
+    must choose between missing the weak source and over-selecting)."""
+    rng = np.random.default_rng(seed)
+    cols = []
+    true_rows = []
+    for h in range(2):
+        base = rng.standard_normal((n, 1))
+        block = (coherence * base
+                 + np.sqrt(1 - coherence ** 2)
+                 * rng.standard_normal((n, p_per_hemi)))
+        cols.append(block)
+        true_rows.append(h * p_per_hemi + rng.integers(0, p_per_hemi))
+    X = np.concatenate(cols, axis=1)
+    X /= np.linalg.norm(X, axis=0) / np.sqrt(n)
+    W = np.zeros((2 * p_per_hemi, T))
+    t = np.linspace(0, 1, T)
+    W[true_rows[0]] = np.sin(2 * np.pi * 5 * t)
+    W[true_rows[1]] = np.cos(2 * np.pi * 3 * t) * 0.25
+    signal = X @ W
+    noise = rng.standard_normal((n, T))
+    noise *= np.linalg.norm(signal) / (snr * np.linalg.norm(noise))
+    return X, signal + noise, W, true_rows
+
+
+def run(scale="small", seed=0):
+    cfgd = SIZES[scale]
+    X, Y, W_true, true_rows = make_leadfield(seed=seed, **cfgd)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    lmax = lambda_max(Xj, Yj, MultitaskQuadratic())
+    p_hemi = cfgd["p_per_hemi"]
+    rows = []
+    for name, pen0 in (("block_l21", BlockL1(1.0)),
+                       ("block_mcp", BlockMCP(1.0, 3.0))):
+        best = None
+        for frac in np.geomspace(2, 50, 10):
+            pen = dataclasses.replace(pen0, lam=float(lmax / frac))
+            res = solve(Xj, Yj, MultitaskQuadratic(), pen, tol=1e-7,
+                        max_outer=60)
+            act = np.flatnonzero(
+                np.linalg.norm(np.asarray(res.beta), axis=1))
+            hemi_hit = [bool(np.any(act < p_hemi)),
+                        bool(np.any(act >= p_hemi))]
+            tp = len(set(act) & set(true_rows))
+            f1 = 2 * tp / max(len(act) + 2, 1)
+            rec = {"bench": "meeg", "solver": name,
+                   "lam_frac": float(frac), "n_sources": int(len(act)),
+                   "both_hemispheres": all(hemi_hit),
+                   "exact_two_sources": sorted(act.tolist()) ==
+                   sorted(true_rows), "f1": f1}
+            if best is None or rec["f1"] > best["f1"] or (
+                    rec["f1"] == best["f1"]
+                    and rec["n_sources"] < best["n_sources"]):
+                best = rec
+        rows.append(best)
+    return rows
+
+
+def main(scale="small"):
+    rows = run(scale)
+    print_rows(rows)
+    save_rows(rows, "experiments/bench/fig4_meeg.json")
+    # the paper's qualitative claim, machine-checked:
+    by = {r["solver"]: r for r in rows}
+    claim = (by["block_mcp"]["exact_two_sources"]
+             and not by["block_l21"]["exact_two_sources"])
+    print(f"claim,nonconvex_localizes_where_l21_fails,{claim}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

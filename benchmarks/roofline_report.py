@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the recorded JSONs
+(experiments/dryrun/*.json + experiments/roofline/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_NAMES
+from repro.models.config import cells_for
+
+
+def load_dir(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        with open(f) as fh:
+            rec = json.load(fh)
+        out[os.path.basename(f)[:-5]] = rec
+    return out
+
+
+def dryrun_table(d="experiments/dryrun"):
+    recs = load_dir(d)
+    lines = ["| arch | shape | mesh | compile s | args GiB/dev | temp GiB/dev "
+             "| HLO GFLOP/dev | coll MiB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_NAMES:
+        for shape in [s.name for s in cells_for(arch)]:
+            for mesh in ("16-16", "2-16-16"):
+                key = f"{arch}_{shape}_{mesh}"
+                r = recs.get(key)
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                m = r["memory"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh.replace('-', 'x')} "
+                    f"| {r['compile_s']:.1f} "
+                    f"| {m['argument_bytes'] / 2**30:.2f} "
+                    f"| {m['temp_bytes'] / 2**30:.2f} "
+                    f"| {r['flops_per_device_toplevel'] / 1e9:.1f} "
+                    f"| {r['collective_link_bytes_toplevel'] / 2**20:.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(d="experiments/roofline", tag=""):
+    recs = load_dir(d)
+    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
+             "| roofline frac | useful ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_NAMES:
+        for shape in [s.name for s in cells_for(arch)]:
+            key = f"{arch}_{shape}" + (f"_{tag}" if tag else "")
+            r = recs.get(key)
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | | |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.4g} "
+                f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+                f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+                f"| {r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    import os
+    dr = "experiments/dryrun_opt" if os.path.isdir("experiments/dryrun_opt") \
+        else "experiments/dryrun"
+    print("## Dry-run (optimized code)\n")
+    print(dryrun_table(dr))
+    print("\n## Roofline — paper-faithful baseline\n")
+    print(roofline_table("experiments/roofline"))
+    if os.path.isdir("experiments/roofline_v2"):
+        print("\n## Roofline — optimized (post-§Perf)\n")
+        print(roofline_table("experiments/roofline_v2"))
+
+
+if __name__ == "__main__":
+    main()

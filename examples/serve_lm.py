@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + bucketed decode through the ServeEngine
+(one compiled decode step per cache-capacity bucket, dynamic context length).
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.params import init_params
+from repro.models.transformer import build_param_defs
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    cfg = smoke_config("gemma2-2b")      # local/global attention + softcaps
+    params = init_params(build_param_defs(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    eng = ServeEngine(cfg, params, chunk=16)
+
+    rng = np.random.default_rng(0)
+    B, S = 4, 32
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, max_new_tokens=24, temperature=0.8,
+                       top_k=40, seed=1)
+    dt = time.perf_counter() - t0
+    print(f"prefill {res.n_prefill} tokens x {B} seqs, "
+          f"{res.n_steps} decode steps, {res.n_decode_compiles} decode "
+          f"compiles, {dt:.1f}s total")
+    print("generated token ids (batch 0):", res.tokens[0].tolist())
+
+    # second batch with longer output reuses the same compiled bucket
+    t0 = time.perf_counter()
+    res2 = eng.generate(prompts, max_new_tokens=48, temperature=0.0)
+    print(f"second call: {res2.n_steps} steps in "
+          f"{time.perf_counter() - t0:.1f}s, "
+          f"decode compiles total={len(eng._decode_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpointer import (Checkpointer, latest_step, restore_pytree,
+                           save_pytree)
+from .fault import ElasticPlan, FaultToleranceConfig, TrainingSupervisor

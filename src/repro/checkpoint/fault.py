@@ -1,0 +1,175 @@
+"""Fault tolerance and elasticity for multi-pod training (DESIGN.md §3).
+
+On a real cluster, failures surface as (a) a worker process dying (XLA
+collective timeout -> RuntimeError in every surviving worker) or (b) a
+straggler slowing every synchronous step. This module provides the control
+plane that the launcher wraps around the jitted step:
+
+  * TrainingSupervisor — checkpoint/restart driver: runs the step function,
+    classifies exceptions as fatal vs restartable, restores the latest
+    checkpoint, rebuilds device state, and resumes. Restart storms are bounded
+    by an exponential-backoff budget.
+  * ElasticPlan — when a pod is lost, training continues on the surviving
+    mesh: the plan recomputes (mesh shape, per-pod batch, accumulation factor)
+    preserving global batch semantics; checkpoints restore onto the smaller
+    mesh because save/restore is sharding-agnostic (checkpointer.py).
+  * StragglerMonitor — EWMA of step times; flags steps slower than
+    `threshold` x the EWMA. At scale the mitigation is within-step (the
+    backup-pod rerouting is cluster-manager territory), so here we surface
+    the signal + counters that the launcher exports.
+
+All of this is hardware-independent control logic, unit-tested on CPU by
+injecting synthetic failures (tests/test_fault.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+__all__ = ["FaultToleranceConfig", "ElasticPlan", "StragglerMonitor",
+           "TrainingSupervisor", "RESTARTABLE_ERRORS"]
+
+# XLA/runtime failures that a restart can heal (vs. bugs, which re-raise)
+RESTARTABLE_ERRORS = (
+    "DEADLINE_EXCEEDED", "UNAVAILABLE", "collective", "NCCL", "ICI",
+    "slice health", "preempted", "socket closed", "barrier timeout",
+)
+
+
+def is_restartable(exc: BaseException) -> bool:
+    if isinstance(exc, (KeyboardInterrupt, SystemExit)):
+        return False
+    msg = f"{type(exc).__name__}: {exc}"
+    return any(tok.lower() in msg.lower() for tok in RESTARTABLE_ERRORS)
+
+
+@dataclass
+class FaultToleranceConfig:
+    max_restarts: int = 10
+    backoff_s: float = 1.0          # doubles per consecutive failure
+    backoff_cap_s: float = 300.0
+    straggler_threshold: float = 2.0
+    straggler_ewma: float = 0.9
+
+
+@dataclass
+class ElasticPlan:
+    """Re-plan the mesh/batch split after losing pods.
+
+    Keeps the global batch size and the model-parallel degree fixed; lost
+    data-parallel capacity is recovered with more gradient-accumulation
+    microbatches (same optimizer trajectory, longer steps).
+    """
+    pods_total: int
+    pods_alive: int
+    data_per_pod: int
+    model_dim: int
+    global_batch: int
+    base_micro: int = 1
+
+    @property
+    def mesh_shape(self):
+        if self.pods_alive > 1:
+            return (self.pods_alive, self.data_per_pod, self.model_dim)
+        return (self.data_per_pod, self.model_dim)
+
+    @property
+    def mesh_axes(self):
+        if self.pods_alive > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+    @property
+    def n_micro(self) -> int:
+        """Scale accumulation so global batch tokens are unchanged."""
+        lost_factor = self.pods_total / max(self.pods_alive, 1)
+        n = self.base_micro * lost_factor
+        if abs(n - round(n)) > 1e-9:
+            raise ValueError(
+                f"global batch {self.global_batch} not divisible after "
+                f"elastic rescale {self.pods_total}->{self.pods_alive}")
+        return int(round(n))
+
+    @property
+    def micro_batch(self) -> int:
+        return self.global_batch // self.n_micro
+
+    def shrink(self, pods_lost: int = 1) -> "ElasticPlan":
+        alive = self.pods_alive - pods_lost
+        if alive < 1:
+            raise RuntimeError("no pods left")
+        return ElasticPlan(self.pods_total, alive, self.data_per_pod,
+                           self.model_dim, self.global_batch, self.base_micro)
+
+
+class StragglerMonitor:
+    """EWMA step-time tracking + slow-step detection."""
+
+    def __init__(self, threshold: float = 2.0, ewma: float = 0.9):
+        self.threshold = threshold
+        self.alpha = ewma
+        self.mean: Optional[float] = None
+        self.n_flagged = 0
+        self.n_steps = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record one step; True if it was a straggler step."""
+        self.n_steps += 1
+        if self.mean is None:
+            self.mean = dt
+            return False
+        slow = dt > self.threshold * self.mean
+        if slow:
+            self.n_flagged += 1
+            # don't poison the EWMA with the outlier
+            return True
+        self.mean = self.alpha * self.mean + (1 - self.alpha) * dt
+        return False
+
+
+@dataclass
+class TrainingSupervisor:
+    """Checkpoint/restart loop around a step function.
+
+    run() drives `n_steps` invocations of `step_fn(state, step_idx) -> state`,
+    checkpointing via `save_fn(state, step_idx)` and recovering from
+    restartable failures via `restore_fn() -> (state, step_idx)`.
+    """
+    config: FaultToleranceConfig
+    save_fn: Callable
+    restore_fn: Callable
+    save_every: int = 100
+    on_restart: Optional[Callable] = None
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    restarts: int = 0
+    sleep_fn: Callable = time.sleep    # injectable for tests
+
+    def run(self, step_fn, state, start_step: int, n_steps: int):
+        step = start_step
+        consecutive_failures = 0
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                state = step_fn(state, step)
+                self.monitor.observe(time.perf_counter() - t0)
+                step += 1
+                consecutive_failures = 0
+                if step % self.save_every == 0:
+                    self.save_fn(state, step)
+            except Exception as e:               # noqa: BLE001
+                if not is_restartable(e):
+                    raise
+                self.restarts += 1
+                consecutive_failures += 1
+                if self.restarts > self.config.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted ({self.restarts})") from e
+                backoff = min(
+                    self.config.backoff_s * 2 ** (consecutive_failures - 1),
+                    self.config.backoff_cap_s)
+                self.sleep_fn(backoff)
+                if self.on_restart is not None:
+                    self.on_restart(e)
+                state, step = self.restore_fn()
+        return state, step

@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture."""
+from importlib import import_module
+
+_MODULES = {
+    "gemma2-2b": "gemma2_2b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "grok-1-314b": "grok_1_314b",
+    "musicgen-medium": "musicgen_medium",
+    "internvl2-1b": "internvl2_1b",
+    "xlstm-350m": "xlstm_350m",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def smoke_config(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    cfg = get_config(name)
+    kw = dict(d_model=128, n_heads=4, n_kv=2, head_dim=32, n_repeat=1,
+              vocab=512, d_ff=256, vision_tokens=min(cfg.vision_tokens, 8),
+              cross_len=16, sliding_window=32)
+    if cfg.moe is not None:
+        from repro.models.config import MoECfg
+        kw["moe"] = MoECfg(n_experts=4, top_k=cfg.moe.top_k, d_ff=64,
+                           shared_d_ff=64 if cfg.moe.shared_d_ff else 0)
+    if cfg.ssm is not None:
+        from repro.models.config import SSMCfg
+        kw["ssm"] = SSMCfg(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=8)
+    if cfg.xlstm is not None:
+        from repro.models.config import XLSTMCfg
+        kw["xlstm"] = XLSTMCfg(expand=2, chunk=8)
+    if cfg.name == "zamba2-2.7b":
+        kw["n_kv"] = 4          # MHA in the full config; keep MHA reduced
+        kw["n_heads"] = 4
+    if cfg.name == "xlstm-350m":
+        kw["n_heads"] = 2
+        kw["n_kv"] = 2
+    return cfg.scaled(**kw)

@@ -1,0 +1,13 @@
+"""gemma2-2b: local+global alternating attention, logit softcaps, GQA kv=4.
+[arXiv:2408.00118; hf]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="gemma2-2b", family="dense",
+    d_model=2304, n_heads=8, n_kv=4, head_dim=256, d_ff=9216, vocab=256000,
+    pattern=(Layer("swa", "geglu"), Layer("attn", "geglu")), n_repeat=13,
+    sliding_window=4096, attn_softcap=50.0, logit_softcap=30.0,
+    tie_embeddings=True, post_norm=True, embed_scale=True,
+    act_rules={"qseq": "model"},
+    prox_lam=1e-4,
+)

@@ -1,0 +1,15 @@
+"""grok-1-314b: MoE 8 experts top-2, attention/logit softcaps.
+[hf:xai-org/grok-1; unverified]"""
+from repro.models.config import ArchConfig, Layer, MoECfg
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe",
+    d_model=6144, n_heads=48, n_kv=8, head_dim=128, d_ff=32768, vocab=131072,
+    pattern=(Layer("attn", "moe"),), n_repeat=64,
+    moe=MoECfg(n_experts=8, top_k=2, d_ff=32768),
+    attn_softcap=30.0, logit_softcap=30.0, embed_scale=True,
+    # 8 experts do not divide the 16-way model axis, so full EP is not
+    # expressible here; experts keep d_ff tensor-parallel over 'model'
+    # (the GShard-style dispatch rewrite still applies; §Perf notes).
+    prox_lam=1e-4,
+)

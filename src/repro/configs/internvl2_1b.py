@@ -1,0 +1,14 @@
+"""internvl2-1b: Qwen2-0.5B-family LM backbone; the InternViT frontend is a
+STUB (input_specs provides precomputed patch embeddings prepended to the text
+sequence). [arXiv:2404.16821; hf]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="internvl2-1b", family="vlm",
+    d_model=896, n_heads=14, n_kv=2, head_dim=64, d_ff=4864, vocab=151655,
+    pattern=(Layer("attn", "swiglu"),), n_repeat=24,
+    vision_tokens=256, tie_embeddings=True, rope_theta=1e6,
+    # 14 q-heads / 2 kv-heads cannot shard 16-way: sequence-parallel attention
+    act_rules={"qseq": "model"},
+    prox_lam=1e-4,
+)

@@ -1,0 +1,15 @@
+"""llama4-scout-17b-16e: MoE 16 experts top-1 + shared expert.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.models.config import ArchConfig, Layer, MoECfg
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    d_model=5120, n_heads=40, n_kv=8, head_dim=128, d_ff=8192, vocab=202048,
+    pattern=(Layer("attn", "moe"),), n_repeat=48,
+    moe=MoECfg(n_experts=16, top_k=1, d_ff=8192, shared_d_ff=8192),
+    rope_theta=5e5,
+    # expert parallelism (16 experts / 16-way model axis): §Perf hillclimb #2
+    act_rules={"qseq": "model", "expert": "model"},
+    param_rules={"expert": "model", "ffn": None},
+    prox_lam=1e-4,
+)

@@ -1,0 +1,14 @@
+"""musicgen-medium: decoder-only over EnCodec tokens (4 codebooks) with
+cross-attention to a stub text-conditioning stream. The EnCodec frontend is a
+STUB: input_specs provides token ids per codebook and precomputed conditioning
+embeddings. [arXiv:2306.05284; hf]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="musicgen-medium", family="audio",
+    d_model=1536, n_heads=24, n_kv=24, head_dim=64, d_ff=6144, vocab=2048,
+    pattern=(Layer("attn", "gelu", cross_attn=True),), n_repeat=48,
+    n_codebooks=4, cross_d=1536, cross_len=256,
+    act_rules={"qseq": "model"},
+    prox_lam=1e-4,
+)

@@ -1,0 +1,9 @@
+"""nemotron-4-340b: GQA kv=8, squared-ReLU MLP. [arXiv:2402.16819; unverified]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b", family="dense",
+    d_model=18432, n_heads=96, n_kv=8, head_dim=192, d_ff=73728, vocab=256000,
+    pattern=(Layer("attn", "sqrelu"),), n_repeat=96,
+    prox_lam=1e-4,
+)

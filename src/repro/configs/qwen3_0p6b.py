@@ -1,0 +1,10 @@
+"""qwen3-0.6b: qk_norm, GQA kv=8, tied embeddings. [hf:Qwen/Qwen3-0.6B; hf]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b", family="dense",
+    d_model=1024, n_heads=16, n_kv=8, head_dim=128, d_ff=3072, vocab=151936,
+    pattern=(Layer("attn", "swiglu"),), n_repeat=28,
+    qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    prox_lam=1e-4,
+)

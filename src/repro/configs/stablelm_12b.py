@@ -1,0 +1,10 @@
+"""stablelm-12b: dense GQA decoder, qk-norm. [hf:stabilityai/stablelm-2-12b; hf]"""
+from repro.models.config import ArchConfig, Layer
+
+CONFIG = ArchConfig(
+    name="stablelm-12b", family="dense",
+    d_model=5120, n_heads=32, n_kv=8, head_dim=160, d_ff=13824, vocab=100352,
+    pattern=(Layer("attn", "swiglu"),), n_repeat=40,
+    qk_norm=True,
+    prox_lam=1e-4,
+)

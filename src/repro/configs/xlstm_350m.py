@@ -1,0 +1,16 @@
+"""xlstm-350m: mLSTM + sLSTM blocks (7:1-ish -> 3:1 pattern), no separate MLP
+(d_ff=0; blocks carry their own up/down projections). [arXiv:2405.04517;
+unverified]"""
+from repro.models.config import ArchConfig, Layer, XLSTMCfg
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    d_model=1024, n_heads=4, n_kv=4, head_dim=256, d_ff=0, vocab=50304,
+    pattern=(Layer("mlstm", "none"), Layer("mlstm", "none"),
+             Layer("mlstm", "none"), Layer("slstm", "none")), n_repeat=6,
+    xlstm=XLSTMCfg(expand=2, chunk=128),
+    tie_embeddings=True,
+    # 4 heads cannot shard 16-way; shard inner features + the chunk axis.
+    act_rules={"chunks": "model"},
+    prox_lam=1e-4,
+)

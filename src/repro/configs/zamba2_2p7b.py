@@ -1,0 +1,16 @@
+"""zamba2-2.7b: Mamba2 backbone with a shared attention block (+MLP) every
+6th layer, fed concat(hidden, initial embedding). Per-invocation LoRA of the
+shared block is approximated by a per-layer output projection (DESIGN.md).
+[arXiv:2411.15242; hf]"""
+from repro.models.config import ArchConfig, Layer, SSMCfg
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    d_model=2560, n_heads=32, n_kv=32, head_dim=80, d_ff=10240, vocab=32000,
+    pattern=(Layer("mamba", "none"), Layer("mamba", "none"),
+             Layer("mamba", "none"), Layer("mamba", "none"),
+             Layer("mamba", "none"), Layer("shared_attn", "swiglu")),
+    n_repeat=9,
+    ssm=SSMCfg(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=128),
+    prox_lam=1e-4,
+)

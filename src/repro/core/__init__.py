@@ -1,0 +1,34 @@
+"""repro.core — the paper's contribution: a generic working-set + Anderson-CD
+solver for sparse generalized linear models with convex or non-convex
+separable penalties (skglm, NeurIPS 2022)."""
+from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
+from .penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1, BlockMCP,
+                        Box, soft_threshold)
+from .solver import SolveResult, solve
+from .anderson import anderson_extrapolate
+from .working_set import (fixed_point_score, grow_ws_size, next_pow2,
+                          select_working_set, violation_scores)
+from .api import (elastic_net, enet_gap, lambda_max, lasso, lasso_gap,
+                  logreg_gap, mcp_regression, multitask_lasso, multitask_mcp,
+                  scad_regression, sparse_logreg, svc_dual)
+from .path import PathResult, reg_path, support_metrics
+from .distributed import make_distributed_ops, shard_design, solve_distributed
+from .estimators import (ElasticNet, GeneralizedLinearEstimator, Lasso,
+                         LinearSVC, MCPRegression, MultiTaskLasso,
+                         MultiTaskMCP, SCADRegression,
+                         SparseLogisticRegression)
+
+__all__ = [
+    "Quadratic", "Logistic", "QuadraticSVC", "MultitaskQuadratic",
+    "L1", "L1L2", "MCP", "SCAD", "L05", "L23", "Box", "BlockL1", "BlockMCP",
+    "soft_threshold", "solve", "SolveResult", "anderson_extrapolate",
+    "violation_scores", "fixed_point_score", "select_working_set",
+    "grow_ws_size", "next_pow2", "lambda_max", "lasso", "elastic_net",
+    "mcp_regression", "scad_regression", "sparse_logreg", "svc_dual",
+    "multitask_lasso", "multitask_mcp", "lasso_gap", "enet_gap", "logreg_gap",
+    "reg_path", "PathResult", "support_metrics",
+    "shard_design", "solve_distributed", "make_distributed_ops",
+    "GeneralizedLinearEstimator", "Lasso", "ElasticNet", "MCPRegression",
+    "SCADRegression", "SparseLogisticRegression", "LinearSVC",
+    "MultiTaskLasso", "MultiTaskMCP",
+]

@@ -1,0 +1,123 @@
+"""Convenience API: lambda_max, duality gaps, and named estimators."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
+from .penalties import MCP, SCAD, L05, L1, L1L2, Box, BlockL1, BlockMCP
+from .solver import solve
+
+__all__ = ["lambda_max", "lasso_gap", "enet_gap", "logreg_gap",
+           "lasso", "elastic_net", "mcp_regression", "scad_regression",
+           "sparse_logreg", "svc_dual", "multitask_lasso", "multitask_mcp"]
+
+
+def lambda_max(X, y, datafit=None):
+    """Smallest lambda with solution 0: ||X^T F'(X 0)||_inf (paper §3.1)."""
+    datafit = Quadratic() if datafit is None else datafit
+    Xb0 = jnp.zeros((X.shape[0],) + (y.shape[1:] if y.ndim > 1 else ()), X.dtype)
+    grad0 = X.T @ datafit.raw_grad(Xb0, y)
+    if grad0.ndim == 2:
+        return float(jnp.max(jnp.sqrt(jnp.sum(grad0 ** 2, axis=-1))))
+    return float(jnp.max(jnp.abs(grad0)))
+
+
+@jax.jit
+def _lasso_gap(X, y, beta, lam):
+    n = y.shape[0]
+    r = y - X @ beta
+    primal = jnp.sum(r ** 2) / (2 * n) + lam * jnp.sum(jnp.abs(beta))
+    # dual-feasible rescaling of the residual
+    theta = r / n
+    scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(X.T @ theta)), 1e-30))
+    theta = theta * scale
+    dual = 0.5 * jnp.sum(y ** 2) / n - 0.5 * n * jnp.sum((theta - y / n) ** 2)
+    return primal - dual, primal
+
+
+def lasso_gap(X, y, beta, lam):
+    """Duality gap + primal for the Lasso (used by Fig. 2/6 benchmarks)."""
+    gap, primal = _lasso_gap(X, y, beta, lam)
+    return float(gap), float(primal)
+
+
+@jax.jit
+def _enet_gap(X, y, beta, lam, rho):
+    n = y.shape[0]
+    r = y - X @ beta
+    primal = (jnp.sum(r ** 2) / (2 * n) + lam * rho * jnp.sum(jnp.abs(beta))
+              + 0.5 * lam * (1 - rho) * jnp.sum(beta ** 2))
+    theta = r / n
+    # dual feasibility for the l1 part only is required after absorbing the l2
+    # part into the datafit; standard rescaling wrt soft-threshold residual:
+    z = X.T @ theta - lam * (1 - rho) * beta
+    scale = jnp.minimum(1.0, lam * rho / jnp.maximum(jnp.max(jnp.abs(z)), 1e-30))
+    theta_s = theta * scale
+    dual = (0.5 * jnp.sum(y ** 2) / n - 0.5 * n * jnp.sum((theta_s - y / n) ** 2)
+            - 0.5 * lam * (1 - rho) * jnp.sum(beta ** 2) * scale ** 2)
+    return primal - dual, primal
+
+
+def enet_gap(X, y, beta, lam, rho):
+    gap, primal = _enet_gap(X, y, beta, lam, rho)
+    return float(gap), float(primal)
+
+
+@jax.jit
+def _logreg_gap(X, y, beta, lam):
+    n = y.shape[0]
+    Xb = X @ beta
+    primal = jnp.sum(jnp.logaddexp(0.0, -y * Xb)) / n + lam * jnp.sum(jnp.abs(beta))
+    raw = -y * jax.nn.sigmoid(-y * Xb) / n           # F'(Xb)
+    scale = jnp.minimum(1.0, lam / jnp.maximum(jnp.max(jnp.abs(X.T @ raw)), 1e-30))
+    theta = -raw * scale                              # dual point, theta_i y_i in [0, 1/n]
+    u = jnp.clip(n * y * theta, 1e-12, 1 - 1e-12)
+    dual = -jnp.sum(u * jnp.log(u) + (1 - u) * jnp.log(1 - u)) / n
+    return primal - dual, primal
+
+
+def logreg_gap(X, y, beta, lam):
+    gap, primal = _logreg_gap(X, y, beta, lam)
+    return float(gap), float(primal)
+
+
+# ---------------------------------------------------------------- estimators
+def lasso(X, y, lam, **kw):
+    return solve(X, y, Quadratic(), L1(lam), **kw)
+
+
+def elastic_net(X, y, lam, rho=0.5, **kw):
+    return solve(X, y, Quadratic(), L1L2(lam, rho), **kw)
+
+
+def mcp_regression(X, y, lam, gamma=3.0, **kw):
+    return solve(X, y, Quadratic(), MCP(lam, gamma), **kw)
+
+
+def scad_regression(X, y, lam, gamma=3.7, **kw):
+    return solve(X, y, Quadratic(), SCAD(lam, gamma), **kw)
+
+
+def l05_regression(X, y, lam, **kw):
+    return solve(X, y, Quadratic(), L05(lam), **kw)
+
+
+def sparse_logreg(X, y, lam, **kw):
+    return solve(X, y, Logistic(), L1(lam), **kw)
+
+
+def svc_dual(X, y, C=1.0, **kw):
+    """Dual SVM (paper Eq. 34). Returns alpha and the primal w (Eq. 35)."""
+    Z = y[:, None] * X
+    res = solve(Z.T, y, QuadraticSVC(), Box(C), **kw)
+    w = Z.T @ res.beta
+    return res, w
+
+
+def multitask_lasso(X, Y, lam, **kw):
+    return solve(X, Y, MultitaskQuadratic(), BlockL1(lam), **kw)
+
+
+def multitask_mcp(X, Y, lam, gamma=3.0, **kw):
+    return solve(X, Y, MultitaskQuadratic(), BlockMCP(lam, gamma), **kw)

@@ -1,0 +1,70 @@
+"""Coordinate-descent epochs (paper Algorithm 3), pure-JAX reference path.
+
+Two variants:
+  * cd_epoch_xb:   general datafits. Maintains Xb = X_ws @ beta_ws; each
+                   coordinate update costs O(n) (dot + axpy), as in the paper.
+  * cd_epoch_gram: quadratic datafits. Maintains q = G @ beta_ws on the
+                   working-set Gram G = X_ws^T X_ws; each update costs O(K).
+                   This is the TPU-native reformulation (VMEM-resident state;
+                   see kernels/cd_epoch.py for the Pallas version).
+
+Both support scalar coordinates (beta_ws: [K]) and multitask blocks
+(beta_ws: [K, T]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _axpy(carrier, vec, delta):
+    """carrier += vec (x) delta, handling scalar and block coordinates."""
+    if delta.ndim == 0:
+        return carrier + vec * delta
+    return carrier + vec[:, None] * delta[None, :]
+
+
+def _prox_coord(penalty, x, step, j):
+    """Coordinate prox: penalties with per-coordinate hyper-parameters
+    (weighted L1 in reweighting schemes) expose prox_at(x, step, j)."""
+    if hasattr(penalty, "prox_at"):
+        return penalty.prox_at(x, step, j)
+    return penalty.prox(x, step)
+
+
+def cd_epoch_xb(Xt_ws, y, beta_ws, Xb, L_ws, offset_ws, datafit, penalty):
+    """One cyclic CD epoch over the working set; X stored transposed [K, n]."""
+    K = Xt_ws.shape[0]
+
+    def body(i, state):
+        beta, Xb = state
+        xj = Xt_ws[i]
+        raw = datafit.raw_grad(Xb, y)
+        gj = xj @ raw + offset_ws[i]
+        Lj = L_ws[i]
+        step = 1.0 / jnp.maximum(Lj, 1e-30)
+        new = _prox_coord(penalty, beta[i] - gj * step, step, i)
+        new = jnp.where(Lj > 0.0, new, beta[i])
+        Xb = _axpy(Xb, xj, new - beta[i])
+        beta = beta.at[i].set(new)
+        return beta, Xb
+
+    return jax.lax.fori_loop(0, K, body, (beta_ws, Xb))
+
+
+def cd_epoch_gram(G, c, beta_ws, q, L_ws, penalty):
+    """One cyclic CD epoch on the Gram subproblem: grad = q - c, q = G beta."""
+    K = G.shape[0]
+
+    def body(i, state):
+        beta, q = state
+        gj = q[i] - c[i]
+        Lj = L_ws[i]
+        step = 1.0 / jnp.maximum(Lj, 1e-30)
+        new = _prox_coord(penalty, beta[i] - gj * step, step, i)
+        new = jnp.where(Lj > 0.0, new, beta[i])
+        q = _axpy(q, G[:, i], new - beta[i])
+        beta = beta.at[i].set(new)
+        return beta, q
+
+    return jax.lax.fori_loop(0, K, body, (beta_ws, q))

@@ -1,0 +1,147 @@
+"""scikit-learn-style estimator facade over the solver (the paper's public API).
+
+Mirrors skglm's `GeneralizedLinearEstimator(datafit, penalty)` composition:
+any datafit from `repro.core.datafits` pairs with any penalty from
+`repro.core.penalties`. Estimators hold hyper-parameters, `fit(X, y)` runs
+Algorithm 1, and the fitted state lives in sklearn-style trailing-underscore
+attributes (`coef_`, `n_iter_`, ...). No sklearn dependency — duck-typed API.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
+from .penalties import MCP, SCAD, L05, L1, L1L2, BlockL1, BlockMCP, Box
+from .solver import solve
+
+__all__ = ["GeneralizedLinearEstimator", "Lasso", "ElasticNet",
+           "MCPRegression", "SCADRegression", "SparseLogisticRegression",
+           "LinearSVC", "MultiTaskLasso", "MultiTaskMCP"]
+
+
+class GeneralizedLinearEstimator:
+    """Composable estimator: any datafit x any separable penalty."""
+
+    def __init__(self, datafit=None, penalty=None, *, tol=1e-6, max_outer=50,
+                 max_epochs=1000, M=5, p0=64, fit_intercept=False):
+        self.datafit = Quadratic() if datafit is None else datafit
+        self.penalty = L1(1.0) if penalty is None else penalty
+        self.tol = tol
+        self.max_outer = max_outer
+        self.max_epochs = max_epochs
+        self.M = M
+        self.p0 = p0
+        if fit_intercept:
+            raise NotImplementedError(
+                "center X/y beforehand; intercept handling is out of scope")
+
+    def fit(self, X, y):
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        res = solve(X, y, self.datafit, self.penalty, tol=self.tol,
+                    max_outer=self.max_outer, max_epochs=self.max_epochs,
+                    M=self.M, p0=self.p0)
+        self.coef_ = np.asarray(res.beta)
+        self.kkt_ = res.kkt
+        self.converged_ = res.converged
+        self.n_iter_ = res.n_outer
+        self.n_epochs_ = res.n_epochs
+        self.result_ = res
+        return self
+
+    def predict(self, X):
+        return np.asarray(X) @ self.coef_
+
+    def score(self, X, y):
+        """R^2 for regressors (classifiers override)."""
+        y = np.asarray(y)
+        resid = y - self.predict(X)
+        ss_res = float(np.sum(resid ** 2))
+        ss_tot = float(np.sum((y - y.mean(axis=0)) ** 2))
+        return 1.0 - ss_res / max(ss_tot, 1e-30)
+
+
+class Lasso(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, **kw):
+        super().__init__(Quadratic(), L1(alpha), **kw)
+        self.alpha = alpha
+
+
+class ElasticNet(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, l1_ratio=0.5, **kw):
+        super().__init__(Quadratic(), L1L2(alpha, l1_ratio), **kw)
+        self.alpha, self.l1_ratio = alpha, l1_ratio
+
+
+class MCPRegression(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, gamma=3.0, **kw):
+        super().__init__(Quadratic(), MCP(alpha, gamma), **kw)
+        self.alpha, self.gamma = alpha, gamma
+
+
+class SCADRegression(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, gamma=3.7, **kw):
+        super().__init__(Quadratic(), SCAD(alpha, gamma), **kw)
+        self.alpha, self.gamma = alpha, gamma
+
+
+class SparseLogisticRegression(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, **kw):
+        super().__init__(Logistic(), L1(alpha), **kw)
+        self.alpha = alpha
+
+    def predict(self, X):
+        return np.sign(np.asarray(X) @ self.coef_ + 1e-30)
+
+    def predict_proba(self, X):
+        z = np.asarray(X) @ self.coef_
+        p1 = 1.0 / (1.0 + np.exp(-z))
+        return np.stack([1 - p1, p1], axis=-1)
+
+    def score(self, X, y):
+        return float(np.mean(self.predict(X) == np.asarray(y)))
+
+
+class LinearSVC(GeneralizedLinearEstimator):
+    """Dual SVM with hinge loss (paper Eq. 33-35)."""
+
+    def __init__(self, C=1.0, **kw):
+        super().__init__(QuadraticSVC(), Box(C), **kw)
+        self.C = C
+
+    def fit(self, X, y):
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        Z = y[:, None] * X                       # [n, d]
+        res = solve(Z.T, y, self.datafit, self.penalty, tol=self.tol,
+                    max_outer=self.max_outer, max_epochs=self.max_epochs,
+                    M=self.M, p0=self.p0)
+        self.dual_coef_ = np.asarray(res.beta)   # alpha
+        self.coef_ = np.asarray(Z.T @ res.beta)  # primal w (Eq. 35)
+        self.kkt_ = res.kkt
+        self.converged_ = res.converged
+        self.n_iter_ = res.n_outer
+        self.result_ = res
+        return self
+
+    def predict(self, X):
+        return np.sign(np.asarray(X) @ self.coef_ + 1e-30)
+
+    def score(self, X, y):
+        return float(np.mean(self.predict(X) == np.asarray(y)))
+
+
+class MultiTaskLasso(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, **kw):
+        super().__init__(MultitaskQuadratic(), BlockL1(alpha), **kw)
+        self.alpha = alpha
+
+
+class MultiTaskMCP(GeneralizedLinearEstimator):
+    def __init__(self, alpha=1.0, gamma=3.0, **kw):
+        super().__init__(MultitaskQuadratic(), BlockMCP(alpha, gamma), **kw)
+        self.alpha, self.gamma = alpha, gamma

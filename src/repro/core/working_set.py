@@ -1,0 +1,56 @@
+"""Working-set machinery (paper Algorithm 1).
+
+Features are ranked by violation of the first-order optimality condition
+score_j = dist(-grad_j f(beta), d g_j(beta_j)) (Eq. 2), or by the fixed-point
+violation score^cd (Appendix C, Eq. 24) when the penalty's subdifferential is
+uninformative (l_q with 0<q<1). The working set grows as
+ws_size = max(ws_size, 2 |gsupp(beta)|), taking the ws_size highest scores while
+always retaining the current generalized support (scored +inf).
+
+JAX adaptation: working sets are static-size (rounded up to powers of two) so
+the jitted inner solver is compiled once per size, not per iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fixed_point_score(penalty, beta, grad, L):
+    """score^cd_j = |beta_j - prox_{g_j/L_j}(beta_j - grad_j / L_j)| (Eq. 24)."""
+    step = 1.0 / jnp.maximum(L, 1e-30)
+    if beta.ndim == 2:
+        step_b = step[:, None]
+    else:
+        step_b = step
+    prox = penalty.prox(beta - grad * step_b, step_b)
+    diff = beta - prox
+    if beta.ndim == 2:
+        return jnp.sqrt(jnp.sum(diff ** 2, axis=-1))
+    return jnp.abs(diff)
+
+
+def violation_scores(penalty, beta, grad, L, use_fixed_point=None):
+    """Per-feature priority scores; picks score^d or score^cd automatically."""
+    if use_fixed_point is None:
+        use_fixed_point = not penalty.HAS_SUBDIFF
+    if use_fixed_point:
+        return fixed_point_score(penalty, beta, grad, L)
+    return penalty.subdiff_dist(grad, beta)
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1)).bit_length()
+
+
+def grow_ws_size(prev_size: int, gsupp_count: int, p: int, p0: int = 64) -> int:
+    """ws_size = max(prev, 2|gsupp|), pow2-padded, clamped to p (static shapes)."""
+    target = max(p0, prev_size, 2 * gsupp_count)
+    return min(p, next_pow2(target))
+
+
+def select_working_set(scores, gsupp_mask, ws_size: int):
+    """Top-`ws_size` features by score, generalized support always included."""
+    pri = jnp.where(gsupp_mask, jnp.inf, scores)
+    _, ws = jax.lax.top_k(pri, ws_size)
+    return ws

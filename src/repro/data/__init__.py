@@ -1,0 +1,1 @@
+from .synth import make_correlated_design, make_classification, make_multitask

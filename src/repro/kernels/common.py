@@ -1,0 +1,49 @@
+"""Shared helpers for the Pallas kernels.
+
+Penalties are reconstructed *inside* kernels from an SMEM/VMEM parameter
+vector, so the same closed-form prox/subdifferential code from
+``repro.core.penalties`` runs on the TPU without re-tracing per lambda
+(regularization paths reuse one compiled kernel).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import penalties as _pen
+
+# static penalty registry: class -> number of scalar hyper-parameters
+PENALTY_ARITY = {
+    _pen.L1: 1,
+    _pen.L1L2: 2,
+    _pen.MCP: 2,
+    _pen.SCAD: 2,
+    _pen.Box: 1,
+    _pen.L05: 1,
+    _pen.L23: 1,
+}
+
+
+def penalty_params(penalty) -> jnp.ndarray:
+    """Pack a penalty's hyper-parameters into a (2,) float32 vector."""
+    import dataclasses
+    vals = [float(getattr(penalty, f.name)) for f in dataclasses.fields(penalty)]
+    vals = (vals + [0.0, 0.0])[:2]
+    return jnp.asarray(vals)  # default float dtype (f64 under x64)
+
+
+def make_penalty(cls, params_ref, dtype):
+    """Rebuild a penalty object from a parameter ref inside a kernel."""
+    arity = PENALTY_ARITY[cls]
+    args = [params_ref[i].astype(dtype) for i in range(arity)]
+    return cls(*args)
+
+
+def pid(axis: int):
+    """program_id cast to the default integer type (int64 under x64-interpret,
+    int32 on real TPUs) so dynamic indices mix cleanly with literals."""
+    import jax
+    from jax.experimental import pallas as pl
+    i = pl.program_id(axis)
+    if jax.config.jax_enable_x64:
+        return i.astype(jnp.int64)
+    return i

@@ -1,0 +1,49 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with interpret=True (the kernel body
+runs in Python/XLA-CPU); on a real TPU set interpret=False (the default picks
+automatically from the backend).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .cd_epoch import cd_epoch_gram_pallas, cd_epoch_xb_pallas
+from .common import penalty_params
+from .ws_score import ws_score_pallas
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("penalty_cls", "epochs", "interpret"))
+def cd_epoch_gram(G, c, beta0, q0, L, penalty_cls, params, *, epochs=1,
+                  interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return cd_epoch_gram_pallas(G, c, beta0, q0, L, penalty_cls, params,
+                                epochs=epochs, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("penalty_cls", "datafit_kind", "epochs",
+                                   "interpret"))
+def cd_epoch_xb(Xt_ws, y, beta0, Xb0, L, offset, penalty_cls, params,
+                datafit_kind="quadratic", *, epochs=1, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return cd_epoch_xb_pallas(Xt_ws, y, beta0, Xb0, L, offset, penalty_cls,
+                              params, datafit_kind, epochs=epochs,
+                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("penalty_cls", "use_fp", "bp", "bn",
+                                   "interpret"))
+def ws_score(X, r, beta, L, offset, penalty_cls, params, *, use_fp=False,
+             bp=256, bn=2048, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return ws_score_pallas(X, r, beta, L, offset, penalty_cls, params,
+                           use_fp=use_fp, bp=bp, bn=bn, interpret=interpret)
+
+
+__all__ = ["cd_epoch_gram", "cd_epoch_xb", "ws_score", "penalty_params"]

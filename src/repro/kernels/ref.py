@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cd import cd_epoch_gram, cd_epoch_xb
+from repro.core.working_set import violation_scores
+
+
+def cd_epoch_gram_ref(G, c, beta0, q0, L, penalty, epochs=1):
+    beta, q = beta0, q0
+    for _ in range(epochs):
+        beta, q = cd_epoch_gram(G, c, beta, q, L, penalty)
+    return beta, q
+
+
+def cd_epoch_xb_ref(Xt_ws, y, beta0, Xb0, L, offset, datafit, penalty, epochs=1):
+    beta, Xb = beta0, Xb0
+    for _ in range(epochs):
+        beta, Xb = cd_epoch_xb(Xt_ws, y, beta, Xb, L, offset, datafit, penalty)
+    return beta, Xb
+
+
+def ws_score_ref(X, r, beta, L, offset, penalty, use_fp=False):
+    grad = X.T @ r + offset
+    return violation_scores(penalty, beta, grad, L, use_fixed_point=use_fp)

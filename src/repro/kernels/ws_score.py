@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the fused working-set scoring pass.
+
+Computes, for every feature j, score_j = dist(-grad_j f, d g_j(beta_j)) (or the
+fixed-point score of Appendix C) where grad = X^T r + offset, WITHOUT
+materializing the p-vector gradient in HBM: each (n x BP) tile of X is
+multiplied on the MXU against the VMEM-resident residual, and the
+subdifferential-distance arithmetic runs on the tile's output while it is
+still in VMEM. This is the O(np) hot spot of Algorithm 1's outer loop.
+
+Grid = (p_tiles, n_tiles); the gradient accumulates in a VMEM scratch over the
+inner n_tiles loop and the score is emitted on the last n-step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import make_penalty, pid
+
+
+def _score_kernel(penalty_cls, n_tiles, use_fp, X_blk, r_blk, beta_blk, L_blk,
+                  off_blk, params, out_blk, g_acc):
+    nt = pid(1)
+
+    @pl.when(nt == 0)
+    def _init():
+        g_acc[:, :] = jnp.zeros_like(g_acc)
+
+    # (BP, n_blk) @ (n_blk, 1) on the MXU
+    g_acc[:, :] += jnp.dot(X_blk[:, :].T, r_blk[:, :],
+                           preferred_element_type=g_acc.dtype)
+
+    @pl.when(nt == n_tiles - 1)
+    def _emit():
+        pen = make_penalty(penalty_cls, params[0], out_blk.dtype)
+        grad = g_acc[:, :] + off_blk[:, :]
+        beta = beta_blk[:, :]
+        L = L_blk[:, :]
+        if use_fp:
+            step = 1.0 / jnp.maximum(L, 1e-30)
+            sc = jnp.abs(beta - pen.prox(beta - grad * step, step))
+        else:
+            sc = pen.subdiff_dist(grad, beta)
+        out_blk[:, :] = sc
+
+
+def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *,
+                    use_fp=False, bp=256, bn=2048, interpret=True):
+    """Fused scores for all p features. X: [n, p]; r: [n]. Returns [p]."""
+    n, p = X.shape
+    bp = min(bp, p)
+    bn = min(bn, n)
+    assert p % bp == 0 and n % bn == 0, (n, p, bn, bp)
+    n_tiles = n // bn
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        functools.partial(_score_kernel, penalty_cls, n_tiles, use_fp),
+        grid=(p // bp, n_tiles),
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda j, i: (i, j)),   # X tile
+            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),    # residual r
+            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # beta
+            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # L
+            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # grad offset
+            pl.BlockSpec((1, 2), lambda j, i: (0, 0)),     # penalty params
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), X.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, 1), X.dtype)],
+        interpret=interpret,
+    )(X, r[:, None], beta[:, None], L[:, None], offset[:, None],
+      params[None, :].astype(X.dtype))
+    return out[:, 0]

@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules (MaxText-style) for the (pod, data, model) mesh.
+
+Model code annotates tensors with *logical* axis names; a rules table maps each
+name to zero or more mesh axes. Per-arch / per-shape overrides live in the
+ArchConfig (`act_rules` / `param_rules`) and in shape-specific presets below,
+which is the main lever for the §Perf sharding hillclimbs.
+
+Divisibility: pjit rejects shardings that do not evenly divide a dimension, so
+resolution is *size-aware* — axes that do not divide the dim are dropped (from
+the left for multi-axis rules), falling back to replication. This is how e.g.
+kv_heads=8 survives a 16-way model axis (the cache is then sharded over
+cache_seq instead — context parallelism; DESIGN.md §3).
+
+Outside of a `sharding_ctx` (e.g. CPU smoke tests on one device) `shard()` is a
+no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# activations
+DEFAULT_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "qseq": None,              # q/score seq dim inside attention (SP option)
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,          # k/v replicated over model by default (GQA kv
+                               # rarely divides 16); caches shard cache_seq
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "expert": None,
+    "moe_group": ("pod", "data"),   # MoE token-group axis (data-aligned)
+    "inner": "model",          # mamba/mlstm inner channels
+    "state": None,             # SSM state dims
+    "state_heads": "model",
+    "mhead": None,
+    "mlstm_dv": "model",
+    "chunks": None,            # ssm/mlstm chunk axis (xlstm overrides to model)
+    "cache_seq": None,         # decode shapes override to "model"
+    "conv": None,
+    "cross": None,
+    "codebook": None,
+    "layers": None,
+}
+
+# parameters: "embed" is the FSDP axis (ZeRO-3 over data), tensor dims over model
+DEFAULT_PARAM_RULES = {
+    "embed": ("pod", "data"),
+    "embed_r": None,           # second d_model dim of square (D, D) params
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "layers": None,
+    "norm": None,
+    "expert": None,
+    "inner": "model",
+    "state": None,
+    "state_heads": None,
+    "conv": None,
+    "cross": None,
+    "codebook": None,
+    "mhead": None,
+    "mlstm_dv": None,
+}
+
+
+def _axis_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_axes(name, rules, mesh, dim_size=None, used=None):
+    """Map one logical axis name to mesh axes, dropping non-dividing axes
+    and axes already claimed by an earlier dimension of the same tensor
+    (a PartitionSpec may use each mesh axis at most once)."""
+    axes = rules.get(name, None)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names
+                 and (used is None or a not in used))
+    if dim_size is not None:
+        while axes and dim_size % _axis_size(mesh, axes) != 0:
+            axes = axes[1:]
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def make_spec(logical_axes, rules, mesh, shape=None) -> P:
+    dims = shape if shape is not None else (None,) * len(logical_axes)
+    used = set()
+    out = []
+    for n, d in zip(logical_axes, dims):
+        r = resolve_axes(n, rules, mesh, d, used)
+        out.append(r)
+        if r is not None:
+            used.update((r,) if isinstance(r, str) else r)
+    return P(*out)
+
+
+_CTX = threading.local()
+
+
+@contextmanager
+def sharding_ctx(mesh, act_rules=None, param_rules=None):
+    act = dict(DEFAULT_ACT_RULES)
+    act.update(act_rules or {})
+    par = dict(DEFAULT_PARAM_RULES)
+    par.update(param_rules or {})
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, act, par)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def current_ctx():
+    return getattr(_CTX, "state", None)
+
+
+def shard(x, *logical_axes):
+    """Constrain an activation's sharding; no-op outside a sharding_ctx."""
+    st = current_ctx()
+    if st is None:
+        return x
+    mesh, act, _ = st
+    spec = make_spec(logical_axes, act, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(logical_axes, mesh=None, rules=None, shape=None):
+    st = current_ctx()
+    if mesh is None:
+        if st is None:
+            return None
+        mesh, _, par = st
+        rules = rules if rules is not None else par
+    rules = rules if rules is not None else DEFAULT_PARAM_RULES
+    return NamedSharding(mesh, make_spec(logical_axes, rules, mesh, shape))
+
+
+# shape-specific activation overrides (see DESIGN.md §3):
+#  - decode: shard the KV cache over the model axis (context parallelism);
+#    XLA inserts the softmax-combine all-reduces automatically.
+DECODE_ACT_RULES = {
+    "cache_seq": "model",
+}
+#  - long-context decode with batch=1: additionally spread the context over
+#    the data (and pod) axes.
+LONG_CONTEXT_ACT_RULES = {
+    "batch": None,
+    "cache_seq": ("pod", "data", "model"),
+}

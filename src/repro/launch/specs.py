@@ -1,0 +1,145 @@
+"""Build (step_fn, abstract_args, in/out shardings) for any (arch x shape x
+mesh) cell — the single entry point used by the dry-run, the roofline
+analyzer, and the real training/serving drivers.
+
+input_specs() follows the assignment contract: ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation).
+Modality frontends are stubs: musicgen gets codebook token ids + precomputed
+conditioning embeddings, internvl gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import SHAPES, ShapeCfg
+from repro.models.params import abstract_params, param_shardings
+from repro.models.transformer import build_param_defs, cache_defs
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+from .shardings import (DECODE_ACT_RULES, DEFAULT_ACT_RULES,
+                        DEFAULT_PARAM_RULES, LONG_CONTEXT_ACT_RULES,
+                        make_spec)
+
+
+@dataclass
+class CellSpec:
+    step: Any
+    args: tuple                 # abstract args
+    in_shardings: tuple
+    out_shardings: Any          # or None to let XLA choose
+    donate_argnums: tuple
+    act_rules: dict
+    param_rules: dict
+    meta: dict
+
+
+def merge_rules(cfg, shape: ShapeCfg, act_overrides=None, param_overrides=None):
+    act = dict(DEFAULT_ACT_RULES)
+    if shape.kind == "decode":
+        act.update(DECODE_ACT_RULES)
+    if shape.name == "long_500k":
+        act.update(LONG_CONTEXT_ACT_RULES)
+    act.update(cfg.act_rules)
+    act.update(act_overrides or {})
+    par = dict(DEFAULT_PARAM_RULES)
+    par.update(cfg.param_rules)
+    par.update(param_overrides or {})
+    return act, par
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _batch_inputs(cfg, shape: ShapeCfg, mesh, act, *, micro=True):
+    """Abstract train/prefill batch + shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = make_spec(("batch",), act, mesh)        # P(axes or None)
+    batch_axes = bspec[0]
+    lead = ()
+    if micro:
+        lead = (shape.n_micro,)
+        B = B // shape.n_micro
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+    def sh(*dims):
+        return _ns(mesh, P(*(((None,) * len(lead)) + dims)))
+    tok_shape = lead + ((B, cfg.n_codebooks, S) if cfg.n_codebooks else (B, S))
+    tok_dims = (batch_axes, None, None) if cfg.n_codebooks else (batch_axes, None)
+    batch = {"tokens": sds(tok_shape, jnp.int32),
+             "labels": sds(tok_shape, jnp.int32)}
+    shards = {"tokens": sh(*tok_dims), "labels": sh(*tok_dims)}
+    if cfg.vision_tokens:
+        batch["vision"] = sds(lead + (B, cfg.vision_tokens, cfg.d_model),
+                              jnp.dtype(cfg.act_dtype))
+        shards["vision"] = sh(batch_axes, None, None)
+    if cfg.cross_d:
+        batch["cond"] = sds(lead + (B, cfg.cross_len, cfg.d_model),
+                            jnp.dtype(cfg.act_dtype))
+        shards["cond"] = sh(batch_axes, None, None)
+    return batch, shards
+
+
+def build_cell(cfg, shape, mesh, *, remat="full", chunk=512, unroll=False,
+               lr=3e-4, grad_compress="none", act_overrides=None,
+               param_overrides=None) -> CellSpec:
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    act, par = merge_rules(cfg, shape, act_overrides, param_overrides)
+    defs = build_param_defs(cfg)
+    params_abs = abstract_params(defs, cfg.param_dtype)
+    params_sh = param_shardings(defs, mesh, par)
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "mesh": tuple(mesh.devices.shape), "axes": mesh.axis_names}
+
+    if shape.kind == "train":
+        batch, batch_sh = _batch_inputs(cfg, shape, mesh, act, micro=True)
+        opt_abs = {"m": params_abs, "v": params_abs,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_sh = {"m": params_sh, "v": params_sh, "step": _ns(mesh, P())}
+        step = make_train_step(cfg, n_micro=shape.n_micro, remat=remat,
+                               chunk=chunk, lr=lr, grad_compress=grad_compress,
+                               unroll=unroll, mesh=mesh, act_rules=act,
+                               param_rules=par)
+        metrics_sh = {"loss": _ns(mesh, P()), "grad_norm": _ns(mesh, P()),
+                      "weight_sparsity": _ns(mesh, P())}
+        return CellSpec(step, (params_abs, opt_abs, batch),
+                        (params_sh, opt_sh, batch_sh),
+                        (params_sh, opt_sh, metrics_sh),
+                        donate_argnums=(0, 1), act_rules=act, param_rules=par,
+                        meta=meta)
+
+    if shape.kind == "prefill":
+        batch, batch_sh = _batch_inputs(cfg, shape, mesh, act, micro=False)
+        step = make_prefill_step(cfg, chunk=chunk, unroll=unroll, mesh=mesh,
+                                 act_rules=act, param_rules=par)
+        return CellSpec(step, (params_abs, batch), (params_sh, batch_sh),
+                        None, donate_argnums=(), act_rules=act,
+                        param_rules=par, meta=meta)
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cdefs = cache_defs(cfg, B, S)
+    caches_abs = abstract_params(cdefs, cfg.act_dtype)
+    caches_sh = param_shardings(cdefs, mesh, act)
+    bspec = make_spec(("batch",), act, mesh)[0]
+    tok_shape = (B, cfg.n_codebooks, 1) if cfg.n_codebooks else (B, 1)
+    tok_sh = _ns(mesh, P(bspec, None, None) if cfg.n_codebooks
+                 else P(bspec, None))
+    tok_abs = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    args = [params_abs, caches_abs, tok_abs]
+    in_sh = [params_sh, caches_sh, tok_sh]
+    with_cond = bool(cfg.cross_d)
+    step = make_decode_step(cfg, S, unroll=unroll, mesh=mesh, act_rules=act,
+                            param_rules=par, with_cond=with_cond)
+    if with_cond:
+        args.append(jax.ShapeDtypeStruct((B, cfg.cross_len, cfg.d_model),
+                                         jnp.dtype(cfg.act_dtype)))
+        in_sh.append(_ns(mesh, P(bspec, None, None)))
+    return CellSpec(step, tuple(args), tuple(in_sh), None,
+                    donate_argnums=(1,), act_rules=act, param_rules=par,
+                    meta=meta)

@@ -1,0 +1,130 @@
+"""Architecture configuration schema for the model zoo.
+
+A model is a token embedding (+ optional modality stub inputs), a stack of
+`n_repeat` copies of a `pattern` of layers (scanned with stacked weights), and
+an LM head. Each `Layer` names its sequence mixer and its MLP; heterogeneous
+stacks (gemma2 local/global alternation, zamba2 mamba+shared-attention,
+xlstm mLSTM/sLSTM) are expressed by multi-layer patterns so that
+scan-over-pattern preserves the exact layer ordering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# mixers: "attn" (full causal), "swa" (sliding-window causal), "mamba",
+#         "mlstm", "slstm", "shared_attn" (zamba2: shared weights + concat of
+#         the initial embedding), "none"
+# mlps:   "swiglu", "geglu", "sqrelu", "moe", "none"
+
+
+@dataclass(frozen=True)
+class Layer:
+    mixer: str
+    mlp: str
+    cross_attn: bool = False        # musicgen: cross-attention sublayer
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden
+    shared_d_ff: int = 0            # always-on shared expert (llama4)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    group_size: int = 512           # tokens per routing group (GShard-style)
+
+
+@dataclass(frozen=True)
+class SSMCfg:                       # mamba2 (SSD)
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class XLSTMCfg:
+    expand: int = 2                 # mLSTM inner dim = expand * d_model
+    chunk: int = 256
+    # per-head key/value dims derived from d_model, n_heads, expand
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense|moe|audio|vlm|ssm|hybrid
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[Layer, ...]
+    n_repeat: int
+    # attention features
+    rope_theta: float = 10000.0
+    sliding_window: int = 4096
+    attn_softcap: float = 0.0
+    logit_softcap: float = 0.0
+    qk_norm: bool = False
+    # subconfigs
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    xlstm: Optional[XLSTMCfg] = None
+    # modality stubs
+    n_codebooks: int = 0            # musicgen: EnCodec codebooks
+    cross_d: int = 0                # musicgen: conditioning dim (stub T5)
+    cross_len: int = 256            # musicgen: conditioning length
+    vision_tokens: int = 0          # internvl: precomputed patch embeddings
+    # misc
+    tie_embeddings: bool = False
+    post_norm: bool = False         # gemma2-style post-sublayer norms
+    norm_eps: float = 1e-6
+    embed_scale: bool = False       # gemma-style sqrt(d) embedding multiplier
+    act_dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    # sharding rule overrides: logical-axis name -> mesh axes (see launch/shardings)
+    act_rules: dict = field(default_factory=dict, hash=False, compare=False)
+    param_rules: dict = field(default_factory=dict, hash=False, compare=False)
+    # paper integration: proximal sparsity applied by the optimizer
+    prox_penalty: str = "mcp"       # mcp|scad|l1|none
+    prox_lam: float = 0.0           # 0 disables
+    prox_gamma: float = 3.0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.n_repeat
+
+    def scaled(self, **kw) -> "ArchConfig":
+        """Reduced copy for CPU smoke tests."""
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str                       # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                       # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    n_micro: int = 1                # gradient-accumulation microbatches (train)
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256, n_micro=4),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+# long_500k applies only to sub-quadratic archs (DESIGN.md §4)
+LONG_CONTEXT_ARCHS = ("xlstm-350m", "zamba2-2.7b")
+
+
+def cells_for(arch_name: str):
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        names.append("long_500k")
+    return [SHAPES[s] for s in names]

@@ -1,0 +1,321 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (chunked
+flash-style for train/prefill, cache-based for decode), MLPs, and MoE.
+
+Attention is computed flat over H query heads with KV heads repeated at use
+(GQA keeps cache memory at KV, compute at H). Sharding is rule-driven:
+"heads" -> model-axis TP where H divides the axis; otherwise archs opt into
+sequence-parallel attention via the "qseq" rule (q/scores/output sharded over
+sequence, small k/v replicated). Decode caches shard over "cache_seq"
+(context parallelism) — the softmax-combine reductions are inserted by XLA.
+
+All score math runs in float32. Causal masks come from runtime iota (never
+constant-folded into materialized S x S masks). The KV-chunked
+streaming-softmax scan keeps prefill memory sub-quadratic; `unroll=True`
+(analysis mode) unrolls it so cost_analysis counts every chunk (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shardings import shard
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def _rope_angles(positions, head_dim, theta):
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta):
+    """x: [B, S, H, Dh]; positions: [S] or [B, S]."""
+    B, S, H, Dh = x.shape
+    cos, sin = _rope_angles(positions, Dh, theta)      # [S, Dh/2]
+    while cos.ndim < 3:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _qkv(p, cfg, x, qk_norm):
+    """Project to q [B,S,H,Dh], k/v [B,S,KV,Dh]."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = shard(q, "batch", "qseq", "heads", "head_dim")
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, scale, causal=True, window=0, chunk=512,
+                    q_offset=0, cap=0.0, unroll=False):
+    """Streaming-softmax attention over KV chunks.
+
+    q: [B,Sq,H,Dh]; k,v: [B,Sk,KV,Dh]. Returns [B,Sq,H,Dh].
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    nc = Sk // chunk
+    qf = q.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, c_idx = inp
+        kr = _repeat_kv(k_c, G).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kr) * scale
+        s = softcap(s, cap)
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        vr = _repeat_kv(v_c, G).astype(jnp.float32)
+        acc = acc * corr[..., None] + jnp.einsum("bhqc,bchd->bhqd", p, vr)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    ks = k.reshape(B, nc, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (ks, vs, jnp.arange(nc)),
+                                  unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)     # [B,Sq,H,Dh]
+
+
+def attention_block(p, cfg, x, *, window=0, mode="train", cache=None,
+                    ctx_len=0, chunk=512, unroll=False, q_offset=0,
+                    cur_len=None):
+    """Self-attention sublayer (no residual). Returns (out, new_cache).
+
+    Decode: `ctx_len` is the static cache view size; `cur_len` (optional
+    traced scalar) is the true filled length, enabling one compiled step per
+    cache-capacity bucket instead of per context length (serve engine)."""
+    B, S, D = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    G = H // KV
+    scale = Dh ** -0.5
+    q, k, v = _qkv(p, cfg, x, cfg.qk_norm)
+
+    if mode == "decode":
+        # x is the single new token (S == 1); cache holds >= cur_len slots.
+        ctx = ctx_len                                   # static int
+        dyn = cur_len is not None
+        cur = cur_len if dyn else ctx
+        pos = jnp.reshape(jnp.asarray(cur), (1,))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        k_cache, v_cache = cache["k"], cache["v"]       # [B, cap, KV, Dh]
+        # attend over the FULL capacity with a validity (+ window) mask:
+        # slicing the seq-sharded cache — [:, :ctx] or a sliding-window
+        # dynamic slice — is a non-shard-aligned reshard (full-shard
+        # collective-permute per layer; §Perf hillclimb #1, iteration 2).
+        # Masked full-capacity scores are strictly cheaper than the reshard.
+        k_ctx = k_cache
+        v_ctx = v_cache
+        kpos = jnp.arange(k_cache.shape[1])
+        k_ctx = shard(k_ctx, "batch", "cache_seq", "kv_heads", "head_dim")
+        v_ctx = shard(v_ctx, "batch", "cache_seq", "kv_heads", "head_dim")
+        # GQA-grouped, concatenate-free streaming-softmax combine (§Perf
+        # hillclimb #1): contractions over the sharded cache axis partition
+        # into local partials + tiny all-reduces ([B,KV,G,1(,Dh)]); the old
+        # concat([s_ctx, s_self]) on the sharded axis forced SPMD to
+        # all-gather the f32 head-repeated KV cache (~2 GiB/layer/step).
+        qg = q.reshape(B, 1, KV, G, Dh)
+        s_ctx = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_ctx,
+                           preferred_element_type=jnp.float32) * scale
+        s_ctx = softcap(s_ctx, cfg.attn_softcap)
+        if kpos is not None:
+            valid = kpos < cur
+            if window:
+                valid &= (cur - kpos) < window
+            s_ctx = jnp.where(valid[None, None, None, None, :], s_ctx, NEG_INF)
+        m_ctx = jnp.max(s_ctx, axis=-1)                 # [B,KV,G,1]
+        p_ctx = jnp.exp(s_ctx - m_ctx[..., None])
+        l_ctx = jnp.sum(p_ctx, axis=-1)
+        o_ctx = jnp.einsum("bkgqc,bckd->bkgqd", p_ctx, v_ctx,
+                           preferred_element_type=jnp.float32)
+        s_self = jnp.einsum("bqkgd,bqkd->bkgq", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        s_self = softcap(s_self, cfg.attn_softcap)
+        m = jnp.maximum(m_ctx, s_self)
+        a_ctx = jnp.exp(m_ctx - m)
+        a_self = jnp.exp(s_self - m)
+        l = l_ctx * a_ctx + a_self
+        # v (new token) [B,1,KV,Dh] -> [B,KV,1,1,Dh], broadcast over (G, q)
+        v_self = v.astype(jnp.float32).transpose(0, 2, 1, 3)[:, :, None]
+        out = (o_ctx * a_ctx[..., None]
+               + a_self[..., None] * v_self) / l[..., None]
+        out = out.reshape(B, H, 1, Dh).transpose(0, 2, 1, 3).astype(x.dtype)
+        new_cache = dict(cache)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cur, 1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cur, 1)
+    else:
+        pos = q_offset + jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        out = flash_attention(q, k, v, scale=scale, causal=True, window=window,
+                              chunk=chunk, cap=cfg.attn_softcap, unroll=unroll)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+
+    out = out.reshape(B, S, H * Dh)
+    d_out = p["wo"].shape[-1]
+    out = jnp.einsum("bsh,hd->bsd", out,
+                     p["wo"].reshape(H * Dh, d_out).astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def cross_attention_block(p, cfg, x, cond, *, mode="train", cache=None):
+    """Cross-attention to a (stub) conditioning sequence (musicgen)."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if mode == "decode" and cache:
+        k, v = cache["ck"], cache["cv"]
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", cond.astype(x.dtype), p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", cond.astype(x.dtype), p["wv"].astype(x.dtype))
+    q = shard(q, "batch", "qseq", "heads", "head_dim")
+    s = jnp.einsum("bshk,bchk->bhsc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * Dh ** -0.5
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhsc,bchk->bshk", pr, v.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(B, S, H * Dh)
+    d_out = p["wo"].shape[-1]
+    out = jnp.einsum("bsh,hd->bsd", out,
+                     p["wo"].reshape(H * Dh, d_out).astype(x.dtype))
+    new_cache = {"ck": k, "cv": v} if mode != "train" else None
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def mlp_block(p, cfg, x, kind):
+    """Dense MLP: swiglu | geglu | sqrelu | gelu."""
+    wd = p["wd"].astype(x.dtype)
+    if kind in ("sqrelu", "gelu"):
+        h = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+        h = shard(h, "batch", "seq", "ffn")
+        h = jnp.square(jax.nn.relu(h)) if kind == "sqrelu" \
+            else jax.nn.gelu(h, approximate=True)
+    else:
+        act = jax.nn.silu if kind == "swiglu" else (lambda u: jax.nn.gelu(u, approximate=True))
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+        g = shard(g, "batch", "seq", "ffn")
+        u = shard(u, "batch", "seq", "ffn")
+        h = act(g) * u
+    out = jnp.einsum("bsf,fd->bsd", h, wd)
+    return shard(out, "batch", "seq", "embed")
+
+
+def _moe_groups(T, group_size):
+    """Largest group count with T % G == 0 and T // G <= group_size."""
+    G = max(1, T // group_size)
+    while T % G != 0:
+        G -= 1
+    return G
+
+
+def moe_block(p, cfg, x):
+    """Top-k routed MoE, GShard-style grouped one-hot dispatch.
+
+    Tokens are split into groups aligned with the data sharding; capacity is
+    enforced per (group, expert); dispatch/combine are einsums against a
+    one-hot [G, Sg, E, C] tensor. Under GSPMD this is the canonical
+    TPU-partitionable form: constraining the buffer to (expert->model,
+    moe_group->data) turns dispatch into an all-to-all instead of the
+    replicated compute + grad all-reduces a sort/scatter dispatch lowers to
+    (§Perf hillclimb #2; the sort-based variant measured 37 GiB link
+    bytes/layer vs ~2 GiB for this form).
+    """
+    mcfg = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = mcfg.n_experts, mcfg.top_k
+    G = _moe_groups(T, getattr(mcfg, "group_size", 512))
+    Sg = T // G
+    cap = max(4, int(-(-Sg * K * mcfg.capacity_factor // E)))
+    cap = min(cap, Sg)
+
+    xt = x.reshape(G, Sg, D)
+    xt = shard(xt, "moe_group", None, "embed")
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                     # [G, Sg, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # per-(group, expert) capacity assignment, k slots in priority order
+    counts = jnp.zeros((G, 1, E), jnp.int32)
+    combine = jnp.zeros((G, Sg, E, cap), jnp.float32)
+    for k in range(K):
+        oh = jax.nn.one_hot(idx[..., k], E, dtype=jnp.int32)  # [G, Sg, E]
+        pos = counts + jnp.cumsum(oh, axis=1) - oh            # rank in expert
+        keep = (pos < cap) & (oh > 0)
+        slot = jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap,
+                              dtype=jnp.float32)              # [G, Sg, E, C]
+        combine = combine + (gates[..., k, None, None]
+                             * keep[..., None] * slot)
+        counts = counts + jnp.sum(oh, axis=1, keepdims=True)
+
+    dispatch = (combine > 0).astype(x.dtype)                  # [G, Sg, E, C]
+    buf = jnp.einsum("gsec,gsd->egcd", dispatch, xt)          # [E, G, C, D]
+    buf = shard(buf, "expert", "moe_group", None, "embed")
+    h = jnp.einsum("egcd,edf->egcf", buf, p["w_up"].astype(x.dtype))
+    g = jnp.einsum("egcd,edf->egcf", buf, p["w_gate"].astype(x.dtype))
+    h = shard(jax.nn.silu(g) * h, "expert", "moe_group", None, "ffn")
+    y_buf = jnp.einsum("egcf,efd->egcd", h, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), y_buf)
+    y = shard(y, "moe_group", None, "embed")
+
+    if mcfg.shared_d_ff:
+        sh = {"wg": p["shared_wg"], "wu": p["shared_wu"], "wd": p["shared_wd"]}
+        y = y + mlp_block(sh, cfg, x, "swiglu").reshape(G, Sg, D)
+
+    # router z-loss + Switch-style load-balance loss
+    aux = mcfg.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = aux + 1e-2 * E * jnp.vdot(frac_tokens, frac_probs)
+    return shard(y.reshape(B, S, D), "batch", "seq", "embed"), aux

@@ -1,0 +1,88 @@
+"""Parameter declaration + materialization.
+
+Model code declares parameters as `ParamDef(shape, logical_axes, init)` trees;
+this module turns a tree into (a) abstract ShapeDtypeStructs for dry-run
+lowering, (b) NamedShardings from the logical rules, (c) real initialized
+arrays for training. Scanned (per-layer) parameters carry a leading "layers"
+axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shardings import make_spec
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: Optional[float] = None   # default: 1/sqrt(fan_in)
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, default_dtype="float32"):
+    def mk(d):
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or default_dtype))
+    return tree_map_defs(mk, defs)
+
+
+def param_shardings(defs, mesh, rules):
+    from jax.sharding import NamedSharding
+
+    def mk(d):
+        return NamedSharding(mesh, make_spec(d.axes, rules, mesh, d.shape))
+    return tree_map_defs(mk, defs)
+
+
+def param_specs(defs, mesh, rules):
+    def mk(d):
+        return make_spec(d.axes, rules, mesh, d.shape)
+    return tree_map_defs(mk, defs)
+
+
+def init_params(defs, key, default_dtype="float32"):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = jnp.dtype(d.dtype or default_dtype)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            # fan-in: product of all dims that are not the last
+            fan_in = 1
+            for s in d.shape[:-1]:
+                fan_in *= max(s, 1)
+            fan_in = max(fan_in, 1)
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append(scale * jax.random.normal(k, d.shape, dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    total = 0
+    for d in jax.tree_util.tree_leaves(defs, is_leaf=_is_def):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

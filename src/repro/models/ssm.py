@@ -1,0 +1,321 @@
+"""State-space / recurrent mixers: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation: sequence recurrences use chunked formulations — quadratic
+*within* a chunk (MXU-friendly batched matmuls) and a `jax.lax.associative_scan`
+*across* chunk states (log-depth, no while-loop, so `cost_analysis` counts all
+of it; DESIGN.md §5). The sLSTM has a true nonlinear hidden-to-hidden
+recurrence and must scan over time; its input projections are hoisted out of
+the scan so the sequential part is only the small per-step gate math.
+
+mLSTM training-mode stabilization uses a global (per-sequence, per-head) max
+of the input gate rather than the running-max recurrence of the xLSTM paper;
+decode mode keeps the exact running-max form. Recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shardings import shard
+from .params import ParamDef
+from .layers import rms_norm
+
+
+# ------------------------------------------------------------------ mamba2
+def mamba_defs(cfg):
+    ssm = cfg.ssm
+    D = cfg.d_model
+    inner = ssm.expand * D
+    H = inner // ssm.head_dim
+    conv_ch = inner + 2 * ssm.d_state
+    return {
+        "in_proj": ParamDef((D, 2 * inner + 2 * ssm.d_state + H), ("embed", "inner")),
+        "conv_w": ParamDef((ssm.d_conv, conv_ch), ("conv", "inner")),
+        "conv_b": ParamDef((conv_ch,), ("inner",), init="zeros"),
+        "A_log": ParamDef((H,), ("state",), init="zeros"),
+        "D_skip": ParamDef((H,), ("state",), init="ones"),
+        "dt_bias": ParamDef((H,), ("state",), init="zeros"),
+        "norm_w": ParamDef((inner,), ("norm",), init="zeros"),
+        "out_proj": ParamDef((inner, D), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _chunk_scan_combine(a_l, s_l, a_r, s_r):
+    return a_l * a_r, s_l * a_r[..., None, None] + s_r
+
+
+def _cross_chunk(a_chunk, s_chunk, init_state=None):
+    """Associative scan over chunk axis 1. a: [B,nc,H]; s: [B,nc,H,ds,hd].
+
+    Returns the state *entering* each chunk and the final state."""
+    a_run, s_run = jax.lax.associative_scan(
+        lambda l, r: _chunk_scan_combine(l[0], l[1], r[0], r[1]),
+        (a_chunk, s_chunk), axis=1)
+    prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1)
+    if init_state is not None:
+        # fold a caller-provided initial state into every chunk's entering state
+        decay_to_chunk = jnp.concatenate(
+            [jnp.ones_like(a_run[:, :1]), a_run[:, :-1]], axis=1)
+        prev = prev + decay_to_chunk[..., None, None] * init_state[:, None]
+        final = s_run[:, -1] + a_run[:, -1][..., None, None] * init_state
+    else:
+        final = s_run[:, -1]
+    return prev, final
+
+
+def mamba_forward(p, cfg, x, *, mode="train", cache=None, unroll=False):
+    """Mamba2/SSD mixer. x: [B,S,D]. Returns (y, new_cache)."""
+    ssm = cfg.ssm
+    B, S, D = x.shape
+    inner = ssm.expand * D
+    ds = ssm.d_state
+    hd = ssm.head_dim
+    H = inner // hd
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :inner]
+    xbc = zxbcdt[..., inner:2 * inner + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * inner + 2 * ds:]
+    z = shard(z, "batch", "seq", "inner")
+    xbc = shard(xbc, "batch", "seq", "inner")
+
+    if mode == "decode":
+        conv_state = cache["conv"]                       # [B, K-1, C]
+        xin_full = jnp.concatenate([conv_state, xbc], axis=1)
+        w = p["conv_w"].astype(x.dtype)
+        conv_out = jnp.einsum("bkc,kc->bc", xin_full, w)[:, None] + p["conv_b"].astype(x.dtype)
+        new_conv = xin_full[:, 1:]
+        xbc = jax.nn.silu(conv_out)
+    else:
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype)))
+        new_conv = xbc  # placeholder; prefill cache fixed below
+
+    x_in = xbc[..., :inner].reshape(B, S, H, hd)
+    Bm = xbc[..., inner:inner + ds].astype(jnp.float32)          # [B,S,ds]
+    Cm = xbc[..., inner + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+    la = dt * A                                                   # log-decay [B,S,H]
+    v = (x_in.astype(jnp.float32) * dt[..., None])               # [B,S,H,hd]
+
+    if mode == "decode":
+        state = cache["ssm"].astype(jnp.float32)                 # [B,H,ds,hd]
+        a = jnp.exp(la[:, 0])                                    # [B,H]
+        state = state * a[..., None, None] + jnp.einsum(
+            "bs,bhd->bhsd", Bm[:, 0], v[:, 0])
+        y = jnp.einsum("bs,bhsd->bhd", Cm[:, 0], state)[:, None]  # [B,1,H,hd]
+        new_cache = {"conv": new_conv, "ssm": state.astype(cache["ssm"].dtype)}
+    else:
+        L = min(ssm.chunk, S)
+        assert S % L == 0, (S, L)
+        nc = S // L
+        lac = la.reshape(B, nc, L, H)
+        cum = jnp.cumsum(lac, axis=2)                            # [B,nc,L,H]
+        cum = shard(cum, "batch", "chunks", None, "state_heads")
+        Bc = Bm.reshape(B, nc, L, ds)
+        Cc = Cm.reshape(B, nc, L, ds)
+        vc = v.reshape(B, nc, L, H, hd)
+        vc = shard(vc, "batch", "chunks", None, "state_heads", "head_dim")
+        # intra-chunk
+        cb = jnp.einsum("bnls,bnms->bnlm", Cc, Bc)               # [B,nc,L,L]
+        dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [B,nc,L,L,H]
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        sc = jnp.where(mask[None, None, :, :, None],
+                       jnp.exp(dec) * cb[..., None], 0.0)        # [B,nc,L,L,H]
+        y_intra = jnp.einsum("bnlmh,bnmhd->bnlhd", sc, vc)
+        # chunk states
+        w_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # [B,nc,L,H]
+        s_chunk = jnp.einsum("bnls,bnlh,bnlhd->bnhsd", Bc, w_end, vc)
+        a_chunk = jnp.exp(cum[:, :, -1])                         # [B,nc,H]
+        init = cache["ssm"].astype(jnp.float32) if (cache and "ssm" in cache) else None
+        s_prev, s_final = _cross_chunk(a_chunk, s_chunk, init)
+        y_inter = jnp.einsum("bnls,bnhsd,bnlh->bnlhd", Cc, s_prev, jnp.exp(cum))
+        y = (y_intra + y_inter).reshape(B, S, H, hd)
+        new_cache = None
+        if mode == "prefill":
+            conv_tail = jnp.concatenate(
+                [jnp.zeros((B, ssm.d_conv - 1, inner + 2 * ds), x.dtype),
+                 zxbcdt[..., inner:2 * inner + 2 * ds]], axis=1)[:, -(ssm.d_conv - 1):]
+            new_cache = {"conv": conv_tail,
+                         "ssm": s_final.astype(x.dtype)}
+
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * x_in.astype(jnp.float32)
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_defs(cfg):
+    D = cfg.d_model
+    inner = cfg.xlstm.expand * D
+    H = cfg.n_heads
+    dk = inner // H
+    return {
+        "up": ParamDef((D, 2 * inner), ("embed", "inner")),
+        "wq": ParamDef((inner, H, dk), ("inner", "heads", "head_dim")),
+        "wk": ParamDef((inner, H, dk), ("inner", "heads", "head_dim")),
+        "wv": ParamDef((inner, H, dk), ("inner", "heads", "head_dim")),
+        "wi": ParamDef((inner, H), ("inner", "heads"), scale=0.01),
+        "wf": ParamDef((inner, H), ("inner", "heads"), scale=0.01),
+        "f_bias": ParamDef((H,), ("heads",), init="ones"),
+        "norm_w": ParamDef((inner,), ("norm",), init="zeros"),
+        "down": ParamDef((inner, D), ("inner", "embed")),
+    }
+
+
+def mlstm_forward(p, cfg, x, *, mode="train", cache=None, unroll=False):
+    B, S, D = x.shape
+    inner = cfg.xlstm.expand * D
+    H = cfg.n_heads
+    dk = inner // H
+
+    up = jnp.einsum("bsd,dk->bsk", x, p["up"].astype(x.dtype))
+    xm, z = up[..., :inner], up[..., inner:]
+    xm = shard(xm, "batch", "seq", "inner")
+    q = jnp.einsum("bsk,khd->bshd", xm, p["wq"].astype(x.dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsk,khd->bshd", xm, p["wk"].astype(x.dtype)).astype(jnp.float32) * dk ** -0.5
+    v = jnp.einsum("bsk,khd->bshd", xm, p["wv"].astype(x.dtype)).astype(jnp.float32)
+    q = shard(q, "batch", "seq", "mhead", "head_dim")
+    ig = jnp.einsum("bsk,kh->bsh", xm, p["wi"].astype(x.dtype)).astype(jnp.float32)
+    fg = jnp.einsum("bsk,kh->bsh", xm, p["wf"].astype(x.dtype)).astype(jnp.float32)
+    fg = fg + p["f_bias"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg)                                 # [B,S,H]
+
+    if mode == "decode":
+        Sst = cache["S"].astype(jnp.float32)                      # [B,H,dk,dk]
+        n = cache["n"].astype(jnp.float32)                        # [B,H,dk]
+        m = cache["m"].astype(jnp.float32)                        # [B,H]
+        lf, ii = logf[:, 0], ig[:, 0]
+        m_new = jnp.maximum(lf + m, ii)
+        fw = jnp.exp(lf + m - m_new)
+        iw = jnp.exp(ii - m_new)
+        Sst = Sst * fw[..., None, None] + jnp.einsum(
+            "bhk,bhd->bhkd", k[:, 0] * iw[..., None], v[:, 0])
+        n = n * fw[..., None] + k[:, 0] * iw[..., None]
+        num = jnp.einsum("bhk,bhkd->bhd", q[:, 0], Sst)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q[:, 0], n))
+        y = (num / jnp.maximum(den, jnp.exp(-m_new))[..., None])[:, None]
+        new_cache = {"S": Sst.astype(cache["S"].dtype),
+                     "n": n.astype(cache["n"].dtype),
+                     "m": m_new.astype(cache["m"].dtype)}
+        y = y.reshape(B, 1, inner).astype(x.dtype)
+    else:
+        # global per-head stabilizer (training approximation, DESIGN.md)
+        m_g = jax.lax.stop_gradient(jnp.max(ig, axis=1, keepdims=True))  # [B,1,H]
+        iw = jnp.exp(ig - m_g)                                    # [B,S,H]
+        kw = k * iw[..., None]
+        v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], -1)  # [B,S,H,dk+1]
+        L = min(cfg.xlstm.chunk, S)
+        assert S % L == 0
+        nc = S // L
+        cum = jnp.cumsum(logf.reshape(B, nc, L, H), axis=2)
+        cum = shard(cum, "batch", "chunks", None, "mhead")
+        qc = q.reshape(B, nc, L, H, dk)
+        qc = shard(qc, "batch", "chunks", None, "mhead", "head_dim")
+        kc = kw.reshape(B, nc, L, H, dk)
+        kc = shard(kc, "batch", "chunks", None, "mhead", "head_dim")
+        vc = v_aug.reshape(B, nc, L, H, dk + 1)
+        qk = jnp.einsum("bnlhk,bnmhk->bnlmh", qc, kc)
+        dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        sc = jnp.where(mask[None, None, :, :, None], jnp.exp(dec) * qk, 0.0)
+        y_intra = jnp.einsum("bnlmh,bnmhd->bnlhd", sc, vc)
+        w_end = jnp.exp(cum[:, :, -1:, :] - cum)
+        s_chunk = jnp.einsum("bnlhk,bnlh,bnlhd->bnhkd", kc, w_end, vc)
+        a_chunk = jnp.exp(cum[:, :, -1])
+        s_prev, s_final = _cross_chunk(a_chunk, s_chunk, None)
+        y_inter = jnp.einsum("bnlhk,bnhkd,bnlh->bnlhd", qc, s_prev, jnp.exp(cum))
+        y_aug = (y_intra + y_inter).reshape(B, S, H, dk + 1)
+        den = jnp.abs(y_aug[..., -1])
+        y = y_aug[..., :-1] / jnp.maximum(den, 1.0)[..., None]
+        y = y.reshape(B, S, inner).astype(x.dtype)
+        new_cache = None
+        if mode == "prefill":
+            # decode handoff: the augmented-v trick means s_final already
+            # carries the normalizer in its last v-column, and the whole state
+            # is scaled by exp(-m_g) -- consistent with handing off m = m_g.
+            new_cache = {"S": s_final[..., :dk].astype(x.dtype),
+                         "n": s_final[..., dk].astype(x.dtype),
+                         "m": m_g[:, 0].astype(x.dtype)}
+
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["down"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_defs(cfg):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    return {
+        "w_in": ParamDef((D, 4, H, dh), ("embed", None, "heads", "head_dim")),
+        "r": ParamDef((4, H, dh, dh), (None, "heads", "head_dim", None), scale=0.02),
+        "b": ParamDef((4, H, dh), (None, "heads", "head_dim"), init="zeros"),
+        "norm_w": ParamDef((D,), ("norm",), init="zeros"),
+        "out_proj": ParamDef((D, D), ("embed", "embed_r")),
+    }
+
+
+def slstm_step(r, carry, wx_t):
+    """One sLSTM time step. carry: (c, n, h, m) each [B,H,dh]; wx_t: [B,4,H,dh]."""
+    c, n, h, m = carry
+    rh = jnp.einsum("ghde,bhe->bghd", r, h)                       # [B,4,H,dh]
+    pre = wx_t + rh
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1]
+    ft = pre[:, 2]
+    ot = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(ft + m - m_new)
+    c = fw * c + iw * zt
+    n = fw * n + iw
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_forward(p, cfg, x, *, mode="train", cache=None, unroll=False):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    wx = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32),
+                    p["w_in"].astype(jnp.float32)) + p["b"].astype(jnp.float32)
+    r = p["r"].astype(jnp.float32)
+
+    if mode == "decode":
+        carry = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["h"].astype(jnp.float32), cache["m"].astype(jnp.float32))
+        carry, h = slstm_step(r, carry, wx[:, 0])
+        y = h[:, None]
+        new_cache = {k: v.astype(cache[k].dtype)
+                     for k, v in zip(("c", "n", "h", "m"), carry)}
+    else:
+        z0 = jnp.zeros((B, H, dh), jnp.float32)
+        carry = (z0, z0, z0, jnp.full((B, H, dh), -1e30, jnp.float32))
+        carry, ys = jax.lax.scan(lambda cr, w: slstm_step(r, cr, w),
+                                 carry, wx.transpose(1, 0, 2, 3, 4))
+        y = ys.transpose(1, 0, 2, 3)                              # [B,S,H,dh]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {k: v.astype(x.dtype)
+                         for k, v in zip(("c", "n", "h", "m"), carry)}
+    y = y.reshape(B, -1, D).astype(x.dtype)
+    y = rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), new_cache

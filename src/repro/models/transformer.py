@@ -1,0 +1,379 @@
+"""Model assembly: parameter declaration, the scanned layer stack, and the
+train / prefill / decode entry points for every architecture family.
+
+The stack is `lax.scan` over `n_repeat` copies of the config's `pattern`
+(weights stacked on a leading "layers" axis), optionally wrapped in
+`jax.checkpoint` (remat). Decode threads per-layer caches through the scan as
+both consumed xs and produced ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shardings import shard
+from .config import ArchConfig, Layer
+from .layers import (attention_block, cross_attention_block, mlp_block,
+                     moe_block, rms_norm, softcap)
+from .params import ParamDef
+from . import ssm as ssm_mod
+
+
+# ------------------------------------------------------------- param defs
+def _attn_defs(cfg, d_in=None, kv=None):
+    D = cfg.d_model
+    d_in = d_in or D
+    H, KV, Dh = cfg.n_heads, kv or cfg.n_kv, cfg.head_dim
+    d = {
+        "wq": ParamDef((d_in, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d_in, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d_in, KV, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, Dh, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((Dh,), ("norm",), init="zeros")
+        d["k_norm"] = ParamDef((Dh,), ("norm",), init="zeros")
+    return d
+
+
+def _mlp_defs(cfg, kind):
+    D, F = cfg.d_model, cfg.d_ff
+    if kind == "sqrelu":
+        return {"wu": ParamDef((D, F), ("embed", "ffn")),
+                "wd": ParamDef((F, D), ("ffn", "embed"))}
+    return {"wg": ParamDef((D, F), ("embed", "ffn")),
+            "wu": ParamDef((D, F), ("embed", "ffn")),
+            "wd": ParamDef((F, D), ("ffn", "embed"))}
+
+
+def _moe_defs(cfg):
+    m = cfg.moe
+    D, F, E = cfg.d_model, m.d_ff, m.n_experts
+    d = {
+        "router": ParamDef((D, E), ("embed", "expert")),
+        "w_gate": ParamDef((E, D, F), ("expert", "embed", "ffn")),
+        "w_up": ParamDef((E, D, F), ("expert", "embed", "ffn")),
+        "w_down": ParamDef((E, F, D), ("expert", "ffn", "embed")),
+    }
+    if m.shared_d_ff:
+        d["shared_wg"] = ParamDef((D, m.shared_d_ff), ("embed", "ffn"))
+        d["shared_wu"] = ParamDef((D, m.shared_d_ff), ("embed", "ffn"))
+        d["shared_wd"] = ParamDef((m.shared_d_ff, D), ("ffn", "embed"))
+    return d
+
+
+def _block_defs(cfg, layer: Layer):
+    D = cfg.d_model
+    d = {}
+    if layer.mixer in ("attn", "swa"):
+        d["ln1"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mix"] = _attn_defs(cfg)
+        if cfg.post_norm:
+            d["pn1"] = ParamDef((D,), ("norm",), init="zeros")
+    elif layer.mixer == "shared_attn":
+        d["mix_out"] = ParamDef((D, D), ("embed", "embed_r"))
+    elif layer.mixer == "mamba":
+        d["ln1"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mix"] = ssm_mod.mamba_defs(cfg)
+    elif layer.mixer == "mlstm":
+        d["ln1"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mix"] = ssm_mod.mlstm_defs(cfg)
+    elif layer.mixer == "slstm":
+        d["ln1"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mix"] = ssm_mod.slstm_defs(cfg)
+    elif layer.mixer != "none":
+        raise ValueError(layer.mixer)
+    if layer.cross_attn:
+        d["lnx"] = ParamDef((D,), ("norm",), init="zeros")
+        d["xattn"] = _attn_defs(cfg, kv=cfg.n_heads)   # cross-attn is MHA
+    if layer.mlp == "moe":
+        d["ln2"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mlp"] = _moe_defs(cfg)
+    elif layer.mlp != "none":
+        d["ln2"] = ParamDef((D,), ("norm",), init="zeros")
+        d["mlp"] = _mlp_defs(cfg, layer.mlp)
+        if cfg.post_norm:
+            d["pn2"] = ParamDef((D,), ("norm",), init="zeros")
+    return d
+
+
+def _stack_defs(defs, n):
+    """Add a leading stacked 'layers' axis to every leaf."""
+    def add(d: ParamDef):
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale, d.dtype)
+    return jax.tree_util.tree_map(add, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def build_param_defs(cfg: ArchConfig):
+    D, V = cfg.d_model, cfg.vocab
+    defs = {}
+    if cfg.n_codebooks:
+        defs["embed"] = {"tok": ParamDef((cfg.n_codebooks, V, D),
+                                         ("codebook", "vocab", "embed"), scale=0.02)}
+    else:
+        defs["embed"] = {"tok": ParamDef((V, D), ("vocab", "embed"), scale=0.02)}
+    body = {f"b{i}": _block_defs(cfg, layer) for i, layer in enumerate(cfg.pattern)}
+    defs["blocks"] = _stack_defs(body, cfg.n_repeat)
+    if any(l.mixer == "shared_attn" for l in cfg.pattern):
+        sd = _attn_defs(cfg, d_in=2 * D)
+        sd["ln"] = ParamDef((2 * D,), ("norm",), init="zeros")
+        defs["shared"] = sd
+    defs["final_norm"] = ParamDef((D,), ("norm",), init="zeros")
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks:
+            defs["head"] = {"out": ParamDef((cfg.n_codebooks, D, V),
+                                            ("codebook", "embed", "vocab"))}
+        else:
+            defs["head"] = {"out": ParamDef((D, V), ("embed", "vocab"))}
+    return defs
+
+
+# ------------------------------------------------------------- block apply
+def _apply_block(cfg, layer: Layer, bp, sp, x, e0, cond, *, mode, cache,
+                 ctx_len, chunk, unroll, cur_len=None):
+    """One pattern element. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    newc = {}
+    cache = cache or {}
+    x = shard(x, "batch", "seq", "embed")
+
+    if layer.mixer in ("attn", "swa"):
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        window = cfg.sliding_window if layer.mixer == "swa" else 0
+        out, c = attention_block(bp["mix"], cfg, h, window=window, mode=mode,
+                                 cache=cache.get("attn"), ctx_len=ctx_len,
+                                 chunk=chunk, unroll=unroll, cur_len=cur_len)
+        if cfg.post_norm:
+            out = rms_norm(out, bp["pn1"], cfg.norm_eps)
+        if c is not None:
+            newc["attn"] = c
+        x = x + out
+    elif layer.mixer == "shared_attn":
+        h = jnp.concatenate([x, e0.astype(x.dtype)], axis=-1)
+        h = rms_norm(h, sp["ln"], cfg.norm_eps)
+        out, c = attention_block(sp, cfg, h, window=0, mode=mode,
+                                 cache=cache.get("attn"), ctx_len=ctx_len,
+                                 chunk=chunk, unroll=unroll, cur_len=cur_len)
+        out = jnp.einsum("bsd,de->bse", out, bp["mix_out"].astype(x.dtype))
+        if c is not None:
+            newc["attn"] = c
+        x = x + out
+    elif layer.mixer in ("mamba", "mlstm", "slstm"):
+        fwd = {"mamba": ssm_mod.mamba_forward, "mlstm": ssm_mod.mlstm_forward,
+               "slstm": ssm_mod.slstm_forward}[layer.mixer]
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        out, c = fwd(bp["mix"], cfg, h, mode=mode, cache=cache.get("ssm"),
+                     unroll=unroll)
+        if c is not None:
+            newc["ssm"] = c
+        x = x + out
+
+    if layer.cross_attn:
+        h = rms_norm(x, bp["lnx"], cfg.norm_eps)
+        out, c = cross_attention_block(bp["xattn"], cfg, h, cond, mode=mode,
+                                       cache=cache.get("xattn"))
+        if c is not None:
+            newc["xattn"] = c
+        x = x + out
+
+    if layer.mlp == "moe":
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        out, a = moe_block(bp["mlp"], cfg, h)
+        aux = aux + a
+        x = x + out
+    elif layer.mlp != "none":
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        out = mlp_block(bp["mlp"], cfg, h, layer.mlp)
+        if cfg.post_norm:
+            out = rms_norm(out, bp["pn2"], cfg.norm_eps)
+        x = x + out
+    return x, newc, aux
+
+
+def _body(cfg, sp, cond, mode, ctx_len, chunk, unroll, cur_len, carry, scanned):
+    x, e0, aux = carry
+    bparams, bcache = scanned
+    newc = {}
+    for i, layer in enumerate(cfg.pattern):
+        x, c_i, a_i = _apply_block(cfg, layer, bparams[f"b{i}"], sp, x, e0,
+                                   cond, mode=mode,
+                                   cache=(bcache or {}).get(f"b{i}"),
+                                   ctx_len=ctx_len, chunk=chunk, unroll=unroll,
+                                   cur_len=cur_len)
+        if c_i:
+            newc[f"b{i}"] = c_i
+        aux = aux + a_i
+    return (x, e0, aux), newc
+
+
+def apply_stack(params, cfg, x, cond=None, *, mode="train", caches=None,
+                ctx_len=0, chunk=512, unroll=False, remat="full",
+                cur_len=None):
+    """Scan the layer stack. Returns (x, aux_loss, new_caches or None)."""
+    sp = params.get("shared")
+    e0 = x
+    body = functools.partial(_body, cfg, sp, cond, mode, ctx_len, chunk,
+                             unroll, cur_len)
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, _, aux), new_caches = jax.lax.scan(
+        body, (x, e0, aux0), (params["blocks"], caches))
+    return x, aux, new_caches
+
+
+# ------------------------------------------------------------- embeddings
+def embed_tokens(params, cfg, tokens, vision_embeds=None):
+    tok_w = params["embed"]["tok"]
+    if cfg.n_codebooks:
+        # tokens: [B, K, S]; sum codebook embeddings
+        e = jnp.einsum("kbsd->bsd", jnp.stack(
+            [jnp.take(tok_w[k], tokens[:, k], axis=0) for k in range(cfg.n_codebooks)]))
+    else:
+        e = jnp.take(tok_w, tokens, axis=0)
+    e = e.astype(jnp.dtype(cfg.act_dtype))
+    if cfg.embed_scale:
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    if vision_embeds is not None:
+        vt = cfg.vision_tokens
+        e = jnp.concatenate([vision_embeds.astype(e.dtype), e[:, vt:]], axis=1)
+    return shard(e, "batch", "seq", "embed")
+
+
+def lm_head(params, cfg, x):
+    xn = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"]                    # [V, D]
+        logits = jnp.einsum("bsd,vd->bsv", xn, w.astype(xn.dtype))
+    elif cfg.n_codebooks:
+        w = params["head"]["out"]                     # [K, D, V]
+        logits = jnp.einsum("bsd,kdv->bksv", xn, w.astype(xn.dtype))
+    else:
+        w = params["head"]["out"]                     # [D, V]
+        logits = jnp.einsum("bsd,dv->bsv", xn, w.astype(xn.dtype))
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab") if not cfg.n_codebooks \
+        else shard(logits, "batch", "codebook", "seq", "vocab")
+
+
+def lm_loss(logits, labels):
+    """Mean CE over positions with label >= 0. logits f32 [..., V]."""
+    valid = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    ce = jnp.where(valid, logz - ll, 0.0)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ------------------------------------------------------------- entry points
+def forward_train(params, cfg, batch, *, chunk=512, unroll=False, remat="full"):
+    """Returns (loss, metrics)."""
+    x = embed_tokens(params, cfg, batch["tokens"], batch.get("vision"))
+    cond = batch.get("cond")
+    x, aux, _ = apply_stack(params, cfg, x, cond, mode="train", chunk=chunk,
+                            unroll=unroll, remat=remat)
+    logits = lm_head(params, cfg, x)
+    if cfg.n_codebooks:
+        loss = lm_loss(logits, batch["labels"])       # labels [B,K,S]
+    else:
+        loss = lm_loss(logits, batch["labels"])
+    total = loss + aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def forward_prefill(params, cfg, batch, *, chunk=512, unroll=False):
+    """Returns (last-position logits, caches)."""
+    x = embed_tokens(params, cfg, batch["tokens"], batch.get("vision"))
+    cond = batch.get("cond")
+    x, _, caches = apply_stack(params, cfg, x, cond, mode="prefill",
+                               chunk=chunk, unroll=unroll, remat="none")
+    logits = lm_head(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def forward_decode(params, cfg, token, caches, ctx_len, *, cond=None,
+                   unroll=False, cur_len=None):
+    """One decode step. token: [B,1] (or [B,K,1]). Returns (logits, caches)."""
+    x = embed_tokens(params, cfg, token)
+    x, _, new_caches = apply_stack(params, cfg, x, cond, mode="decode",
+                                   caches=caches, ctx_len=ctx_len,
+                                   unroll=unroll, remat="none",
+                                   cur_len=cur_len)
+    logits = lm_head(params, cfg, x)
+    return logits, new_caches
+
+
+# ------------------------------------------------------------- cache specs
+def cache_defs(cfg, batch_size, ctx_len, *, margin=None):
+    """Per-layer cache tree (stacked over n_repeat) as ParamDefs, so abstract
+    shapes and shardings derive from the same logical-axis machinery.
+
+    The attention-cache capacity rounds ctx_len+1 up to a multiple of 512 so
+    the cache_seq dimension always divides the (pod x data x model) axes."""
+    dt = cfg.act_dtype
+    KV, Dh = cfg.n_kv, cfg.head_dim
+    H = cfg.n_heads
+    D = cfg.d_model
+    R = cfg.n_repeat
+    if margin is None:
+        cap = ((ctx_len + 1 + 511) // 512) * 512
+    else:
+        cap = ctx_len + margin
+
+    def P(shape, axes):
+        return ParamDef(shape, axes, dtype=dt)
+
+    out = {}
+    for i, layer in enumerate(cfg.pattern):
+        c = {}
+        if layer.mixer in ("attn", "swa", "shared_attn"):
+            c["attn"] = {
+                "k": P((R, batch_size, cap, KV, Dh),
+                       ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+                "v": P((R, batch_size, cap, KV, Dh),
+                       ("layers", "batch", "cache_seq", "kv_heads", "head_dim")),
+            }
+        elif layer.mixer == "mamba":
+            ssm = cfg.ssm
+            inner = ssm.expand * D
+            Hm = inner // ssm.head_dim
+            c["ssm"] = {
+                "conv": P((R, batch_size, ssm.d_conv - 1, inner + 2 * ssm.d_state),
+                          ("layers", "batch", "conv", "inner")),
+                "ssm": P((R, batch_size, Hm, ssm.d_state, ssm.head_dim),
+                         ("layers", "batch", "state_heads", "state", "head_dim")),
+            }
+        elif layer.mixer == "mlstm":
+            inner = cfg.xlstm.expand * D
+            dk = inner // H
+            c["ssm"] = {
+                "S": P((R, batch_size, H, dk, dk),
+                       ("layers", "batch", "mhead", "head_dim", "mlstm_dv")),
+                "n": P((R, batch_size, H, dk),
+                       ("layers", "batch", "mhead", "head_dim")),
+                "m": P((R, batch_size, H), ("layers", "batch", "mhead")),
+            }
+        elif layer.mixer == "slstm":
+            dh = D // H
+            c["ssm"] = {k: P((R, batch_size, H, dh),
+                             ("layers", "batch", "mhead", "head_dim"))
+                        for k in ("c", "n", "h", "m")}
+        if layer.cross_attn:
+            c["xattn"] = {
+                "ck": P((R, batch_size, cfg.cross_len, H, Dh),
+                        ("layers", "batch", "cross", "heads", "head_dim")),
+                "cv": P((R, batch_size, cfg.cross_len, H, Dh),
+                        ("layers", "batch", "cross", "heads", "head_dim")),
+            }
+        if c:
+            out[f"b{i}"] = c
+    return out

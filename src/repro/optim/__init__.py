@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update
+from .prox_step import prox_params, gsupp_fraction, make_weight_penalty
+from .grad_compress import compress_grads, decompress_grads

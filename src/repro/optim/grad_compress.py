@@ -1,0 +1,27 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the gradient all-reduce crosses the (slow) inter-pod links;
+casting gradients to bfloat16 before the reduction halves those bytes at ~zero
+quality cost for LM training (error feedback optional). With pjit/GSPMD the
+reduction is implicit in the sharded autodiff, so compression is expressed as
+a dtype boundary: microbatch gradients are accumulated in bf16 and promoted to
+f32 only inside the optimizer. `train_step` enables this with
+grad_compress="bf16".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, mode: str):
+    if mode == "none":
+        return grads
+    if mode == "bf16":
+        return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+    raise ValueError(mode)
+
+
+def decompress_grads(grads, params):
+    return jax.tree_util.tree_map(
+        lambda g, p: g.astype(p.dtype), grads, params)

@@ -1,0 +1,1 @@
+from .hlo import collective_bytes, parse_collectives

@@ -1,0 +1,74 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+from repro.configs import ARCH_NAMES, get_config            # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.specs import merge_rules                   # noqa: E402
+from repro.models.config import SHAPES, cells_for            # noqa: E402
+from repro.roofline.units import analyze_cell                # noqa: E402
+
+"""Roofline analyzer CLI: per (arch x shape) unit-level accounting on the
+single-pod production mesh (EXPERIMENTS.md §Roofline). Writes one JSON per
+cell to experiments/roofline/."""
+
+
+def run(arch, shape_name, out_dir, *, remat="full", chunk=512,
+        act_overrides=None, param_overrides=None, tag=""):
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    act, par = merge_rules(cfg, shape, act_overrides, param_overrides)
+    t0 = time.time()
+    rec = analyze_cell(cfg, shape, mesh, act=act, par=par, remat=remat,
+                       chunk=chunk)
+    rec["analysis_s"] = round(time.time() - t0, 1)
+    rec["overrides"] = {"act": act_overrides, "param": param_overrides,
+                        "remat": remat, "chunk": chunk, "tag": tag}
+    print(f"[roofline] {arch} {shape_name}{('/' + tag) if tag else ''}: "
+          f"compute={rec['compute_s']*1e3:.2f}ms memory={rec['memory_s']*1e3:.2f}ms "
+          f"coll={rec['collective_s']*1e3:.2f}ms dominant={rec['dominant']} "
+          f"frac={rec['roofline_fraction']:.3f} useful={rec['useful_ratio']:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}_{shape_name}" + (f"_{tag}" if tag else "")
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default="experiments/roofline")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    fails = []
+    for arch in archs:
+        shapes = [s.name for s in cells_for(arch)]
+        if args.shape != "all":
+            if args.shape not in shapes:
+                continue
+            shapes = [args.shape]
+        for shape in shapes:
+            try:
+                run(arch, shape, args.out, remat=args.remat, chunk=args.chunk,
+                    tag=args.tag)
+            except Exception as e:              # noqa: BLE001
+                traceback.print_exc()
+                fails.append((arch, shape, repr(e)))
+                print(f"[roofline] {arch} {shape} FAILED: {e}")
+    if fails:
+        raise SystemExit(f"{len(fails)} failures: {fails}")
+
+
+if __name__ == "__main__":
+    main()

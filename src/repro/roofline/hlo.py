@@ -1,0 +1,93 @@
+"""Parse collective ops out of optimized (post-SPMD) HLO text.
+
+cost_analysis() does not report collective bytes, so the roofline's collective
+term is derived here: for every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op we take the printed result shape, the
+replica-group size g, and apply ring-algorithm per-device link-byte formulas:
+
+  all-gather          out_bytes * (g-1)/g
+  all-reduce          2 * bytes * (g-1)/g
+  reduce-scatter      out_bytes * (g-1)          (input = g * output moves (g-1)/g)
+  all-to-all          bytes * (g-1)/g
+  collective-permute  bytes
+
+Note: XLA CPU prints while-loop bodies once; callers that need trip-count
+multiplication do it at the unit level (repro.roofline.units).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Returns a list of dicts: {op, bytes, group, link_bytes} per collective."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            ge = _GROUPS_EXPL_RE.search(line)
+            if ge:
+                g = len([x for x in ge.group(1).split(",") if x.strip()])
+        if g <= 1 and op != "collective-permute":
+            link = 0.0
+        elif op == "all-gather":
+            link = nbytes * (g - 1) / g
+        elif op == "all-reduce":
+            link = 2.0 * nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            link = nbytes * (g - 1)
+        elif op == "all-to-all":
+            link = nbytes * (g - 1) / g
+        else:                                   # collective-permute
+            link = float(nbytes)
+        out.append({"op": op, "bytes": nbytes, "group": g, "link_bytes": link})
+    return out
+
+
+def collective_bytes(hlo_text: str):
+    """Aggregate per-device link bytes + op counts from HLO text."""
+    colls = parse_collectives(hlo_text)
+    total = sum(c["link_bytes"] for c in colls)
+    by_op = defaultdict(lambda: {"count": 0, "link_bytes": 0.0})
+    for c in colls:
+        by_op[c["op"]]["count"] += 1
+        by_op[c["op"]]["link_bytes"] += c["link_bytes"]
+    return total, dict(by_op)

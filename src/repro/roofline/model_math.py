@@ -1,0 +1,57 @@
+"""Analytic MODEL_FLOPS (the 6*N*D / 2*N*D useful-compute yardstick).
+
+N counts matmul-participating parameters excluding the token-embedding table
+(the LM head is included when untied); for MoE archs expert parameters are
+scaled by top_k/n_experts (active fraction). Attention score/value FLOPs are
+*not* in MODEL_FLOPS (the standard convention), so HLO_FLOPS/MODEL_FLOPS > 1
+is expected for long sequences — the ratio still exposes remat/redundancy
+waste per DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.params import ParamDef, count_params
+from repro.models.transformer import build_param_defs
+
+
+def _leaf_count(defs, pred):
+    total = 0
+    for path, d in jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))[0]:
+        keys = tuple(getattr(k, "key", "") for k in path)
+        if pred(keys, d):
+            n = 1
+            for s in d.shape:
+                n *= s
+            total += n
+    return total
+
+
+def param_counts(cfg):
+    defs = build_param_defs(cfg)
+    total = count_params(defs)
+    embed = _leaf_count(defs, lambda ks, d: ks and ks[0] == "embed")
+    expert = _leaf_count(defs, lambda ks, d: any(
+        k in ("w_up", "w_gate", "w_down") for k in ks))
+    body = total - embed
+    if cfg.tie_embeddings:
+        # tied head matmul still does compute: count it once
+        body += embed
+    active = body
+    if cfg.moe is not None:
+        active = body - expert + expert * (cfg.moe.top_k / cfg.moe.n_experts)
+    return {"total": total, "embed": embed, "expert": expert,
+            "body": body, "active": active}
+
+
+def model_flops(cfg, shape):
+    pc = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * pc["active"] * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * pc["active"] * tokens
+    # decode: one token per sequence
+    return 2.0 * pc["active"] * shape.global_batch

@@ -1,0 +1,298 @@
+"""Unit-level roofline accounting.
+
+XLA CPU's cost_analysis() reports per-device costs and counts while-loop
+bodies ONCE (verified empirically; DESIGN.md §5). The production step uses
+lax.scan over layers and microbatches, so this module compiles each repeated
+unit separately — with the same mesh/shardings and with inner chunk-scans
+unrolled — and combines:
+
+  train:   n_micro * [embed_bwd + sum_i n_repeat * layer_bwd_i + head_bwd] + opt
+  prefill: embed + sum_i n_repeat * layer_i + head(S=1)
+  decode:  embed(S=1) + sum_i n_repeat * layer_decode_i + head(S=1)
+
+Layer units with a true time recurrence (sLSTM) are compiled at a reduced
+sequence length and scaled linearly (every term in those layers is linear in
+S). Each unit's collective bytes are parsed from its optimized HLO.
+
+Roofline terms (per device, seconds):
+  compute    = flops / peak_bf16
+  memory     = bytes_accessed / hbm_bw      (optimized-HLO buffer traffic —
+               an upper bound on HBM traffic vs. a fused TPU program)
+  collective = link_bytes / ici_bw
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import HW
+from repro.launch.shardings import make_spec, sharding_ctx
+from repro.models.params import abstract_params, param_shardings
+from repro.models.transformer import (_apply_block, _block_defs, build_param_defs,
+                                      cache_defs, embed_tokens, lm_head, lm_loss)
+from repro.models.config import SHAPES
+from repro.optim import adamw_update, make_weight_penalty, prox_params
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.model_math import model_flops, param_counts
+
+SLSTM_ANALYSIS_S = 128
+
+
+def _costs(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    hlo = compiled.as_text()
+    coll, by_op = collective_bytes(hlo)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll), "by_op": by_op}
+
+
+def _compile(fn, args, shardings, mesh, act, par):
+    def wrapped(*a):
+        with sharding_ctx(mesh, act, par):
+            return fn(*a)
+    jitted = jax.jit(wrapped, in_shardings=shardings)
+    return _costs(jitted.lower(*args).compile())
+
+
+def _ns(mesh, spec):
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def _act_sh(mesh, act, axes, shape):
+    return _ns(mesh, make_spec(axes, act, mesh, shape))
+
+
+def _layer_unit(cfg, i, layer, mesh, act, par, *, B, S, mode, train, remat,
+                chunk, ctx_len=0):
+    """Compile one pattern element; returns per-invocation costs."""
+    dt = jnp.dtype(cfg.act_dtype)
+    scale = 1.0
+    if layer.mixer == "slstm" and S > SLSTM_ANALYSIS_S:
+        scale = S / SLSTM_ANALYSIS_S
+        S = SLSTM_ANALYSIS_S
+
+    bdefs = _block_defs(cfg, layer)
+    bp_abs = abstract_params(bdefs, cfg.param_dtype)
+    bp_sh = param_shardings(bdefs, mesh, par)
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    x_sh = _act_sh(mesh, act, ("batch", "seq", "embed"), x_abs.shape)
+    args = [bp_abs, x_abs]
+    shardings = [bp_sh, x_sh]
+
+    sp_abs = sp_sh = None
+    if layer.mixer == "shared_attn":
+        from repro.models.transformer import _attn_defs
+        sdefs = _attn_defs(cfg, d_in=2 * cfg.d_model)
+        from repro.models.params import ParamDef
+        sdefs["ln"] = ParamDef((2 * cfg.d_model,), ("norm",), init="zeros")
+        sp_abs = abstract_params(sdefs, cfg.param_dtype)
+        sp_sh = param_shardings(sdefs, mesh, par)
+        args.append(sp_abs)
+        shardings.append(sp_sh)
+
+    cond_abs = None
+    if layer.cross_attn:
+        cond_abs = jax.ShapeDtypeStruct((B, cfg.cross_len, cfg.d_model), dt)
+        args.append(cond_abs)
+        shardings.append(_act_sh(mesh, act, ("batch", "cross", "embed"),
+                                 cond_abs.shape))
+
+    cache_abs = cache_sh = None
+    if mode == "decode":
+        cdefs = cache_defs(cfg, B, ctx_len)
+        key = f"b{i}"
+        if key in cdefs:
+            from repro.models.params import ParamDef as PD
+
+            def drop_lead(d):
+                return PD(d.shape[1:], d.axes[1:], d.init, d.scale, d.dtype)
+            cdefs_i = jax.tree_util.tree_map(
+                drop_lead, cdefs[key], is_leaf=lambda x: isinstance(x, PD))
+            cache_abs = abstract_params(cdefs_i, cfg.act_dtype)
+            cache_sh = param_shardings(cdefs_i, mesh, act)
+            args.append(cache_abs)
+            shardings.append(cache_sh)
+
+    n_extra = len(args) - 2
+
+    def fwd(bp, x, *extra):
+        idx = 0
+        sp = cond = cache = None
+        if sp_abs is not None:
+            sp = extra[idx]; idx += 1
+        if cond_abs is not None:
+            cond = extra[idx]; idx += 1
+        if cache_abs is not None:
+            cache = extra[idx]; idx += 1
+        e0 = x
+        out, newc, aux = _apply_block(
+            cfg, layer, bp, sp, x, e0, cond, mode=mode, cache=cache,
+            ctx_len=ctx_len, chunk=chunk, unroll=True)
+        return out if not train else out
+
+    if train:
+        if remat == "full":
+            fwd_r = jax.checkpoint(fwd, prevent_cse=False)
+        elif remat == "dots":
+            fwd_r = jax.checkpoint(
+                fwd, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            fwd_r = fwd
+
+        def unit(bp, x, *rest):
+            extra = rest[:n_extra]
+            ct = rest[n_extra]
+            y, vjp_fn = jax.vjp(lambda b, xx: fwd_r(b, xx, *extra), bp, x)
+            gb, gx = vjp_fn(ct)
+            return y, gb, gx
+        args.append(x_abs)                      # cotangent
+        shardings.append(x_sh)
+    else:
+        def unit(bp, x, *rest):
+            return fwd(bp, x, *rest[:n_extra])
+
+    c = _compile(unit, tuple(args), tuple(shardings), mesh, act, par)
+    return {k: (v * scale if k in ("flops", "bytes", "coll") else v)
+            for k, v in c.items()}
+
+
+def _embed_unit(cfg, mesh, act, par, *, B, S, train):
+    dt = jnp.dtype(cfg.act_dtype)
+    defs = build_param_defs(cfg)
+    e_abs = abstract_params({"embed": defs["embed"]}, cfg.param_dtype)
+    e_sh = param_shardings({"embed": defs["embed"]}, mesh, par)
+    tok_shape = (B, cfg.n_codebooks, S) if cfg.n_codebooks else (B, S)
+    tok_abs = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    tok_sh = _act_sh(mesh, act, ("batch",) + (None,) * (len(tok_shape) - 1),
+                     tok_shape)
+    vis_abs = None
+    if cfg.vision_tokens:
+        vis_abs = jax.ShapeDtypeStruct((B, cfg.vision_tokens, cfg.d_model), dt)
+
+    def fwd(p, tokens, *v):
+        return embed_tokens(p, cfg, tokens, v[0] if v else None)
+
+    args = [e_abs, tok_abs] + ([vis_abs] if vis_abs else [])
+    shardings = [e_sh, tok_sh] + ([
+        _act_sh(mesh, act, ("batch", None, "embed"), vis_abs.shape)] if vis_abs else [])
+    if train:
+        ct_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+
+        def unit(p, tokens, *rest):
+            y, vjp_fn = jax.vjp(lambda pp: fwd(pp, tokens, *rest[:-1]), p)
+            return y, vjp_fn(rest[-1])
+        args.append(ct_abs)
+        shardings.append(_act_sh(mesh, act, ("batch", "seq", "embed"), ct_abs.shape))
+    else:
+        unit = fwd
+    return _compile(unit, tuple(args), tuple(shardings), mesh, act, par)
+
+
+def _head_unit(cfg, mesh, act, par, *, B, S, train):
+    dt = jnp.dtype(cfg.act_dtype)
+    defs = build_param_defs(cfg)
+    keys = ["final_norm"] + (["head"] if not cfg.tie_embeddings else []) \
+        + (["embed"] if cfg.tie_embeddings else [])
+    sub = {k: defs[k] for k in keys}
+    p_abs = abstract_params(sub, cfg.param_dtype)
+    p_sh = param_shardings(sub, mesh, par)
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    x_sh = _act_sh(mesh, act, ("batch", "seq", "embed"), x_abs.shape)
+    lab_shape = (B, cfg.n_codebooks, S) if cfg.n_codebooks else (B, S)
+    lab_abs = jax.ShapeDtypeStruct(lab_shape, jnp.int32)
+    lab_sh = _act_sh(mesh, act, ("batch",) + (None,) * (len(lab_shape) - 1),
+                     lab_shape)
+
+    def loss_fn(p, x, labels):
+        logits = lm_head(p, cfg, x)
+        return lm_loss(logits, labels)
+
+    if train:
+        def unit(p, x, labels):
+            return jax.value_and_grad(loss_fn, argnums=(0, 1))(p, x, labels)
+    else:
+        def unit(p, x, labels):
+            del labels
+            return lm_head(p, cfg, x)
+    return _compile(unit, (p_abs, x_abs, lab_abs), (p_sh, x_sh, lab_sh),
+                    mesh, act, par)
+
+
+def _opt_unit(cfg, mesh, par, lr=3e-4):
+    defs = build_param_defs(cfg)
+    p_abs = abstract_params(defs, cfg.param_dtype)
+    p_sh = param_shardings(defs, mesh, par)
+    opt_abs = {"m": p_abs, "v": p_abs,
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    opt_sh = {"m": p_sh, "v": p_sh, "step": _ns(mesh, jax.sharding.PartitionSpec())}
+    penalty = make_weight_penalty(cfg)
+
+    def unit(params, opt, grads):
+        new_p, new_o = adamw_update(grads, opt, params, lr=lr)
+        new_p, nz, nt = prox_params(new_p, penalty, lr)
+        return new_p, new_o, nz / nt
+    return _compile(unit, (p_abs, opt_abs, p_abs), (p_sh, opt_sh, p_sh),
+                    mesh, None, par)
+
+
+def analyze_cell(cfg, shape, mesh, *, act, par, remat="full", chunk=512):
+    """Full per-device unit accounting for one (arch, shape, mesh) cell."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    kind = shape.kind
+    train = kind == "train"
+    if train:
+        B = shape.global_batch // shape.n_micro
+        S = shape.seq_len
+        mult = shape.n_micro
+    elif kind == "prefill":
+        B, S, mult = shape.global_batch, shape.seq_len, 1
+    else:
+        B, S, mult = shape.global_batch, 1, 1
+
+    mode = "train" if train else ("prefill" if kind == "prefill" else "decode")
+    totals = {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    units = {}
+
+    def add(name, c, n):
+        units[name] = {"n": n, **{k: c[k] for k in ("flops", "bytes", "coll")}}
+        for k in totals:
+            totals[k] += n * c[k]
+
+    emb = _embed_unit(cfg, mesh, act, par, B=B, S=S, train=train)
+    add("embed", emb, mult)
+    for i, layer in enumerate(cfg.pattern):
+        lu = _layer_unit(cfg, i, layer, mesh, act, par, B=B, S=S, mode=mode,
+                         train=train, remat=remat, chunk=chunk,
+                         ctx_len=shape.seq_len if kind == "decode" else 0)
+        add(f"layer_b{i}({layer.mixer}/{layer.mlp})", lu, mult * cfg.n_repeat)
+    head_S = S if train else 1
+    hd = _head_unit(cfg, mesh, act, par, B=B, S=head_S, train=train)
+    add("head", hd, mult)
+    if train:
+        add("optimizer", _opt_unit(cfg, mesh, par), 1)
+
+    n_dev = mesh.devices.size
+    mf = model_flops(cfg, shape)
+    compute_s = totals["flops"] / HW["peak_bf16_flops"]
+    memory_s = totals["bytes"] / HW["hbm_bw"]
+    coll_s = totals["coll"] / HW["ici_bw"]
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda t: t[1])[0]
+    return {
+        "arch": cfg.name, "shape": shape.name, "n_devices": n_dev,
+        "per_device": totals, "units": units,
+        "model_flops_global": mf,
+        "hlo_flops_global": totals["flops"] * n_dev,
+        "useful_ratio": mf / max(totals["flops"] * n_dev, 1.0),
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "roofline_fraction": compute_s / max(compute_s, memory_s, coll_s),
+        "param_counts": param_counts(cfg),
+    }

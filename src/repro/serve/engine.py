@@ -1,0 +1,145 @@
+"""Batched serving engine: prefill + decode over the model zoo.
+
+Drives the same `make_prefill_step` / `make_decode_step` builders that the
+multi-pod dry-run lowers, so what is served is exactly what was validated.
+Decode steps are compiled once per cache-capacity *bucket* (powers of two)
+with a traced `cur_len` (true context length) — masking and RoPE positions
+are dynamic, so one compiled step serves every context length in the bucket.
+
+Sampling: greedy / temperature / top-k, computed in f32 on the final logits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import abstract_params
+from repro.models.transformer import cache_defs
+from repro.train.steps import make_decode_step, make_prefill_step
+
+__all__ = ["ServeEngine", "GenerateResult", "sample_tokens"]
+
+
+@dataclass
+class GenerateResult:
+    tokens: np.ndarray                  # [B, n_new]
+    n_prefill: int
+    n_steps: int
+    n_decode_compiles: int = 0
+
+
+def _bucket(n: int, minimum: int = 128) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def sample_tokens(logits, key, *, temperature=0.0, top_k=0):
+    """logits: [B, 1, V] (or [B, K, 1, V]) f32. Returns [B, 1] int32."""
+    if logits.ndim == 4:                      # codebook archs: head codebook 0
+        logits = logits[:, 0]
+    logits = logits[:, -1, :]
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits = logits / temperature
+    if top_k:
+        v, _ = jax.lax.top_k(logits, top_k)
+        logits = jnp.where(logits < v[:, -1:], -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, mesh=None, act_rules=None,
+                 param_rules=None, chunk=512):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.act_rules = act_rules
+        self.param_rules = param_rules
+        self.chunk = chunk
+        self._decode_steps = {}          # capacity bucket -> jitted step
+        self._prefill = jax.jit(make_prefill_step(
+            cfg, chunk=chunk, mesh=mesh, act_rules=act_rules,
+            param_rules=param_rules))
+
+    # ------------------------------------------------------------- helpers
+    def _decode_for(self, capacity: int):
+        if capacity not in self._decode_steps:
+            step = make_decode_step(self.cfg, capacity, mesh=self.mesh,
+                                    act_rules=self.act_rules,
+                                    param_rules=self.param_rules,
+                                    with_cond=bool(self.cfg.cross_d),
+                                    dynamic_ctx=True)
+            self._decode_steps[capacity] = jax.jit(step)
+        return self._decode_steps[capacity]
+
+    def _alloc_caches(self, prefill_caches, batch, capacity):
+        """Place prefill KV into decode caches of `capacity` slots."""
+        cdefs = cache_defs(self.cfg, batch, capacity, margin=0)
+        abstract = abstract_params(cdefs, self.cfg.act_dtype)
+
+        def place(ab, pf):
+            out = jnp.zeros(ab.shape, ab.dtype)
+            if pf is None:
+                return out
+            if pf.shape == ab.shape:             # ssm states: same shape
+                return pf.astype(ab.dtype)
+            sl = tuple(slice(0, s) for s in pf.shape)
+            return out.at[sl].set(pf.astype(ab.dtype))
+        return jax.tree_util.tree_map(place, abstract, prefill_caches,
+                                      is_leaf=lambda x: x is None)
+
+    def _expand_codebook(self, tok):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            B = tok.shape[0]
+            return jnp.broadcast_to(tok[:, None, :], (B, cfg.n_codebooks, 1))
+        return tok
+
+    # ------------------------------------------------------------ generate
+    def generate(self, tokens, *, max_new_tokens=32, temperature=0.0,
+                 top_k=0, seed=0, cond=None, vision=None) -> GenerateResult:
+        """tokens: [B, S] ([B, K, S] for codebook archs). Greedy by default."""
+        cfg = self.cfg
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B = tokens.shape[0]
+        S = tokens.shape[-1]
+        batch = {"tokens": tokens, "labels": tokens}
+        if cond is not None:
+            batch["cond"] = cond
+        if vision is not None:
+            batch["vision"] = vision
+
+        logits, pf_caches = self._prefill(self.params, batch)
+        capacity = _bucket(S + max_new_tokens + 1)
+        caches = self._alloc_caches(pf_caches, B, capacity)
+        decode = self._decode_for(capacity)
+        n_compiles = len(self._decode_steps)
+
+        key = jax.random.PRNGKey(seed)
+        tok = sample_tokens(logits.astype(jnp.float32), key,
+                            temperature=temperature, top_k=top_k)
+        tok = self._expand_codebook(tok)
+        outs = [np.asarray(tok.reshape(B, -1)[:, :1])]
+        n_steps = 0
+        for i in range(max_new_tokens - 1):
+            cur = jnp.asarray(S + i, jnp.int32)
+            if bool(cfg.cross_d):
+                logits, caches = decode(self.params, caches, tok, cur, cond)
+            else:
+                logits, caches = decode(self.params, caches, tok, cur)
+            key, sub = jax.random.split(key)
+            tok = sample_tokens(logits.astype(jnp.float32), sub,
+                                temperature=temperature, top_k=top_k)
+            tok = self._expand_codebook(tok)
+            outs.append(np.asarray(tok.reshape(B, -1)[:, :1]))
+            n_steps += 1
+
+        return GenerateResult(tokens=np.concatenate(outs, axis=1),
+                              n_prefill=S, n_steps=n_steps,
+                              n_decode_compiles=n_compiles)

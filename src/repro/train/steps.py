@@ -1,0 +1,112 @@
+"""Train / prefill / decode step builders.
+
+train_step = microbatched grad accumulation (lax.scan) -> AdamW -> the paper's
+proximal sparsification (repro.optim.prox_step) with generalized-support
+metrics. All steps trace under a sharding_ctx so logical-axis constraints bind
+to the target mesh; on a single CPU device (smoke tests) they are no-ops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.shardings import sharding_ctx
+from repro.models.transformer import (forward_decode, forward_prefill,
+                                      forward_train)
+from repro.optim import (adamw_init, adamw_update, compress_grads,
+                         decompress_grads, make_weight_penalty, prox_params)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "init_train_state"]
+
+
+def init_train_state(params):
+    return adamw_init(params)
+
+
+def _maybe_ctx(mesh, act_rules, param_rules):
+    if mesh is None:
+        import contextlib
+        return contextlib.nullcontext()
+    return sharding_ctx(mesh, act_rules, param_rules)
+
+
+def make_train_step(cfg, *, n_micro=1, remat="full", chunk=512, lr=3e-4,
+                    grad_compress="none", unroll=False, mesh=None,
+                    act_rules=None, param_rules=None):
+    penalty = make_weight_penalty(cfg)
+
+    def train_step(params, opt_state, batch):
+        with _maybe_ctx(mesh, act_rules, param_rules):
+            def loss_fn(p, mb):
+                loss, metrics = forward_train(p, cfg, mb, chunk=chunk,
+                                              unroll=unroll, remat=remat)
+                return loss, metrics
+
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+            if n_micro == 1:
+                mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+                (loss, _), grads = grad_fn(params, mb)
+            else:
+                gdtype = (jnp.bfloat16 if grad_compress == "bf16" else None)
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, gdtype or p.dtype), params)
+
+                def mb_body(carry, mb):
+                    gacc, lacc = carry
+                    (l, _), g = grad_fn(params, mb)
+                    g = compress_grads(g, grad_compress) \
+                        if grad_compress != "none" else g
+                    gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                    return (gacc, lacc + l), None
+
+                (gacc, lsum), _ = jax.lax.scan(
+                    mb_body, (zeros, jnp.zeros((), jnp.float32)), batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g, p: (g.astype(p.dtype) / n_micro),
+                    decompress_grads(gacc, params), params)
+                loss = lsum / n_micro
+
+            new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+            new_params, n_zero, n_tot = prox_params(new_params, penalty, lr)
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            metrics = {"loss": loss, "grad_norm": gnorm,
+                       "weight_sparsity": n_zero / n_tot}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, chunk=512, unroll=False, mesh=None,
+                      act_rules=None, param_rules=None):
+    def prefill_step(params, batch):
+        with _maybe_ctx(mesh, act_rules, param_rules):
+            return forward_prefill(params, cfg, batch, chunk=chunk,
+                                   unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg, ctx_len, *, unroll=False, mesh=None,
+                     act_rules=None, param_rules=None, with_cond=False,
+                     dynamic_ctx=False):
+    """One decode step at static cache capacity `ctx_len`.
+
+    With dynamic_ctx=True the step takes an extra traced `cur_len` scalar
+    (true filled length) so the serve engine compiles once per capacity
+    bucket instead of once per context length."""
+    def decode_step(params, caches, token, cur_len=None, cond=None):
+        with _maybe_ctx(mesh, act_rules, param_rules):
+            return forward_decode(params, cfg, token, caches, ctx_len,
+                                  cond=cond, unroll=unroll, cur_len=cur_len)
+    if dynamic_ctx:
+        if with_cond:
+            return lambda p, c, t, cur, cond: decode_step(p, c, t, cur, cond)
+        return lambda p, c, t, cur: decode_step(p, c, t, cur)
+    if not with_cond:
+        return lambda params, caches, token: decode_step(params, caches, token)
+    return lambda p, c, t, cond: decode_step(p, c, t, None, cond)

@@ -1,0 +1,192 @@
+"""Checkpoint/restore + fault-tolerance control-plane tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (Checkpointer, ElasticPlan, FaultToleranceConfig,
+                              TrainingSupervisor, latest_step, restore_pytree,
+                              save_pytree)
+from repro.checkpoint.fault import StragglerMonitor, is_restartable
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": {"a": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(3), jnp.float64)},
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": [jnp.ones((2, 2), jnp.bfloat16), jnp.zeros(5)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 100)
+    restored, step = restore_pytree(tree, str(tmp_path))
+    assert step == 100
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=10, keep=2, async_save=False)
+    tree = _tree()
+    for s in (10, 20, 30):
+        ck.save(tree, s)
+    assert latest_step(str(tmp_path)) == 30
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2                      # retention pruned step 10
+
+
+def test_async_save_then_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path), every=1, keep=3, async_save=True)
+    tree = _tree(1)
+    ck.save(tree, 5)
+    ck.wait()
+    restored, step = ck.restore_latest(tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]["a"]),
+                                  np.asarray(tree["w"]["a"]))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 1)
+    bad = dict(tree)
+    bad["w"] = {"a": jnp.zeros((5, 8)), "b": tree["w"]["b"]}
+    with pytest.raises(ValueError):
+        restore_pytree(bad, str(tmp_path))
+
+
+def test_atomic_tmp_never_visible(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 3)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_training_resume_equivalence(tmp_path):
+    """Checkpoint mid-run, restore, continue: must match the uninterrupted
+    trajectory bit-for-bit (data pipeline is a pure function of step)."""
+    from repro.configs import smoke_config
+    from repro.data.tokens import SyntheticLM, TokenPipeline
+    from repro.models.params import init_params
+    from repro.models.transformer import build_param_defs
+    from repro.train.steps import init_train_state, make_train_step
+
+    cfg = smoke_config("qwen3-0.6b").scaled(vocab=64, d_model=32, d_ff=64)
+    params = init_params(build_param_defs(cfg), jax.random.PRNGKey(0),
+                         cfg.param_dtype)
+    opt = init_train_state(params)
+    step_fn = jax.jit(make_train_step(cfg, n_micro=1, remat="none", chunk=8,
+                                      lr=1e-3))
+    pipe = TokenPipeline(SyntheticLM(cfg.vocab, 16, seed=4), global_batch=4)
+
+    def run(params, opt, s0, s1):
+        for s in range(s0, s1):
+            b = pipe.batch_at(s)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, _ = step_fn(params, opt, batch)
+        return params, opt
+
+    # uninterrupted
+    pA, oA = run(params, opt, 0, 6)
+    # interrupted at 3 + restore
+    pB, oB = run(params, opt, 0, 3)
+    save_pytree({"p": pB, "o": oB}, str(tmp_path), 3)
+    restored, _ = restore_pytree({"p": pB, "o": oB}, str(tmp_path))
+    pB, oB = run(restored["p"], restored["o"], 3, 6)
+    for a, b in zip(jax.tree_util.tree_leaves(pA),
+                    jax.tree_util.tree_leaves(pB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ fault control
+def test_is_restartable_classification():
+    assert is_restartable(RuntimeError("DEADLINE_EXCEEDED: collective timed out"))
+    assert is_restartable(RuntimeError("slice health check failed"))
+    assert not is_restartable(ValueError("shape mismatch"))
+    assert not is_restartable(KeyboardInterrupt())
+
+
+def test_supervisor_recovers_from_injected_failures(tmp_path):
+    """Inject a restartable failure at steps 4 and 7; supervisor must restore
+    from the latest checkpoint and complete all 10 steps."""
+    saved = {}
+    state = {"x": 0}
+    fail_at = {4, 7}
+
+    def save_fn(st, step):
+        saved[step] = dict(st)
+
+    def restore_fn():
+        step = max(saved)
+        return dict(saved[step]), step
+
+    calls = []
+
+    def step_fn(st, step):
+        calls.append(step)
+        if step in fail_at:
+            fail_at.discard(step)
+            raise RuntimeError("UNAVAILABLE: pod preempted")
+        return {"x": st["x"] + 1}
+
+    sup = TrainingSupervisor(FaultToleranceConfig(max_restarts=5),
+                             save_fn, restore_fn, save_every=2,
+                             sleep_fn=lambda s: None)
+    save_fn(state, 0)
+    final, step = sup.run(step_fn, state, 0, 10)
+    assert step == 10
+    assert final["x"] == 10
+    assert sup.restarts == 2
+
+
+def test_supervisor_exhausts_restart_budget():
+    def step_fn(st, step):
+        raise RuntimeError("collective timeout on ICI")
+
+    sup = TrainingSupervisor(FaultToleranceConfig(max_restarts=2),
+                             lambda s, i: None, lambda: ({}, 0),
+                             sleep_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run(step_fn, {}, 0, 5)
+
+
+def test_supervisor_reraises_bugs():
+    def step_fn(st, step):
+        raise ValueError("this is a bug, not a fault")
+
+    sup = TrainingSupervisor(FaultToleranceConfig(), lambda s, i: None,
+                             lambda: ({}, 0), sleep_fn=lambda s: None)
+    with pytest.raises(ValueError):
+        sup.run(step_fn, {}, 0, 5)
+
+
+def test_elastic_plan_rescale():
+    plan = ElasticPlan(pods_total=2, pods_alive=2, data_per_pod=16,
+                       model_dim=16, global_batch=256, base_micro=4)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.n_micro == 4
+    small = plan.shrink(1)
+    assert small.mesh_shape == (16, 16)
+    assert small.mesh_axes == ("data", "model")
+    assert small.n_micro == 8                      # same global batch
+    assert small.micro_batch * small.n_micro == 256
+    with pytest.raises(RuntimeError):
+        small.shrink(1)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, ewma=0.5)
+    assert not mon.observe(1.0)
+    assert not mon.observe(1.1)
+    assert mon.observe(5.0)                        # straggler flagged
+    assert mon.n_flagged == 1
+    # EWMA not poisoned by the outlier
+    assert mon.mean < 1.2

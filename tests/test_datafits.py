@@ -1,0 +1,94 @@
+"""Datafit unit tests: gradients vs autodiff, Lipschitz constants, Gram path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.datafits import (Logistic, MultitaskQuadratic, Quadratic,
+                                 QuadraticSVC)
+
+
+def _data(n=40, p=25, seed=0, tasks=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    if tasks:
+        y = jnp.asarray(rng.standard_normal((n, tasks)))
+    else:
+        y = jnp.asarray(rng.standard_normal(n))
+    return X, y
+
+
+@pytest.mark.parametrize("datafit,make_y", [
+    (Quadratic(), lambda y: y),
+    (Logistic(), lambda y: jnp.sign(y)),
+    (QuadraticSVC(), lambda y: jnp.sign(y)),
+], ids=["quadratic", "logistic", "svc"])
+def test_raw_grad_is_autodiff_gradient(datafit, make_y):
+    X, y = _data()
+    y = make_y(y)
+    Xb = X @ jnp.asarray(np.random.default_rng(1).standard_normal(X.shape[1]))[:X.shape[1]] \
+        if False else jnp.asarray(np.random.default_rng(1).standard_normal(X.shape[0]))
+    grad = jax.grad(lambda z: datafit.value(z, y))(Xb)
+    assert np.allclose(grad, datafit.raw_grad(Xb, y), atol=1e-10)
+
+
+def test_multitask_raw_grad():
+    X, Y = _data(tasks=5)
+    Z = jnp.asarray(np.random.default_rng(2).standard_normal(Y.shape))
+    df = MultitaskQuadratic()
+    grad = jax.grad(lambda z: df.value(z, Y))(Z)
+    assert np.allclose(grad, df.raw_grad(Z, Y), atol=1e-10)
+
+
+@pytest.mark.parametrize("datafit", [Quadratic(), Logistic()],
+                         ids=["quadratic", "logistic"])
+def test_lipschitz_bounds_coordinate_curvature(datafit):
+    """L_j must upper bound |nabla_j f(x + h e_j) - nabla_j f(x)| / h."""
+    X, y = _data(n=30, p=10, seed=3)
+    if isinstance(datafit, Logistic):
+        y = jnp.sign(y)
+    L = np.asarray(datafit.lipschitz(X))
+    rng = np.random.default_rng(4)
+    beta = jnp.asarray(rng.standard_normal(X.shape[1]) * 0.3)
+
+    def grad_j(b, j):
+        Xb = X @ b
+        return float((X[:, j] @ datafit.raw_grad(Xb, y)))
+
+    for j in range(X.shape[1]):
+        for h in (1e-3, 0.1, 1.0):
+            g0 = grad_j(beta, j)
+            g1 = grad_j(beta.at[j].add(h), j)
+            assert abs(g1 - g0) <= L[j] * h * (1 + 1e-6), (j, h)
+
+
+def test_quadratic_gram_consistency():
+    """Gram-path gradient G beta - c == X^T raw_grad(X beta)."""
+    X, y = _data(n=50, p=12, seed=5)
+    df = Quadratic()
+    G, c = df.make_gram(X, y)
+    beta = jnp.asarray(np.random.default_rng(6).standard_normal(12))
+    g_gram = G @ beta - c
+    g_direct = X.T @ df.raw_grad(X @ beta, y)
+    assert np.allclose(g_gram, g_direct, atol=1e-10)
+
+
+def test_svc_gram_consistency():
+    X, y = _data(n=20, p=30, seed=7)           # X here plays Z^T (d x n)
+    df = QuadraticSVC()
+    G, c = df.make_gram(X, y)
+    alpha = jnp.asarray(np.abs(np.random.default_rng(8).standard_normal(30)))
+    # full gradient of 0.5||X alpha||^2 - sum(alpha) = X^T X alpha - 1
+    g_gram = G @ alpha - c
+    g_direct = X.T @ df.raw_grad(X @ alpha, y) + df.grad_offset(30, X.dtype)
+    assert np.allclose(g_gram, g_direct, atol=1e-10)
+
+
+def test_multitask_gram_consistency():
+    X, Y = _data(n=40, p=10, seed=9, tasks=4)
+    df = MultitaskQuadratic()
+    G, C = df.make_gram(X, Y)
+    W = jnp.asarray(np.random.default_rng(10).standard_normal((10, 4)))
+    g_gram = G @ W - C
+    g_direct = X.T @ df.raw_grad(X @ W, Y)
+    assert np.allclose(g_gram, g_direct, atol=1e-10)

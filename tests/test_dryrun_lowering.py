@@ -1,0 +1,82 @@
+"""Mini dry-run lowering tests (subprocess; 8 forced host devices).
+
+Exercises the exact build_cell -> jit(in_shardings) -> lower -> compile path
+of the production dry-run on a 2x4 mesh with reduced configs/shapes, so
+sharding regressions fail in CI without needing the 512-device run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.configs import smoke_config
+    from repro.launch.specs import build_cell
+    from repro.models.config import ShapeCfg
+    from repro.roofline.hlo import collective_bytes
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ARCHS = __ARCHS__
+    shapes = [ShapeCfg("train_4k", "train", 128, 8, n_micro=2),
+              ShapeCfg("prefill_32k", "prefill", 128, 8),
+              ShapeCfg("decode_32k", "decode", 128, 8)]
+    for arch in ARCHS:
+        cfg = smoke_config(arch).scaled(
+            d_model=128, n_heads=8, n_kv=4, head_dim=16, d_ff=256, vocab=512)
+        if cfg.name == "zamba2-2.7b":
+            cfg = cfg.scaled(n_kv=8)       # MHA shared-attn reduced
+        if cfg.name == "xlstm-350m":
+            cfg = cfg.scaled(n_heads=4, n_kv=4)
+        for shape in shapes:
+            cell = build_cell(cfg, shape, mesh, chunk=64)
+            jitted = jax.jit(cell.step, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            coll, _ = collective_bytes(compiled.as_text())
+            assert ca.get("flops", 0) > 0, (arch, shape.name)
+            assert ma.temp_size_in_bytes >= 0
+            print(f"OK {arch} {shape.name} flops={ca.get('flops'):.3g} "
+                  f"coll={coll:.3g}")
+    print("ALL_OK")
+""")
+
+
+def _run(archs):
+    script = _SCRIPT.replace("__ARCHS__", repr(archs))
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=1200,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(__file__)) or ".")
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "ALL_OK" in r.stdout
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_lowering_dense_and_moe():
+    out = _run(["qwen3-0.6b", "grok-1-314b"])
+    assert out.count("OK ") == 6
+
+
+@pytest.mark.slow
+def test_lowering_hybrid_and_recurrent():
+    out = _run(["zamba2-2.7b", "xlstm-350m"])
+    assert out.count("OK ") == 6
+
+
+@pytest.mark.slow
+def test_lowering_modality_stubs():
+    out = _run(["musicgen-medium", "internvl2-1b"])
+    assert out.count("OK ") == 6

@@ -1,0 +1,111 @@
+"""Estimator-facade + regularization-path tests (paper Fig. 1 reproduction)."""
+import numpy as np
+import pytest
+
+from repro.core.estimators import (ElasticNet, Lasso, LinearSVC,
+                                   MCPRegression, MultiTaskLasso,
+                                   SparseLogisticRegression)
+from repro.core.path import reg_path, support_metrics
+from repro.core.penalties import MCP, L1
+from repro.core.api import lambda_max
+from repro.data.synth import (make_classification, make_correlated_design,
+                              make_multitask)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_correlated_design(n=250, p=500, n_nonzero=20, seed=0)
+
+
+def test_lasso_estimator_fit_predict(data):
+    X, y, _ = data
+    import jax.numpy as jnp
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 20
+    est = Lasso(alpha=lam, tol=1e-8).fit(X, y)
+    assert est.converged_
+    assert est.coef_.shape == (500,)
+    assert est.score(X, y) > 0.8
+    assert np.isfinite(est.predict(X)).all()
+
+
+def test_mcp_estimator_sparser_than_lasso(data):
+    X, y, beta_true = data
+    import jax.numpy as jnp
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 8
+    l1 = Lasso(alpha=lam, tol=1e-8).fit(X, y)
+    mcp = MCPRegression(alpha=lam, gamma=3.0, tol=1e-8).fit(X, y)
+    assert np.sum(mcp.coef_ != 0) <= np.sum(l1.coef_ != 0)
+    m = support_metrics(mcp.coef_, beta_true)
+    l = support_metrics(l1.coef_, beta_true)
+    assert m["f1"] >= l["f1"]
+
+
+def test_elastic_net_estimator(data):
+    X, y, _ = data
+    import jax.numpy as jnp
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 20
+    est = ElasticNet(alpha=lam, l1_ratio=0.7, tol=1e-8).fit(X, y)
+    assert est.converged_ and est.score(X, y) > 0.7
+
+
+def test_logreg_estimator_accuracy():
+    X, y, _ = make_classification(n=300, p=400, n_nonzero=15, seed=1)
+    import jax.numpy as jnp
+    from repro.core.datafits import Logistic
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y), Logistic()) / 20
+    est = SparseLogisticRegression(alpha=lam, tol=1e-7).fit(X, y)
+    assert est.score(X, y) > 0.85
+    proba = est.predict_proba(X)
+    assert proba.shape == (300, 2)
+    assert np.allclose(proba.sum(-1), 1.0)
+
+
+def test_svc_estimator():
+    X, y, _ = make_classification(n=120, p=40, n_nonzero=10, seed=2)
+    est = LinearSVC(C=1.0, tol=1e-6).fit(X, y)
+    assert est.score(X, y) > 0.9
+    assert est.dual_coef_.shape == (120,)
+    assert (est.dual_coef_ >= -1e-9).all() and (est.dual_coef_ <= 1 + 1e-9).all()
+
+
+def test_multitask_estimator():
+    X, Y, W = make_multitask(n=120, p=200, n_tasks=5, n_nonzero=10, seed=3)
+    import jax.numpy as jnp
+    from repro.core.datafits import MultitaskQuadratic
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(Y), MultitaskQuadratic()) / 10
+    est = MultiTaskLasso(alpha=lam, tol=1e-7).fit(X, Y)
+    assert est.coef_.shape == (200, 5)
+    true_rows = set(np.flatnonzero(np.linalg.norm(W, axis=1)))
+    got_rows = set(np.flatnonzero(np.linalg.norm(est.coef_, axis=1)))
+    assert true_rows <= got_rows
+
+
+# ------------------------------------------------------------------- paths
+def test_reg_path_warm_start_monotone_nnz(data):
+    X, y, _ = data
+    res = reg_path(X, y, L1(1.0), n_lambdas=8, lambda_min_ratio=0.05,
+                   tol=1e-7)
+    assert res.betas.shape[0] == 8
+    # sparsity decreases (weakly) along the decreasing-lambda path
+    assert res.nnzs[0] <= res.nnzs[-1]
+    assert res.nnzs[0] == 0                      # at lambda_max beta = 0
+    assert np.all(res.kkts <= 1e-6)
+
+
+def test_reg_path_mcp_recovers_support_somewhere(data):
+    """Fig. 1: along the MCP path there is a lambda with exact support
+    recovery; the Lasso path never achieves it (bias -> over-selection)."""
+    X, y, beta_true = data
+    mfn = lambda lam, beta: support_metrics(beta, beta_true)
+    path_mcp = reg_path(X, y, MCP(1.0, 3.0), n_lambdas=12,
+                        lambda_min_ratio=0.02, tol=1e-7, metric_fn=mfn)
+    path_l1 = reg_path(X, y, L1(1.0), n_lambdas=12, lambda_min_ratio=0.02,
+                       tol=1e-7, metric_fn=mfn)
+    assert any(m["exact_support"] for m in path_mcp.metrics)
+    best_mcp = max(m["f1"] for m in path_mcp.metrics)
+    best_l1 = max(m["f1"] for m in path_l1.metrics)
+    assert best_mcp >= best_l1
+    # estimation error: MCP's best beats Lasso's best (lower bias)
+    err_mcp = min(m["est_err"] for m in path_mcp.metrics)
+    err_l1 = min(m["est_err"] for m in path_l1.metrics)
+    assert err_mcp < err_l1

@@ -1,0 +1,209 @@
+"""Penalty unit tests: prox maps against their defining property, subdiff
+scores against hand-derived formulas, and the paper's propositions (7, Eq. 26).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1,
+                                  BlockMCP, Box, soft_threshold)
+
+PENALTIES_1D = [
+    L1(0.7),
+    L1L2(0.7, 0.5),
+    MCP(0.7, 3.0),
+    SCAD(0.7, 3.7),
+    L05(0.3),
+    L23(0.3),
+    Box(1.5),
+]
+
+
+def _value_elementwise(penalty, z):
+    import jax
+    return np.asarray(jax.vmap(lambda zz: penalty.value(zz[None]))(
+        jnp.asarray(z)))
+
+
+def brute_force_prox(penalty, x, step, lo=-20.0, hi=20.0, n=400_001):
+    """argmin_z 0.5 (z-x)^2 + step * g(z) on a dense grid (the ground truth)."""
+    if isinstance(penalty, Box):
+        lo, hi = 0.0, penalty.C
+    z = np.linspace(lo, hi, n)
+    vals = 0.5 * (z - x) ** 2 + step * _value_elementwise(penalty, z)
+    return z[np.argmin(vals)]
+
+
+@pytest.mark.parametrize("penalty", PENALTIES_1D, ids=lambda p: type(p).__name__)
+@pytest.mark.parametrize("x", [-4.0, -1.1, -0.3, 0.0, 0.2, 0.9, 2.5, 6.0])
+def test_prox_is_global_minimizer(penalty, x):
+    """prox(x, step) must minimize 0.5(z-x)^2 + step*g(z) (grid check)."""
+    step = 0.8
+    if isinstance(penalty, MCP):
+        step = min(step, 0.9 * penalty.gamma)       # alpha-semi-convex range
+    if isinstance(penalty, SCAD):
+        step = min(step, 0.9 * (penalty.gamma - 1))
+    got = float(penalty.prox(jnp.asarray(x), step))
+    want = brute_force_prox(penalty, x, step)
+
+    def obj(z):
+        return 0.5 * (z - x) ** 2 + step * float(penalty.value(jnp.asarray([z])))
+    assert obj(got) <= obj(want) + 1e-6, (got, want)
+
+
+@pytest.mark.parametrize("penalty", PENALTIES_1D, ids=lambda p: type(p).__name__)
+def test_prox_zero_step_identity(penalty):
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.7, 3.0])
+    out = penalty.prox(x, 0.0)
+    if isinstance(penalty, Box):                  # projection, not identity
+        assert np.allclose(out, np.clip(x, 0, penalty.C))
+    else:
+        assert np.allclose(out, x, atol=1e-12)
+
+
+def test_soft_threshold():
+    x = jnp.asarray([-3.0, -0.5, 0.0, 0.5, 3.0])
+    out = soft_threshold(x, 1.0)
+    assert np.allclose(out, [-2.0, 0.0, 0.0, 0.0, 2.0])
+
+
+def test_l1_subdiff_dist():
+    pen = L1(1.0)
+    beta = jnp.asarray([0.0, 0.0, 2.0, -1.0])
+    grad = jnp.asarray([0.5, 1.5, -1.0, 1.0])
+    # at 0: max(|g| - lam, 0); away: |g + lam sign(beta)|
+    want = [0.0, 0.5, 0.0, 0.0]
+    assert np.allclose(pen.subdiff_dist(grad, beta), want)
+
+
+def test_mcp_subdiff_dist_regions():
+    pen = MCP(1.0, 3.0)
+    beta = jnp.asarray([0.0, 1.0, 5.0])          # zero / inner / flat
+    grad = jnp.asarray([1.2, -0.5, 0.3])
+    at0 = max(abs(1.2) - 1.0, 0.0)
+    mid = abs(-0.5 + 1.0 - 1.0 / 3.0)            # g + lam*sign - beta/gamma
+    flat = abs(0.3)
+    assert np.allclose(pen.subdiff_dist(grad, beta), [at0, mid, flat], atol=1e-12)
+
+
+def test_mcp_value_matches_paper():
+    """Proposition 7's piecewise definition."""
+    pen = MCP(2.0, 3.0)
+    xs = np.asarray([0.0, 1.0, 5.0, 7.0])
+    def mcp1(x):
+        ax = abs(x)
+        if ax <= 3.0 * 2.0:
+            return 2.0 * ax - x ** 2 / 6.0
+        return 0.5 * 3.0 * 4.0
+    want = sum(mcp1(x) for x in xs)
+    assert np.allclose(float(pen.value(jnp.asarray(xs))), want)
+
+
+def test_mcp_alpha_semiconvexity():
+    """Prop. 7: gamma > 1/L  =>  MCP/L + alpha/2 x^2 convex, alpha = (1+1/(gamma L))/2."""
+    lam, gamma, L = 1.0, 3.0, 1.0
+    pen = MCP(lam, gamma)
+    alpha = 0.5 * (1 + 1 / (gamma * L))
+    xs = np.linspace(-8, 8, 4001)
+    h = np.asarray([float(pen.value(jnp.asarray([x]))) / L + alpha * x ** 2 / 2
+                    for x in xs])
+    second = np.diff(h, 2)
+    assert second.min() > -1e-8                   # convex (discrete 2nd diff >= 0)
+
+
+def test_l05_prox_threshold_boundary():
+    """Appendix C Eq. 26: prox_{step*lam*sqrt(.)} is 0 exactly on
+    [-1.5 (step lam)^{2/3}, 1.5 (step lam)^{2/3}]."""
+    lam, step = 0.8, 1.3
+    pen = L05(lam)
+    thresh = 1.5 * (step * lam) ** (2.0 / 3.0)
+    inside = jnp.asarray([0.0, 0.5 * thresh, 0.999 * thresh])
+    outside = jnp.asarray([1.05 * thresh, 2 * thresh, 10.0])
+    assert np.all(np.asarray(pen.prox(inside, step)) == 0.0)
+    assert np.all(np.asarray(pen.prox(outside, step)) > 0.0)
+
+
+def test_l05_prox_fixed_point_property():
+    """For x outside the dead zone, z = prox(x) solves z - x + step*lam/(2 sqrt z) = 0."""
+    lam, step = 0.5, 1.0
+    pen = L05(lam)
+    x = jnp.asarray([2.0, 3.5, 10.0])
+    z = np.asarray(pen.prox(x, step))
+    resid = z - np.asarray(x) + step * lam / (2.0 * np.sqrt(z))
+    assert np.allclose(resid, 0.0, atol=1e-6)
+
+
+def test_box_prox_and_support():
+    pen = Box(2.0)
+    x = jnp.asarray([-1.0, 0.5, 3.0])
+    assert np.allclose(pen.prox(x, 0.7), [0.0, 0.5, 2.0])
+    beta = jnp.asarray([0.0, 1.0, 2.0])
+    assert np.array_equal(np.asarray(pen.generalized_support(beta)),
+                          [False, True, False])
+
+
+def test_box_subdiff_dist():
+    pen = Box(1.0)
+    beta = jnp.asarray([0.0, 0.0, 0.5, 1.0, 1.0])
+    grad = jnp.asarray([1.0, -1.0, 0.3, -2.0, 2.0])
+    # at 0 normal cone (-inf,0]: dist(-g, cone)=max(-g,0)... -(-1)=1 violates
+    want = [0.0, 1.0, 0.3, 0.0, 2.0]
+    assert np.allclose(pen.subdiff_dist(grad, beta), want)
+
+
+def test_block_l1_prox_group_shrink():
+    """Proposition 18: prox of phi(||.||) = radial shrinkage."""
+    pen = BlockL1(1.0)
+    x = jnp.asarray([[3.0, 4.0], [0.1, 0.1]])    # norms 5, ~0.14
+    out = np.asarray(pen.prox(x, 1.0))
+    assert np.allclose(out[0], np.asarray([3.0, 4.0]) * (4.0 / 5.0))
+    assert np.allclose(out[1], 0.0)
+
+
+def test_block_mcp_prox_matches_scalar_on_norm():
+    pen = BlockMCP(1.0, 3.0)
+    scalar = MCP(1.0, 3.0)
+    x = jnp.asarray([[3.0, 4.0]])
+    out = np.asarray(pen.prox(x, 0.9))
+    want_norm = float(scalar.prox(jnp.asarray(5.0), 0.9))
+    assert np.allclose(np.linalg.norm(out), want_norm, rtol=1e-6)
+    assert np.allclose(out / np.linalg.norm(out), np.asarray([[0.6, 0.8]]))
+
+
+@pytest.mark.parametrize("penalty", [L1(0.5), MCP(0.5, 3.0), SCAD(0.5, 3.7)],
+                         ids=lambda p: type(p).__name__)
+def test_subdiff_dist_zero_at_prox_fixed_point(penalty):
+    """If beta = prox(beta - grad), then dist(-grad, dg(beta)) == 0."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        z = rng.normal() * 3
+        beta = float(penalty.prox(jnp.asarray(z), 1.0))
+        grad = z and (z - beta)                   # beta = prox(beta - (-(beta-z)))
+        grad = -(z - beta)
+        d = float(penalty.subdiff_dist(jnp.asarray([grad]),
+                                       jnp.asarray([beta]))[0])
+        assert d < 1e-6, (z, beta, grad, d)
+
+
+def test_l23_prox_stationarity():
+    """z = prox_{t*lam|.|^{2/3}}(x) != 0 satisfies z - x + (2/3) t lam z^{-1/3} = 0."""
+    pen = L23(0.6)
+    step = 1.1
+    x = jnp.asarray([2.0, 3.5, 10.0, -5.0])
+    z = np.asarray(pen.prox(x, step))
+    nz = z != 0
+    resid = z[nz] - np.asarray(x)[nz] + step * 0.6 * (2.0 / 3.0) * \
+        np.sign(z[nz]) / np.cbrt(np.abs(z[nz]))
+    assert np.allclose(resid, 0.0, atol=1e-8)
+
+
+def test_l23_solver_recovers_support():
+    import jax.numpy as jnp2
+    from repro.core import Quadratic, solve
+    from repro.core.api import lambda_max
+    from repro.data.synth import make_correlated_design
+    X, y, bt = make_correlated_design(n=150, p=300, n_nonzero=10, seed=0)
+    X, y = jnp2.asarray(X), jnp2.asarray(y)
+    res = solve(X, y, Quadratic(), L23(lambda_max(X, y) / 10), tol=1e-8)
+    assert res.converged
+    assert set(np.flatnonzero(np.asarray(res.beta))) == set(np.flatnonzero(bt))

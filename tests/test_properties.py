@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core.cd import cd_epoch_gram
+from repro.core.datafits import Quadratic
+from repro.core.penalties import MCP, SCAD, L05, L1, L1L2, Box
+
+pytestmark = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                reason="hypothesis not installed")
+
+finite = st.floats(min_value=-50.0, max_value=50.0,
+                   allow_nan=False, allow_infinity=False)
+pos = st.floats(min_value=1e-3, max_value=10.0,
+                allow_nan=False, allow_infinity=False)
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(x=finite, y=finite, lam=pos, step=pos)
+    def test_convex_prox_nonexpansive(x, y, lam, step):
+        """prox of a convex penalty is 1-Lipschitz (firm nonexpansiveness)."""
+        for pen in (L1(lam), L1L2(lam, 0.5), Box(lam)):
+            px = float(pen.prox(jnp.asarray(x), step))
+            py = float(pen.prox(jnp.asarray(y), step))
+            assert abs(px - py) <= abs(x - y) + 1e-9
+
+    @settings(max_examples=200, deadline=None)
+    @given(x=finite, lam=pos, step=pos)
+    def test_prox_moves_toward_zero_for_symmetric_penalties(x, lam, step):
+        """For even, increasing-on-R+ penalties: |prox(x)| <= |x|, sign kept."""
+        gamma = 3.0
+        for pen in (L1(lam), MCP(lam, max(gamma, step * 1.2)),
+                    SCAD(lam, max(3.7, 1.2 * (step + 1))), L05(lam)):
+            p = float(pen.prox(jnp.asarray(x), step))
+            assert abs(p) <= abs(x) + 1e-9
+            assert p == 0.0 or np.sign(p) == np.sign(x)
+
+    @settings(max_examples=100, deadline=None)
+    @given(x=finite, lam=pos, step=st.floats(min_value=1e-3, max_value=2.0))
+    def test_mcp_prox_defining_inclusion(x, lam, step):
+        """z = prox_{step*MCP}(x) must satisfy the stationarity inclusion
+        (z - x)/step + dMCP(z) ∋ 0 in the semi-convex range gamma > step."""
+        gamma = 2.5 * max(step, 1.0)
+        pen = MCP(lam, gamma)
+        z = float(pen.prox(jnp.asarray(x), step))
+        if z == 0.0:
+            # 0 in (0-x)/step + lam*[-1,1] => |x| <= step*lam
+            assert abs(x) <= step * lam + 1e-6
+        elif abs(z) < gamma * lam:
+            g = lam * np.sign(z) - z / gamma
+            assert abs((z - x) / step + g) < 1e-5
+        else:
+            assert abs((z - x) / step) < 1e-5        # flat region: g' = 0
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           lam=st.floats(min_value=0.01, max_value=0.5))
+    def test_cd_epoch_never_increases_gram_objective(seed, lam):
+        rng = np.random.default_rng(seed)
+        K, n = 12, 36
+        X = rng.standard_normal((n, K))
+        y = rng.standard_normal(n)
+        G = jnp.asarray(X.T @ X / n)
+        c = jnp.asarray(X.T @ y / n)
+        L = jnp.diag(G)
+        pen = L1(lam)
+        beta = jnp.asarray(rng.standard_normal(K) * 0.5)
+        q = G @ beta
+
+        def obj(b, qq):
+            return float(0.5 * b @ qq - c @ b + pen.value(b))
+
+        prev = obj(beta, q)
+        for _ in range(3):
+            beta, q = cd_epoch_gram(G, c, beta, q, L, pen)
+            cur = obj(beta, q)
+            assert cur <= prev + 1e-10
+            prev = cur
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_generalized_support_matches_nonzeros(seed):
+        rng = np.random.default_rng(seed)
+        beta = jnp.asarray(rng.standard_normal(30) * (rng.random(30) < 0.4))
+        for pen in (L1(0.3), MCP(0.3, 3.0), SCAD(0.3, 3.7), L05(0.3)):
+            gs = np.asarray(pen.generalized_support(beta))
+            assert np.array_equal(gs, np.asarray(beta) != 0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           C=st.floats(min_value=0.1, max_value=5.0))
+    def test_box_prox_idempotent_feasible(seed, C):
+        rng = np.random.default_rng(seed)
+        pen = Box(C)
+        x = jnp.asarray(rng.standard_normal(20) * 3)
+        p1 = pen.prox(x, 1.0)
+        p2 = pen.prox(p1, 1.0)
+        assert np.allclose(p1, p2)                   # projection idempotent
+        assert float(jnp.min(p1)) >= 0.0 and float(jnp.max(p1)) <= C
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           frac=st.floats(min_value=3.0, max_value=50.0))
+    def test_solver_kkt_below_tol_when_converged(seed, frac):
+        from repro.core.api import lambda_max, lasso
+        rng = np.random.default_rng(seed)
+        X = jnp.asarray(rng.standard_normal((60, 120)))
+        y = jnp.asarray(rng.standard_normal(60))
+        lam = lambda_max(X, y) / frac
+        res = lasso(X, y, lam, tol=1e-8)
+        if res.converged:
+            assert res.kkt <= 1e-8
+        # objective history is monotone regardless
+        assert all(b <= a + 1e-10 for a, b in
+                   zip(res.obj_history, res.obj_history[1:]))

@@ -1,0 +1,83 @@
+"""Roofline machinery tests: HLO collective parser + model-FLOPs math."""
+import numpy as np
+
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.model_math import model_flops, param_counts
+from repro.configs import get_config
+from repro.models.config import SHAPES
+
+
+HLO_SNIPPET = """
+ENTRY %main {
+  %ag = f32[8,256]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%y), replica_groups=[1,16]<=[16], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[4,4]<=[16], dimensions={0}
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), replica_groups=[2,8]<=[16], dimensions={0}
+  %cp = f32[128]{0} collective-permute(%v), source_target_pairs={{0,1},{1,0}}
+  %tup = (f32[16]{0}, f32[16]{0}) all-reduce(%p, %q), replica_groups=[1,4]<=[4], to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_kinds_and_groups():
+    colls = parse_collectives(HLO_SNIPPET)
+    kinds = [c["op"] for c in colls]
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute", "all-reduce"]
+    ag, ar, rs, a2a, cp, tup = colls
+    assert ag["group"] == 16 and ag["bytes"] == 8 * 256 * 4
+    assert ar["group"] == 16 and ar["bytes"] == 1024 * 2
+    assert rs["group"] == 4
+    assert cp["bytes"] == 128 * 4
+    assert tup["bytes"] == 2 * 16 * 4                 # tuple shapes summed
+
+
+def test_collective_ring_formulas():
+    colls = parse_collectives(HLO_SNIPPET)
+    ag, ar, rs, a2a, cp, _ = colls
+    assert np.isclose(ag["link_bytes"], ag["bytes"] * 15 / 16)
+    assert np.isclose(ar["link_bytes"], 2 * ar["bytes"] * 15 / 16)
+    assert np.isclose(rs["link_bytes"], rs["bytes"] * 3)
+    assert np.isclose(a2a["link_bytes"], a2a["bytes"] * 7 / 8)
+    assert np.isclose(cp["link_bytes"], cp["bytes"])
+    total, by_op = collective_bytes(HLO_SNIPPET)
+    assert total == sum(c["link_bytes"] for c in colls)
+    assert by_op["all-reduce"]["count"] == 2
+
+
+def test_no_collectives_in_plain_hlo():
+    total, by_op = collective_bytes("%dot = f32[8,8] dot(%a, %b)")
+    assert total == 0 and by_op == {}
+
+
+# ------------------------------------------------------------- model math
+def test_model_flops_dense_6nd():
+    cfg = get_config("qwen3-0.6b")
+    pc = param_counts(cfg)
+    shape = SHAPES["train_4k"]
+    mf = model_flops(cfg, shape)
+    tokens = shape.global_batch * shape.seq_len
+    assert mf == 6.0 * pc["active"] * tokens
+    # dense: active == body (no expert discount)
+    assert pc["active"] == pc["body"]
+    # qwen3-0.6B: body (non-embedding) params ~0.4-0.6B
+    assert 3e8 < pc["body"] < 7e8
+
+
+def test_model_flops_moe_active_fraction():
+    cfg = get_config("grok-1-314b")
+    pc = param_counts(cfg)
+    assert pc["expert"] > 0
+    # top-2 of 8: active expert fraction = 1/4
+    expected = pc["body"] - pc["expert"] + pc["expert"] * (2 / 8)
+    assert np.isclose(pc["active"], expected)
+    assert pc["total"] > 250e9                      # ~314B total
+    assert pc["active"] < 100e9                     # far fewer active
+
+
+def test_decode_flops_per_token():
+    cfg = get_config("qwen3-0.6b")
+    shape = SHAPES["decode_32k"]
+    mf = model_flops(cfg, shape)
+    pc = param_counts(cfg)
+    assert mf == 2.0 * pc["active"] * shape.global_batch

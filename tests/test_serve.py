@@ -1,0 +1,112 @@
+"""Serving tests: prefill/decode equivalence vs teacher-forced full forward,
+bucketed dynamic-context decode, cache handoff for every mixer family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.params import init_params
+from repro.models.transformer import build_param_defs, forward_prefill
+from repro.serve.engine import ServeEngine, sample_tokens
+
+# one representative arch per mixer family (attention / swa+softcap /
+# mamba-hybrid / xlstm / cross-attn codebook)
+EQUIV_ARCHS = ["qwen3-0.6b", "gemma2-2b", "internvl2-1b"]
+LOOSE_ARCHS = ["zamba2-2.7b", "xlstm-350m", "musicgen-medium"]
+
+
+def _setup(arch, seed=0, B=2, S=16):
+    cfg = smoke_config(arch)
+    params = init_params(build_param_defs(cfg), jax.random.PRNGKey(seed),
+                         cfg.param_dtype)
+    rng = np.random.default_rng(seed)
+    if cfg.n_codebooks:
+        toks = rng.integers(0, cfg.vocab, (B, cfg.n_codebooks, S))
+    else:
+        toks = rng.integers(0, cfg.vocab, (B, S))
+    kw = {}
+    if cfg.vision_tokens:
+        kw["vision"] = 0.1 * jnp.ones((B, cfg.vision_tokens, cfg.d_model),
+                                      jnp.dtype(cfg.act_dtype))
+    if cfg.cross_d:
+        kw["cond"] = 0.1 * jnp.ones((B, cfg.cross_len, cfg.d_model),
+                                    jnp.dtype(cfg.act_dtype))
+    return cfg, params, jnp.asarray(toks, jnp.int32), kw
+
+
+def _teacher_force_check(arch, n_new=8, strict=True):
+    """Greedy generation must reproduce the argmax chain of a full forward
+    pass over [prompt; generated] (teacher forcing)."""
+    cfg, params, toks, kw = _setup(arch)
+    B = toks.shape[0]
+    S = toks.shape[-1]
+    eng = ServeEngine(cfg, params, chunk=8)
+    res = eng.generate(toks, max_new_tokens=n_new, **kw)
+    assert res.tokens.shape == (B, n_new)
+    # build [prompt; gen] and run one full prefill over the whole thing
+    gen = jnp.asarray(res.tokens, jnp.int32)          # [B, n_new]
+    if cfg.n_codebooks:
+        gen_cb = jnp.repeat(gen[:, None, :], cfg.n_codebooks, axis=1)
+        full = jnp.concatenate([toks, gen_cb], axis=-1)
+    else:
+        full = jnp.concatenate([toks, gen], axis=-1)
+    # pick a chunk that divides S + n_new
+    chunk = 8 if (S + n_new) % 8 == 0 else 1
+    from repro.models.transformer import embed_tokens, apply_stack, lm_head
+    batch = {"tokens": full, "labels": full, **kw}
+    x = embed_tokens(params, cfg, full, batch.get("vision"))
+    x, _, _ = apply_stack(params, cfg, x, batch.get("cond"), mode="train",
+                          chunk=chunk, remat="none")
+    logits = lm_head(params, cfg, x)
+    if cfg.n_codebooks:
+        logits = logits[:, 0]                         # [B, S+n, V] codebook 0
+    preds = np.asarray(jnp.argmax(logits.astype(jnp.float32), -1))
+    # logits at position S-1+i predict generated token i
+    want = preds[:, S - 1:S - 1 + n_new]
+    got = res.tokens
+    match = (want == got).mean()
+    if strict:
+        assert match == 1.0, (arch, match, want[0], got[0])
+    else:
+        # recurrent-state handoff (mLSTM stabilizer) is documented-approximate
+        assert match >= 0.75, (arch, match)
+
+
+@pytest.mark.parametrize("arch", EQUIV_ARCHS)
+def test_decode_matches_teacher_forcing_exact(arch):
+    _teacher_force_check(arch, strict=True)
+
+
+@pytest.mark.parametrize("arch", LOOSE_ARCHS)
+def test_decode_matches_teacher_forcing_loose(arch):
+    _teacher_force_check(arch, strict=False)
+
+
+def test_one_decode_compile_per_bucket():
+    cfg, params, toks, kw = _setup("qwen3-0.6b")
+    eng = ServeEngine(cfg, params, chunk=8)
+    r1 = eng.generate(toks, max_new_tokens=6, **kw)
+    r2 = eng.generate(toks, max_new_tokens=10, **kw)   # same 128 bucket
+    assert r1.n_decode_compiles == 1
+    assert len(eng._decode_steps) == 1                 # no recompiles
+
+
+def test_sampling_temperature_and_topk():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((4, 1, 50)))
+    key = jax.random.PRNGKey(0)
+    greedy = sample_tokens(logits, key, temperature=0.0)
+    assert np.array_equal(np.asarray(greedy)[:, 0],
+                          np.argmax(np.asarray(logits)[:, -1], -1))
+    sampled = sample_tokens(logits, key, temperature=1.0, top_k=5)
+    top5 = np.argsort(np.asarray(logits)[:, -1], -1)[:, -5:]
+    for b in range(4):
+        assert int(sampled[b, 0]) in top5[b]
+
+
+def test_generate_deterministic_greedy():
+    cfg, params, toks, kw = _setup("qwen3-0.6b")
+    eng = ServeEngine(cfg, params, chunk=8)
+    r1 = eng.generate(toks, max_new_tokens=6, **kw)
+    r2 = eng.generate(toks, max_new_tokens=6, **kw)
+    assert np.array_equal(r1.tokens, r2.tokens)

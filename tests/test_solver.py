@@ -1,0 +1,182 @@
+"""Solver integration tests: KKT convergence, reference-solution agreement,
+paper-claim validation (working sets + Anderson, support recovery)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (L05, L1, MCP, Box, Logistic, Quadratic, QuadraticSVC,
+                        lambda_max, lasso_gap, solve)
+from repro.core.api import (elastic_net, enet_gap, lasso, logreg_gap,
+                            mcp_regression, multitask_lasso, multitask_mcp,
+                            scad_regression, sparse_logreg, svc_dual)
+from repro.core.datafits import MultitaskQuadratic
+from repro.core.penalties import BlockL1
+
+
+def ista_reference(X, y, lam, n_iter=40_000):
+    """Plain proximal-gradient Lasso to high precision (the oracle)."""
+    X = np.asarray(X)
+    y = np.asarray(y)
+    n, p = X.shape
+    L = np.linalg.norm(X, 2) ** 2 / n
+    beta = np.zeros(p)
+    for _ in range(n_iter):
+        grad = X.T @ (X @ beta - y) / n
+        z = beta - grad / L
+        beta = np.sign(z) * np.maximum(np.abs(z) - lam / L, 0.0)
+    return beta
+
+
+def test_lasso_matches_ista_reference(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 20
+    res = lasso(X, y, lam, tol=1e-10)
+    ref = ista_reference(X, y, lam)
+    assert res.converged
+    assert np.allclose(np.asarray(res.beta), ref, atol=1e-6)
+
+
+def test_lasso_duality_gap_closes(big_lasso_data):
+    X, y, _ = big_lasso_data
+    for frac in (10, 100):
+        lam = lambda_max(X, y) / frac
+        res = lasso(X, y, lam, tol=1e-9)
+        gap, primal = lasso_gap(X, y, res.beta, lam)
+        assert gap < 1e-7 * max(primal, 1), (frac, gap)
+
+
+def test_lasso_lambda_max_gives_zero(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) * 1.001
+    res = lasso(X, y, lam, tol=1e-9)
+    assert np.all(np.asarray(res.beta) == 0.0)
+
+
+def test_elastic_net_gap(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 50
+    res = elastic_net(X, y, lam, rho=0.5, tol=1e-9)
+    gap, primal = enet_gap(X, y, res.beta, lam, 0.5)
+    assert res.converged
+    assert gap < 1e-7 * max(primal, 1)
+
+
+def test_sparse_logreg_converges(logreg_data):
+    X, y, _ = logreg_data
+    from repro.core.datafits import Logistic as Lg
+    lam = lambda_max(X, y, Lg()) / 10
+    res = sparse_logreg(X, y, lam, tol=1e-8)
+    assert res.converged
+    gap, primal = logreg_gap(X, y, res.beta, lam)
+    assert gap < 1e-6 * max(primal, 1)
+    nnz = int(jnp.sum(res.beta != 0))
+    assert 0 < nnz < X.shape[1] // 2
+
+
+@pytest.mark.parametrize("gamma", [2.5, 3.0])
+def test_mcp_kkt_and_exact_support(big_lasso_data, gamma):
+    """Fig. 1's claim: MCP achieves exact support recovery where L1 over-selects."""
+    X, y, beta_true = big_lasso_data
+    lam = lambda_max(X, y) / 5
+    res = mcp_regression(X, y, lam, gamma=gamma, tol=1e-8)
+    assert res.converged
+    supp_hat = np.flatnonzero(np.asarray(res.beta))
+    supp_true = np.flatnonzero(beta_true)
+    assert set(supp_hat) == set(supp_true)
+    # and L1 at the same lambda over-selects (bias)
+    res_l1 = lasso(X, y, lam, tol=1e-8)
+    assert int(jnp.sum(res_l1.beta != 0)) > len(supp_true)
+
+
+def test_mcp_lower_bias_than_l1(big_lasso_data):
+    """Non-convexity mitigates the L1 amplitude bias (paper Fig. 1)."""
+    X, y, beta_true = big_lasso_data
+    lam = lambda_max(X, y) / 5
+    b_mcp = np.asarray(mcp_regression(X, y, lam, tol=1e-8).beta)
+    b_l1 = np.asarray(lasso(X, y, lam, tol=1e-8).beta)
+    err_mcp = np.linalg.norm(b_mcp - beta_true)
+    err_l1 = np.linalg.norm(b_l1 - beta_true)
+    assert err_mcp < 0.5 * err_l1, (err_mcp, err_l1)
+
+
+def test_scad_converges(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 10
+    res = scad_regression(X, y, lam, gamma=3.7, tol=1e-9)
+    assert res.converged
+
+
+def test_l05_fixed_point_score_path(lasso_data):
+    """l_0.5 has an uninformative subdifferential at 0 (Appendix C): the solver
+    must still make progress via the fixed-point score and escape 0_p."""
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 20
+    res = solve(X, y, Quadratic(), L05(lam), tol=1e-8)
+    assert res.converged
+    assert int(jnp.sum(res.beta != 0)) > 0        # escaped the origin
+
+
+def test_svm_dual_box_constraints(logreg_data):
+    X, y, _ = logreg_data
+    res, w = svc_dual(X, y, C=1.0, tol=1e-7)
+    alpha = np.asarray(res.beta)
+    assert res.converged
+    assert np.all(alpha >= -1e-12) and np.all(alpha <= 1.0 + 1e-12)
+    # generalized support = free variables; most alphas at bounds
+    free = np.sum((alpha > 1e-8) & (alpha < 1.0 - 1e-8))
+    assert free < len(alpha)
+    # primal-dual link: margin violations only where alpha = C
+    margins = np.asarray(y) * (np.asarray(X) @ np.asarray(w))
+    viol = margins < 1 - 1e-5
+    assert np.all(alpha[viol] > 1.0 - 1e-6)
+
+
+def test_multitask_block_support(multitask_data):
+    X, Y, W_true = multitask_data
+    from repro.core.api import lambda_max as lmax
+    lam = lmax(X, Y, MultitaskQuadratic()) / 7
+    res = multitask_lasso(X, Y, lam, tol=1e-8)
+    assert res.converged
+    row_norms = np.linalg.norm(np.asarray(res.beta), axis=1)
+    true_rows = set(np.flatnonzero(np.linalg.norm(W_true, axis=1)))
+    got_rows = set(np.flatnonzero(row_norms))
+    assert true_rows <= got_rows                   # no false negatives
+    res2 = multitask_mcp(X, Y, lam, tol=1e-8)
+    got2 = set(np.flatnonzero(np.linalg.norm(np.asarray(res2.beta), axis=1)))
+    assert got2 == true_rows                       # MCP exact recovery (Fig. 4)
+
+
+def test_warm_start_reduces_epochs(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 30
+    cold = lasso(X, y, lam, tol=1e-9)
+    warm = lasso(X, y, lam, tol=1e-9, beta0=cold.beta)
+    assert warm.n_epochs <= max(cold.n_epochs // 2, 5)
+
+
+def test_working_set_stays_small(big_lasso_data):
+    """Algorithm 1's promise: ws grows to ~2|gsupp|, never to p, on sparse
+    problems."""
+    X, y, beta_true = big_lasso_data
+    lam = lambda_max(X, y) / 15
+    res = mcp_regression(X, y, lam, tol=1e-9)
+    p = X.shape[1]
+    assert max(res.ws_history) < p // 4
+    assert res.converged
+
+
+def test_gram_and_xb_paths_agree(lasso_data):
+    X, y, _ = lasso_data
+    lam = lambda_max(X, y) / 20
+    res_g = solve(X, y, Quadratic(), L1(lam), tol=1e-9, use_gram=True)
+    res_x = solve(X, y, Quadratic(), L1(lam), tol=1e-9, use_gram=False)
+    assert np.allclose(np.asarray(res_g.beta), np.asarray(res_x.beta),
+                       atol=1e-6)
+
+
+def test_objective_monotone_over_outer_iterations(big_lasso_data):
+    X, y, _ = big_lasso_data
+    lam = lambda_max(X, y) / 100
+    res = lasso(X, y, lam, tol=1e-10)
+    obj = np.asarray(res.obj_history)
+    assert np.all(np.diff(obj) <= 1e-10)

@@ -1,0 +1,107 @@
+"""Working-set machinery unit tests (paper Algorithm 1 lines 2-4)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.penalties import L05, L1, MCP
+from repro.core.working_set import (fixed_point_score, grow_ws_size,
+                                    next_pow2, select_working_set,
+                                    violation_scores)
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (1, 2, 3, 5, 64, 65)] == [1, 2, 4, 8, 64, 128]
+
+
+def test_grow_ws_size_schedule():
+    """ws_size = max(prev, 2|gsupp|, p0), pow2, clamped at p (paper line 3)."""
+    assert grow_ws_size(0, 0, 10_000) == 64          # p0 floor
+    assert grow_ws_size(64, 100, 10_000) == 256      # 2*gsupp pow2-padded
+    assert grow_ws_size(512, 10, 10_000) == 512      # monotone
+    assert grow_ws_size(512, 9_000, 10_000) == 10_000  # clamp at p
+
+
+def test_grow_ws_monotone_property():
+    rng = np.random.default_rng(0)
+    prev = 0
+    for _ in range(50):
+        g = int(rng.integers(0, 3000))
+        new = grow_ws_size(prev, g, 4096)
+        assert new >= prev
+        assert new >= min(4096, 2 * g)
+        assert new == 4096 or (new & (new - 1)) == 0   # pow2 or p
+        prev = new
+
+
+def test_select_working_set_includes_gsupp():
+    scores = jnp.asarray([0.1, 5.0, 0.2, 3.0, 0.0, 1.0])
+    gsupp = jnp.asarray([True, False, False, False, True, False])
+    ws = np.asarray(select_working_set(scores, gsupp, 4))
+    assert {0, 4} <= set(ws.tolist())                 # support always kept
+    assert 1 in ws and 3 in ws                        # top scores
+
+
+def test_fixed_point_score_zero_iff_cd_fixed_point():
+    pen = L1(0.5)
+    rng = np.random.default_rng(1)
+    beta = jnp.asarray(rng.standard_normal(20))
+    L = jnp.ones(20) * 2.0
+    # construct grad so every coordinate is a prox fixed point
+    # beta = prox(beta - grad/L) with prox = soft-threshold at lam/L
+    grad = jnp.where(beta != 0, -pen.lam * jnp.sign(beta),
+                     0.3 * pen.lam * jnp.ones_like(beta))
+    sc = fixed_point_score(pen, beta, grad, L)
+    assert np.allclose(sc, 0.0, atol=1e-12)
+    # now violate one coordinate
+    grad = grad.at[3].add(5.0)
+    sc = fixed_point_score(pen, beta, grad, L)
+    assert sc[3] > 0.1
+    assert np.allclose(np.delete(np.asarray(sc), 3), 0.0, atol=1e-12)
+
+
+def test_l05_uses_fixed_point_score():
+    """Appendix C Example 1: the subdifferential score is identically 0 at
+    beta=0 for l_q; the fixed-point score is not."""
+    pen = L05(0.1)
+    beta = jnp.zeros(5)
+    grad = jnp.asarray([10.0, 0.0, -8.0, 0.01, 2.0])
+    L = jnp.ones(5)
+    sc_sub = pen.subdiff_dist(grad, beta)
+    assert np.allclose(sc_sub, 0.0)                   # uninformative
+    sc_auto = violation_scores(pen, beta, grad, L)    # auto: fixed-point
+    assert sc_auto[0] > 1.0 and sc_auto[2] > 1.0
+    assert float(sc_auto[1]) == 0.0
+
+
+def test_violation_scores_match_subdiff_for_informative():
+    pen = MCP(0.3, 3.0)
+    rng = np.random.default_rng(2)
+    beta = jnp.asarray(rng.standard_normal(10) * (rng.random(10) < 0.5))
+    grad = jnp.asarray(rng.standard_normal(10))
+    L = jnp.ones(10)
+    auto = violation_scores(pen, beta, grad, L)
+    assert np.allclose(auto, pen.subdiff_dist(grad, beta))
+
+
+def test_gap_safe_screening_is_safe_and_effective():
+    """Gap-safe sphere test (core/screening.py): never screens a feature
+    that is nonzero in the solution; screens many at moderate lambda once
+    the iterate is decent."""
+    import jax.numpy as jnp
+    from repro.core.api import lambda_max, lasso
+    from repro.core.screening import lasso_gap_safe_mask, screened_fraction
+    from repro.data.synth import make_correlated_design
+
+    X, y, _ = make_correlated_design(n=200, p=600, n_nonzero=15, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = lambda_max(X, y) / 10
+    res = lasso(X, y, lam, tol=1e-9)
+    supp = np.flatnonzero(np.asarray(res.beta))
+    # at the (near-)optimum: safety — every support feature survives
+    mask = np.asarray(lasso_gap_safe_mask(X, y, res.beta, lam))
+    assert mask[supp].all()
+    assert screened_fraction(jnp.asarray(mask)) > 0.5
+    # from a crude iterate (one ISTA step) it still must be safe
+    g = X.T @ (X @ jnp.zeros(600) - y) / 200
+    beta_crude = jnp.sign(-g) * jnp.maximum(jnp.abs(g) - lam, 0) * 0.1
+    mask2 = np.asarray(lasso_gap_safe_mask(X, y, beta_crude, lam))
+    assert mask2[supp].all()
