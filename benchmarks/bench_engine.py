@@ -1,0 +1,112 @@
+"""Engine perf baseline: fig2 Lasso + fig5 MCP timings and host-dispatch
+counts, recorded to BENCH_engine.json so the perf trajectory of later PRs
+(sharded CD, multi-backend, serving) starts from the device-resident-engine
+refactor.
+
+``PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out PATH]``
+
+The ``seed_before`` block is the measurement of the pre-engine host-driven
+solver (3-4 jitted dispatches + 3 blocking scalar syncs per outer iteration),
+taken on this container at the refactor commit; the ``engine_after`` block is
+re-measured on every run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import MCP, L1, Quadratic, lambda_max, make_engine, solve  # noqa: E402
+from repro.data.synth import make_correlated_design  # noqa: E402
+
+# measured once on the seed (pre-engine) solver, same container, same configs:
+# per outer iteration it launched _score_pass + _gather_ws + _inner_* (plus
+# eager gathers) and blocked on float(kkt), int(gsupp), int(n_ep)
+SEED_BEFORE = {
+    "fig2_lasso": {"wall_s": 0.213, "n_outer": 8, "n_epochs": 40,
+                   "jit_dispatches_per_outer": 3.125,
+                   "host_syncs_per_outer": 3.0},
+    "fig5_mcp": {"wall_s": 0.109, "n_outer": 6, "n_epochs": 30,
+                 "jit_dispatches_per_outer": 3.167,
+                 "host_syncs_per_outer": 3.0},
+}
+
+CONFIGS = {
+    "small": {
+        "fig2_lasso": dict(n=300, p=1500, n_nonzero=30),
+        "fig5_mcp": dict(n=400, p=2000, n_nonzero=40),
+    },
+    "smoke": {
+        "fig2_lasso": dict(n=100, p=300, n_nonzero=10),
+        "fig5_mcp": dict(n=100, p=400, n_nonzero=12),
+    },
+}
+
+
+def _measure(bench, cfg):
+    X, y, _ = make_correlated_design(seed=0, rho=0.5, snr=5.0, **cfg)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = lambda_max(X, y) / 10
+    penalty = L1(lam) if bench == "fig2_lasso" else MCP(lam, 3.0)
+    kw = dict(tol=1e-10, max_outer=100)
+
+    engine = make_engine(penalty, Quadratic())
+    solve(X, y, Quadratic(), penalty, engine=engine, **kw)   # compile
+    wall = float("inf")
+    for _ in range(3):                                       # best of 3
+        engine.n_dispatches = 0
+        t0 = time.perf_counter()
+        res = solve(X, y, Quadratic(), penalty, engine=engine, **kw)
+        wall = min(wall, time.perf_counter() - t0)
+    iters = max(len(res.kkt_history), 1)
+    return {
+        "wall_s": wall,
+        "n_outer": res.n_outer,
+        "n_epochs": res.n_epochs,
+        "kkt": res.kkt,
+        "converged": res.converged,
+        "jit_dispatches_per_outer": engine.n_dispatches / iters,
+        "host_syncs_per_outer": res.n_host_syncs / iters,
+        "retraces": {str(k): v for k, v in engine.retraces.items()},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    scale = "smoke" if args.smoke else "small"
+    out_path = args.out or ("experiments/bench/BENCH_engine_smoke.json"
+                            if args.smoke else "BENCH_engine.json")
+
+    report = {"scale": scale, "seed_before": SEED_BEFORE, "engine_after": {}}
+    for bench, cfg in CONFIGS[scale].items():
+        report["engine_after"][bench] = _measure(bench, cfg)
+        after = report["engine_after"][bench]
+        print(f"{bench}: {after['wall_s']:.3f}s, "
+              f"{after['jit_dispatches_per_outer']:.2f} dispatches/outer, "
+              f"{after['host_syncs_per_outer']:.2f} syncs/outer "
+              f"(seed: {SEED_BEFORE[bench]['jit_dispatches_per_outer']:.2f} "
+              f"/ {SEED_BEFORE[bench]['host_syncs_per_outer']:.2f})")
+        if not after["converged"]:
+            raise SystemExit(f"{bench} did not converge — engine regression")
+        if after["host_syncs_per_outer"] > 1.0 + 1e-9:
+            raise SystemExit(f"{bench} exceeded 1 host sync per outer iter")
+
+    import os
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,8 @@ from repro.data.synth import make_correlated_design
 
 from .common import print_rows, save_rows
 
-SIZES = {"small": dict(n=500, p=1000, n_nonzero=100),
+SIZES = {"smoke": dict(n=100, p=200, n_nonzero=15),
+         "small": dict(n=500, p=1000, n_nonzero=100),
          "paper": dict(n=1000, p=2000, n_nonzero=200)}
 
 PENALTIES = {

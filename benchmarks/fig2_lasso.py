@@ -18,7 +18,8 @@ from repro.data.synth import make_correlated_design
 from .baselines import admm_lasso, fista, ista, vanilla_cd
 from .common import print_rows, save_rows, skglm_trajectory, summarize
 
-SIZES = {"small": dict(n=300, p=1500, n_nonzero=30),
+SIZES = {"smoke": dict(n=100, p=300, n_nonzero=10),
+         "small": dict(n=300, p=1500, n_nonzero=30),
          "paper": dict(n=1000, p=10000, n_nonzero=100)}
 
 

@@ -24,7 +24,8 @@ from repro.core.solver import solve
 
 from .common import print_rows, save_rows
 
-SIZES = {"small": dict(n=60, p_per_hemi=150, T=20),
+SIZES = {"smoke": dict(n=30, p_per_hemi=60, T=8),
+         "small": dict(n=60, p_per_hemi=150, T=20),
          "paper": dict(n=120, p_per_hemi=500, T=50)}
 
 

@@ -17,7 +17,8 @@ from repro.data.synth import make_correlated_design
 from .baselines import irl1_mcp, ista
 from .common import print_rows, save_rows, skglm_trajectory, summarize
 
-SIZES = {"small": dict(n=400, p=2000, n_nonzero=40),
+SIZES = {"smoke": dict(n=100, p=400, n_nonzero=12),
+         "small": dict(n=400, p=2000, n_nonzero=40),
          "paper": dict(n=1000, p=5000, n_nonzero=100)}
 
 

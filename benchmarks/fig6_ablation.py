@@ -14,7 +14,8 @@ from repro.data.synth import make_correlated_design
 
 from .common import print_rows, save_rows, skglm_trajectory, summarize
 
-SIZES = {"small": dict(n=300, p=2000, n_nonzero=40),
+SIZES = {"smoke": dict(n=100, p=400, n_nonzero=12),
+         "small": dict(n=300, p=2000, n_nonzero=40),
          "paper": dict(n=1000, p=20000, n_nonzero=200)}
 
 VARIANTS = {

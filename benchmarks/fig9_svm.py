@@ -15,7 +15,8 @@ from repro.data.synth import make_classification
 from .baselines import pgd_box, vanilla_cd
 from .common import print_rows, save_rows, skglm_trajectory, summarize
 
-SIZES = {"small": dict(n=400, p=300, n_nonzero=30),
+SIZES = {"smoke": dict(n=120, p=80, n_nonzero=12),
+         "small": dict(n=400, p=300, n_nonzero=30),
          "paper": dict(n=2000, p=1000, n_nonzero=100)}
 
 

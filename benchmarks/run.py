@@ -1,6 +1,9 @@
 """Benchmark harness: one module per paper figure/table.
 
-``PYTHONPATH=src python -m benchmarks.run [--scale small|paper] [--only name]``
+``PYTHONPATH=src python -m benchmarks.run [--scale smoke|small|paper] [--only name]``
+
+``--smoke`` (= ``--scale smoke --skip-roofline-report``) runs every figure on
+tiny instances; CI uses it so the perf scripts cannot silently rot.
 
 Figure map:
   fig1_regpath   Figure 1  — reg paths: support recovery, estimation error
@@ -34,10 +37,16 @@ BENCHES = ["fig1_regpath", "fig2_lasso", "fig3_enet", "fig4_meeg",
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="small", choices=["small", "paper"])
+    ap.add_argument("--scale", default="small",
+                    choices=["smoke", "small", "paper"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny instances, no roofline report (CI)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-roofline-report", action="store_true")
     args = ap.parse_args()
+    if args.smoke:
+        args.scale = "smoke"
+        args.skip_roofline_report = True
 
     names = [args.only] if args.only else BENCHES
     failures = []

@@ -4,10 +4,12 @@ separable penalties (skglm, NeurIPS 2022)."""
 from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
 from .penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1, BlockMCP,
                         Box, soft_threshold)
-from .solver import SolveResult, solve
+from .solver import SolveResult, make_engine, solve
+from .engine import (EngineConfig, GramSolver, SolveEngine, SubproblemSolver,
+                     XbSolver, get_engine)
 from .anderson import anderson_extrapolate
-from .working_set import (fixed_point_score, grow_ws_size, next_pow2,
-                          select_working_set, violation_scores)
+from .working_set import (BucketPolicy, fixed_point_score, grow_ws_size,
+                          next_pow2, select_working_set, violation_scores)
 from .api import (elastic_net, enet_gap, lambda_max, lasso, lasso_gap,
                   logreg_gap, mcp_regression, multitask_lasso, multitask_mcp,
                   scad_regression, sparse_logreg, svc_dual)
@@ -21,7 +23,9 @@ from .estimators import (ElasticNet, GeneralizedLinearEstimator, Lasso,
 __all__ = [
     "Quadratic", "Logistic", "QuadraticSVC", "MultitaskQuadratic",
     "L1", "L1L2", "MCP", "SCAD", "L05", "L23", "Box", "BlockL1", "BlockMCP",
-    "soft_threshold", "solve", "SolveResult", "anderson_extrapolate",
+    "soft_threshold", "solve", "SolveResult", "make_engine",
+    "EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
+    "XbSolver", "get_engine", "BucketPolicy", "anderson_extrapolate",
     "violation_scores", "fixed_point_score", "select_working_set",
     "grow_ws_size", "next_pow2", "lambda_max", "lasso", "elastic_net",
     "mcp_regression", "scad_regression", "sparse_logreg", "svc_dual",

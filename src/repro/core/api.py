@@ -5,12 +5,13 @@ import jax
 import jax.numpy as jnp
 
 from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
-from .penalties import MCP, SCAD, L05, L1, L1L2, Box, BlockL1, BlockMCP
+from .penalties import MCP, SCAD, L05, L23, L1, L1L2, Box, BlockL1, BlockMCP
 from .solver import solve
 
 __all__ = ["lambda_max", "lasso_gap", "enet_gap", "logreg_gap",
            "lasso", "elastic_net", "mcp_regression", "scad_regression",
-           "sparse_logreg", "svc_dual", "multitask_lasso", "multitask_mcp"]
+           "l05_regression", "l23_regression", "sparse_logreg", "svc_dual",
+           "multitask_lasso", "multitask_mcp"]
 
 
 def lambda_max(X, y, datafit=None):
@@ -101,6 +102,10 @@ def scad_regression(X, y, lam, gamma=3.7, **kw):
 
 def l05_regression(X, y, lam, **kw):
     return solve(X, y, Quadratic(), L05(lam), **kw)
+
+
+def l23_regression(X, y, lam, **kw):
+    return solve(X, y, Quadratic(), L23(lam), **kw)
 
 
 def sparse_logreg(X, y, lam, **kw):

@@ -28,7 +28,21 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map as _jax_shard_map
+except ImportError:                      # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _jax_shard_map
+
+import inspect as _inspect
+
+_HAS_CHECK_VMA = "check_vma" in _inspect.signature(_jax_shard_map).parameters
+
+
+def shard_map(f, **kw):
+    """shard_map with the `check_vma` kwarg mapped to pre-0.5 `check_rep`."""
+    if "check_vma" in kw and not _HAS_CHECK_VMA:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _jax_shard_map(f, **kw)
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .solver import SolveResult, _inner_gram
@@ -153,10 +167,11 @@ def solve_distributed(mesh, X, y, datafit, penalty, *, tol=1e-6, max_outer=50,
         gsupp = penalty.generalized_support(beta)
         kkt = float(jnp.max(sc))
         res.kkt_history.append(kkt)
-        res.n_outer = t
         if kkt <= tol:
             res.converged = True
+            res.n_outer = t
             break
+        res.n_outer = t + 1
         ws_size = grow_ws_size(ws_size, int(jnp.sum(gsupp)), p, p0=p0)
         res.ws_history.append(ws_size)
         ws = ops["topk"](sc, gsupp, ws_size)

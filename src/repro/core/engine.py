@@ -1,0 +1,437 @@
+"""Device-resident solve engine (DESIGN.md §3).
+
+The engine fuses one outer iteration of Algorithm 1 — score pass, working-set
+selection, gather, inner Anderson-CD solve, scatter — into a single jitted
+program compiled once per power-of-two working-set *bucket*. The host loop in
+``core.solver.solve`` only launches that one program and reads back a small
+scalar tuple (kkt, objective, |gsupp|, epoch count) per outer iteration: one
+dispatch, one sync, instead of the historical 3-4 dispatches and 3 blocking
+scalar pulls.
+
+Layering (bottom-up):
+
+  SubproblemSolver      Algorithm 2 on a fixed-size working set: blocks of M
+    GramSolver          cyclic CD epochs + guarded Anderson extrapolation.
+    XbSolver            Gram form for quadratic datafits (state = q = G beta),
+                        Xb form for general datafits (state = Xb). Each epoch
+                        runs through a pluggable backend: "jax" (pure-XLA
+                        fori loop, cd.py) or "pallas" (VMEM-resident kernel,
+                        kernels/cd_epoch.py) — the kernel is a first-class
+                        backend, parameterized through the penalty codec in
+                        kernels/common.py, not a bolt-on shim.
+  SolveEngine           the fused outer step (scalar solves) and the vmapped
+                        multi-lambda chunk step (regularization paths), plus
+                        per-bucket retrace and dispatch telemetry.
+
+Working-set sizes are bucketed to powers of two (working_set.BucketPolicy) so
+a whole regularization path reuses one compiled step per bucket; penalties
+and datafits are pytrees with hyper-parameters as leaves, so lambda changes
+never retrace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .anderson import anderson_extrapolate
+from .cd import cd_epoch_gram, cd_epoch_xb
+from .working_set import select_working_set, violation_scores
+
+__all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
+           "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS"]
+
+
+# datafit class name -> kernels/cd_epoch.py datafit_kind tag (the Pallas Xb
+# kernel hard-codes the raw-gradient formula per kind)
+KERNEL_DATAFIT_KINDS = {
+    "Quadratic": "quadratic",
+    "Logistic": "logistic",
+    "QuadraticSVC": "svc",
+}
+
+
+def _lin(offset, beta):
+    if beta.ndim == 2:
+        return jnp.sum(offset[:, None] * beta)
+    return jnp.vdot(offset, beta)
+
+
+def _apply_T(Xt_ws, beta):
+    """X_ws @ beta given X stored transposed [K, n]."""
+    if beta.ndim == 2:
+        return jnp.tensordot(beta, Xt_ws, axes=((0,), (0,))).T   # [n, T]
+    return beta @ Xt_ws
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static (compile-time) solver configuration. Hashable: engines are
+    cached per config, so identical solves share compiled programs."""
+    M: int = 5
+    max_epochs: int = 1000
+    accel: bool = True
+    use_fp_score: bool = False
+    gram: bool = True
+    backend: str = "jax"            # "jax" | "pallas"
+
+    @property
+    def max_blocks(self) -> int:
+        return max(1, math.ceil(self.max_epochs / self.M))
+
+
+@dataclass(frozen=True)
+class WorkingSetContext:
+    """Gathered per-working-set tensors consumed by a SubproblemSolver."""
+    Xt_ws: jax.Array                 # [K, n] gathered design, transposed
+    y: jax.Array
+    L_ws: jax.Array                  # [K]
+    offset_ws: jax.Array             # [K]
+    datafit: object
+    penalty: object
+    G: jax.Array = None              # [K, K] (Gram solvers only)
+    c: jax.Array = None              # [K(, T)] (Gram solvers only)
+
+
+class SubproblemSolver:
+    """Algorithm 2 on a fixed working set: blocks of M cyclic CD epochs, one
+    guarded Anderson extrapolation per block, loop until the restricted KKT
+    violation drops under eps. Subclasses supply the state representation
+    (`prepare`/`refresh`), the epoch update, the objective, and the gradient;
+    the block loop itself is shared."""
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+
+    # -- state hooks -------------------------------------------------------
+    def prepare(self, ctx, beta0):
+        raise NotImplementedError
+
+    def refresh(self, ctx, beta):
+        """Recompute auxiliary state from scratch (Anderson candidates)."""
+        raise NotImplementedError
+
+    def epoch(self, ctx, beta, aux):
+        raise NotImplementedError
+
+    def objective(self, ctx, beta, aux):
+        raise NotImplementedError
+
+    def gradient(self, ctx, beta, aux):
+        raise NotImplementedError
+
+    # -- shared Anderson-CD block loop ------------------------------------
+    def solve(self, ctx, beta0, eps, aux0=None):
+        """Returns (beta, aux, n_epochs, kkt). `aux0` lets the caller thread
+        outer-loop state (the Xb path shares Xb across outer iterations)."""
+        cfg = self.config
+        M = cfg.M
+        if aux0 is None:
+            aux0 = self.prepare(ctx, beta0)
+
+        def block(state):
+            beta, aux, k, _ = state
+            hist = jnp.zeros((M + 1,) + beta.shape, beta.dtype).at[0].set(beta)
+
+            def ep(e, s):
+                beta, aux, hist = s
+                beta, aux = self.epoch(ctx, beta, aux)
+                return beta, aux, hist.at[e + 1].set(beta)
+
+            beta, aux, hist = jax.lax.fori_loop(0, M, ep, (beta, aux, hist))
+            if cfg.accel:
+                be = ctx.penalty.prox(anderson_extrapolate(hist), 0.0)
+                auxe = self.refresh(ctx, be)
+                take = self.objective(ctx, be, auxe) < \
+                    self.objective(ctx, beta, aux)
+                beta = jnp.where(take, be, beta)
+                aux = jnp.where(take, auxe, aux)
+            grad = self.gradient(ctx, beta, aux)
+            kkt = jnp.max(violation_scores(ctx.penalty, beta, grad, ctx.L_ws,
+                                           use_fixed_point=cfg.use_fp_score))
+            return beta, aux, k + 1, kkt
+
+        def cond(state):
+            _, _, k, kkt = state
+            return (k < cfg.max_blocks) & (kkt > eps)
+
+        init = (beta0, aux0, jnp.zeros((), jnp.int32),
+                jnp.asarray(jnp.inf, beta0.dtype))
+        beta, aux, k, kkt = jax.lax.while_loop(cond, block, init)
+        return beta, aux, k * M, kkt
+
+
+class GramSolver(SubproblemSolver):
+    """Quadratic datafits: state q = G beta stays K-sized (VMEM-resident on
+    TPU through the Pallas backend; see kernels/cd_epoch.py)."""
+
+    def prepare(self, ctx, beta0):
+        return ctx.G @ beta0
+
+    def refresh(self, ctx, beta):
+        return ctx.G @ beta
+
+    def epoch(self, ctx, beta, aux):
+        if self.config.backend == "pallas":
+            from repro.kernels import ops as kops
+            from repro.kernels.common import penalty_params
+            return kops.cd_epoch_gram(ctx.G, ctx.c, beta, aux, ctx.L_ws,
+                                      type(ctx.penalty),
+                                      penalty_params(ctx.penalty), epochs=1)
+        return cd_epoch_gram(ctx.G, ctx.c, beta, aux, ctx.L_ws, ctx.penalty)
+
+    def objective(self, ctx, beta, aux):
+        return (0.5 * jnp.vdot(beta, aux) - jnp.vdot(ctx.c, beta)
+                + ctx.penalty.value(beta))
+
+    def gradient(self, ctx, beta, aux):
+        return aux - ctx.c
+
+
+class XbSolver(SubproblemSolver):
+    """General datafits (Algorithm 3 verbatim): state Xb = X_ws beta."""
+
+    def prepare(self, ctx, beta0):
+        return _apply_T(ctx.Xt_ws, beta0)
+
+    def refresh(self, ctx, beta):
+        return _apply_T(ctx.Xt_ws, beta)
+
+    def epoch(self, ctx, beta, aux):
+        if self.config.backend == "pallas":
+            from repro.kernels import ops as kops
+            from repro.kernels.common import penalty_params
+            kind = KERNEL_DATAFIT_KINDS[type(ctx.datafit).__name__]
+            return kops.cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
+                                    ctx.offset_ws, type(ctx.penalty),
+                                    penalty_params(ctx.penalty), kind,
+                                    epochs=1)
+        return cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
+                           ctx.offset_ws, ctx.datafit, ctx.penalty)
+
+    def objective(self, ctx, beta, aux):
+        return (ctx.datafit.value(aux, ctx.y) + _lin(ctx.offset_ws, beta)
+                + ctx.penalty.value(beta))
+
+    def gradient(self, ctx, beta, aux):
+        grad = ctx.Xt_ws @ ctx.datafit.raw_grad(aux, ctx.y)
+        return grad + (ctx.offset_ws[:, None] if grad.ndim == 2
+                       else ctx.offset_ws)
+
+
+class SolveEngine:
+    """Bucketed, device-resident outer iteration of Algorithm 1.
+
+    One engine owns one jitted fused step (compiled per power-of-two bucket)
+    plus one jitted multi-lambda chunk step, and records:
+      retraces:    {bucket or ("chunk", bucket, n_lanes): trace count}
+      n_dispatches: fused-step launches (== outer iterations driven)
+    """
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+        self.retraces: dict = {}
+        self.n_dispatches = 0
+        self._jstep = jax.jit(self._outer_step, static_argnames=("bucket",))
+        self._jchunk = jax.jit(self._chunk_solve, static_argnames=("bucket",))
+        self._jprobe = jax.jit(self._probe)
+
+    def _make_inner(self):
+        cfg = self.config
+        return GramSolver(cfg) if cfg.gram else XbSolver(cfg)
+
+    # ------------------------------------------------------------ traced body
+    def _step_body(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+                   eps_frac, bucket):
+        """Fused: score -> select -> gather -> inner solve -> scatter.
+
+        Returns (beta', Xb', kkt, obj, gsupp-count of beta', inner epochs).
+        kkt/obj are measured on the *incoming* iterate (the convergence test
+        for this outer iteration); when it already passes tol the inner solve
+        is skipped via lax.cond, so the converged launch is nearly free.
+        """
+        cfg = self.config
+        grad = X.T @ datafit.raw_grad(Xb, y)
+        grad = grad + (offset[:, None] if grad.ndim == 2 else offset)
+        scores = violation_scores(penalty, beta, grad, L,
+                                  use_fixed_point=cfg.use_fp_score)
+        kkt = jnp.max(scores)
+        gsupp = penalty.generalized_support(beta)
+        obj = datafit.value(Xb, y) + _lin(offset, beta) + penalty.value(beta)
+
+        ws = select_working_set(scores, gsupp, bucket)
+        Xt_ws = X[:, ws].T               # [K, n], contiguous rows for CD
+        L_ws = L[ws]
+        offset_ws = offset[ws]
+        beta_ws0 = beta[ws]
+        pen_ws = penalty.restricted(ws) if hasattr(penalty, "restricted") \
+            else penalty
+        eps_in = jnp.maximum(eps_frac * kkt, 0.1 * tol)
+        done = kkt <= tol
+        inner = self._make_inner()
+
+        if cfg.gram:
+            G, _ = datafit.make_gram(Xt_ws.T, y)
+            # linearize at the incoming iterate: grad_ws(b) = G (b - b0) +
+            # grad0_ws, exact for quadratic datafits even when nonzero
+            # coordinates live outside ws (Box pins coords at C with empty
+            # generalized support); make_gram's own c assumes support ⊆ ws
+            q0 = G @ beta_ws0
+            grad_ws0 = grad[ws]
+            c = q0 - grad_ws0
+            ctx = WorkingSetContext(Xt_ws, y, L_ws, offset_ws, datafit,
+                                    pen_ws, G=G, c=c)
+
+            def run(_):
+                beta_ws, _, n_ep, _ = inner.solve(ctx, beta_ws0, eps_in,
+                                                  aux0=q0)
+                return beta_ws, n_ep
+
+            def skip(_):
+                return beta_ws0, jnp.zeros((), jnp.int32)
+
+            beta_ws, n_ep = jax.lax.cond(done, skip, run, None)
+            # incremental: exact even when a nonzero coordinate sits outside
+            # ws (Box pins coords at C with empty generalized support)
+            Xb_new = Xb + _apply_T(Xt_ws, beta_ws - beta_ws0)
+        else:
+            ctx = WorkingSetContext(Xt_ws, y, L_ws, offset_ws, datafit,
+                                    pen_ws)
+
+            def run(_):
+                # Xb is shared outer-loop state: enter with the caller's Xb
+                beta_ws, Xb2, n_ep, _ = inner.solve(ctx, beta_ws0, eps_in,
+                                                    aux0=Xb)
+                return beta_ws, Xb2, n_ep
+
+            def skip(_):
+                return beta_ws0, Xb, jnp.zeros((), jnp.int32)
+
+            beta_ws, Xb_new, n_ep = jax.lax.cond(done, skip, run, None)
+
+        beta_new = beta.at[ws].set(beta_ws)
+        gcount = jnp.sum(penalty.generalized_support(beta_new),
+                         dtype=jnp.int32)
+        return beta_new, Xb_new, kkt, obj, gcount, n_ep
+
+    def _outer_step(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+                    eps_frac, *, bucket):
+        # executes once per (bucket, arg-structure) compilation: the counter
+        # is the proof behind "one compile per ws bucket across a path"
+        self.retraces[bucket] = self.retraces.get(bucket, 0) + 1
+        return self._step_body(X, y, beta, Xb, L, offset, datafit, penalty,
+                               tol, eps_frac, bucket)
+
+    def _probe(self, X, y, beta, Xb, L, offset, datafit, penalty):
+        """Pre-loop probe: kkt/|gsupp|/obj of the initial iterate (sizes the
+        first bucket under warm starts). One launch per solve, not per iter."""
+        cfg = self.config
+        grad = X.T @ datafit.raw_grad(Xb, y)
+        grad = grad + (offset[:, None] if grad.ndim == 2 else offset)
+        scores = violation_scores(penalty, beta, grad, L,
+                                  use_fixed_point=cfg.use_fp_score)
+        gsupp = penalty.generalized_support(beta)
+        obj = datafit.value(Xb, y) + _lin(offset, beta) + penalty.value(beta)
+        return jnp.max(scores), jnp.sum(gsupp), obj
+
+    # ---------------------------------------------------- multi-lambda chunk
+    def _chunk_solve(self, X, y, lams, betas, Xbs, L, offset, datafit,
+                     penalty, tol, eps_frac, max_outer, growth, *, bucket):
+        """Device-resident path chunk: vmap the fused step over a chunk of
+        lambdas and drive the *outer* loop with lax.while_loop, so the host
+        syncs once per chunk instead of once per (lambda, outer iteration).
+        All lanes share one bucket; the loop hands control back to the host
+        as soon as any unconverged lane's generalized support outgrows
+        bucket/growth (Algorithm 1 would grow the working set there), so the
+        host can escalate the bucket and resume from the partial state."""
+        key = ("chunk", bucket, int(lams.shape[0]))
+        self.retraces[key] = self.retraces.get(key, 0) + 1
+
+        def lane(lam, beta, Xb):
+            pen = dataclasses.replace(penalty, lam=lam)
+            return self._step_body(X, y, beta, Xb, L, offset, datafit, pen,
+                                   tol, eps_frac, bucket)
+
+        vstep = jax.vmap(lane, in_axes=(0, 0, 0))
+
+        def body(state):
+            betas, Xbs, kkts, objs, gcounts, n_eps, it = state
+            betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas, Xbs)
+            return betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1
+
+        p = X.shape[1]
+
+        def cond(state):
+            _, _, kkts, _, gcounts, _, it = state
+            unconverged = kkts > tol
+            live = (it < max_outer) & jnp.any(unconverged)
+            if bucket < p:
+                # hand back to the host for bucket escalation; at bucket == p
+                # the working set already covers every feature
+                outgrown = jnp.any(unconverged & (growth * gcounts > bucket))
+                live = live & ~outgrown
+            return live
+
+        C = lams.shape[0]
+        init = (betas, Xbs, jnp.full((C,), jnp.inf, betas.dtype),
+                jnp.zeros((C,), betas.dtype),
+                jnp.zeros((C,), jnp.int32), jnp.zeros((C,), jnp.int32),
+                jnp.zeros((), jnp.int32))
+        return jax.lax.while_loop(cond, body, init)
+
+    # ------------------------------------------------------------- host API
+    def step(self, bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+             eps_frac):
+        """One fused outer iteration. Single device dispatch; the caller does
+        the (single) scalar readback."""
+        self.n_dispatches += 1
+        return self._jstep(X, y, beta, Xb, L, offset, datafit, penalty, tol,
+                           eps_frac, bucket=bucket)
+
+    def probe(self, X, y, beta, Xb, L, offset, datafit, penalty):
+        return self._jprobe(X, y, beta, Xb, L, offset, datafit, penalty)
+
+    def chunk(self, bucket, X, y, lams, betas, Xbs, L, offset, datafit,
+              penalty, tol, eps_frac, max_outer, growth=2):
+        """One device-resident multi-lambda chunk solve. Returns the final
+        (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state."""
+        if self.config.backend == "pallas":
+            raise ValueError(
+                "chunked (vmapped) path solving requires backend='jax'; the "
+                "Pallas kernels are not batchable under vmap")
+        self.n_dispatches += 1
+        return self._jchunk(X, y, lams, betas, Xbs, L, offset, datafit,
+                            penalty, tol, eps_frac, max_outer, growth,
+                            bucket=bucket)
+
+    def validate(self, datafit, penalty, n_tasks):
+        """Static feasibility checks, raised eagerly at solve() entry."""
+        if self.config.backend == "pallas":
+            from repro.kernels.common import check_kernel_penalty, \
+                penalty_params
+            check_kernel_penalty(type(penalty))
+            penalty_params(penalty)       # raises on per-coordinate params
+            if n_tasks:
+                raise ValueError("backend='pallas' supports scalar "
+                                 "coordinates only (n_tasks=0)")
+            if not self.config.gram and \
+                    type(datafit).__name__ not in KERNEL_DATAFIT_KINDS:
+                raise ValueError(
+                    f"backend='pallas' has no Xb kernel for datafit "
+                    f"{type(datafit).__name__}")
+
+
+_ENGINE_CACHE: dict = {}
+
+
+def get_engine(config: EngineConfig) -> SolveEngine:
+    """Engines are cached per static config so independent solve() calls in
+    one process share compiled fused steps (a fresh SolveEngine(config) gives
+    isolated retrace counters, e.g. for tests)."""
+    eng = _ENGINE_CACHE.get(config)
+    if eng is None:
+        eng = _ENGINE_CACHE[config] = SolveEngine(config)
+    return eng

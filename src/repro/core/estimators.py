@@ -27,7 +27,8 @@ class GeneralizedLinearEstimator:
     """Composable estimator: any datafit x any separable penalty."""
 
     def __init__(self, datafit=None, penalty=None, *, tol=1e-6, max_outer=50,
-                 max_epochs=1000, M=5, p0=64, fit_intercept=False):
+                 max_epochs=1000, M=5, p0=64, fit_intercept=False,
+                 use_kernels=False, engine=None, **solve_kw):
         self.datafit = Quadratic() if datafit is None else datafit
         self.penalty = L1(1.0) if penalty is None else penalty
         self.tol = tol
@@ -35,6 +36,9 @@ class GeneralizedLinearEstimator:
         self.max_epochs = max_epochs
         self.M = M
         self.p0 = p0
+        self.use_kernels = use_kernels
+        self.engine = engine            # share compiled fused steps across fits
+        self.solve_kw = solve_kw
         if fit_intercept:
             raise NotImplementedError(
                 "center X/y beforehand; intercept handling is out of scope")
@@ -44,7 +48,8 @@ class GeneralizedLinearEstimator:
         y = jnp.asarray(y)
         res = solve(X, y, self.datafit, self.penalty, tol=self.tol,
                     max_outer=self.max_outer, max_epochs=self.max_epochs,
-                    M=self.M, p0=self.p0)
+                    M=self.M, p0=self.p0, use_kernels=self.use_kernels,
+                    engine=self.engine, **self.solve_kw)
         self.coef_ = np.asarray(res.beta)
         self.kkt_ = res.kkt
         self.converged_ = res.converged
@@ -119,7 +124,8 @@ class LinearSVC(GeneralizedLinearEstimator):
         Z = y[:, None] * X                       # [n, d]
         res = solve(Z.T, y, self.datafit, self.penalty, tol=self.tol,
                     max_outer=self.max_outer, max_epochs=self.max_epochs,
-                    M=self.M, p0=self.p0)
+                    M=self.M, p0=self.p0, use_kernels=self.use_kernels,
+                    engine=self.engine, **self.solve_kw)
         self.dual_coef_ = np.asarray(res.beta)   # alpha
         self.coef_ = np.asarray(Z.T @ res.beta)  # primal w (Eq. 35)
         self.kkt_ = res.kkt

@@ -1,25 +1,48 @@
-"""Regularization paths (paper Figure 1 / §E.5).
+"""Regularization paths (paper Figure 1 / §E.5) on the device-resident engine.
 
-Solves Problem (1) for a decreasing grid of lambdas with warm starts. Because
-penalties are pytrees with hyper-parameters as leaves, the jitted inner solver
-is compiled once and reused across the whole path (the working-set size is the
-only retrace trigger). Support/estimation metrics reproduce Figure 1's
+Solves Problem (1) for a decreasing grid of lambdas with warm starts. The
+whole sweep shares ONE SolveEngine, so the per-bucket compiled fused steps
+are reused across the entire grid: penalties are pytrees with
+hyper-parameters as leaves, and the power-of-two working-set bucket is the
+only retrace trigger (asserted by tests/test_engine.py via the engine's
+retrace counter).
+
+Two drivers:
+  * sequential (vmap_chunk=1): lambda-by-lambda warm starts, one fused
+    dispatch + one scalar sync per outer iteration (core/solver.py).
+  * chunked (vmap_chunk=C>1): the dense head of the path is swept C lambdas
+    at a time with the engine's vmapped chunk step — the *outer* loop runs
+    on-device in a lax.while_loop, so the host syncs once per (chunk, bucket)
+    instead of once per (lambda, iteration). Chunks hand their last (densest)
+    solution to the next chunk as the shared warm start (FaSTGLZ-style
+    multi-path batching); the host escalates the bucket and resumes the
+    still-unconverged lanes when a chunk outgrows its working-set bucket.
+
+Per-lambda epoch/outer/time telemetry plus the engine's retrace/dispatch
+counters land on PathResult, so perf regressions in the path driver are
+observable, not vibes. Support/estimation metrics reproduce Figure 1's
 support-recovery comparison (L1 vs MCP/SCAD bias).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .api import lambda_max
 from .datafits import Quadratic
-from .solver import solve
+from .solver import make_engine, solve
+from .working_set import BucketPolicy
 
 __all__ = ["reg_path", "PathResult", "support_metrics"]
+
+_ENGINE_KW = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
+              "use_kernels")
 
 
 @dataclass
@@ -30,6 +53,11 @@ class PathResult:
     nnzs: np.ndarray
     n_epochs: np.ndarray
     metrics: List[dict] = field(default_factory=list)
+    # engine telemetry (per lambda / whole sweep)
+    n_outer: Optional[np.ndarray] = None
+    times: Optional[np.ndarray] = None          # cumulative seconds
+    retraces: dict = field(default_factory=dict)
+    n_dispatches: int = 0
 
 
 def _with_lam(penalty, lam: float):
@@ -37,31 +65,132 @@ def _with_lam(penalty, lam: float):
 
 
 def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
-             lambda_min_ratio=1e-2, tol=1e-6, metric_fn: Optional[Callable] = None,
+             lambda_min_ratio=1e-2, tol=1e-6,
+             metric_fn: Optional[Callable] = None, engine=None, vmap_chunk=1,
              **solve_kw) -> PathResult:
-    """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max)."""
+    """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
+
+    `vmap_chunk=C > 1` sweeps the path C lambdas at a time through the
+    engine's device-resident chunk step (requires the "jax" backend and a
+    penalty with a `lam` hyper-parameter). `engine` (from
+    `solver.make_engine`) shares compiled steps across calls and exposes
+    retrace counters; one is created per call otherwise.
+    """
     datafit = Quadratic() if datafit is None else datafit
     if lambdas is None:
         lmax = lambda_max(X, y, datafit)
         lambdas = lmax * np.geomspace(1.0, lambda_min_ratio, n_lambdas)
     lambdas = np.asarray(lambdas, dtype=np.float64)
 
-    p = X.shape[1]
+    if engine is None:
+        eng_kw = {k: solve_kw[k] for k in _ENGINE_KW if k in solve_kw}
+        engine = make_engine(penalty, datafit, shared=True, **eng_kw)
+
+    if vmap_chunk > 1:
+        res = _chunked_path(X, y, penalty, datafit, lambdas, tol, engine,
+                            vmap_chunk, metric_fn, **solve_kw)
+    else:
+        res = _sequential_path(X, y, penalty, datafit, lambdas, tol, engine,
+                               metric_fn, **solve_kw)
+    res.retraces = dict(engine.retraces)
+    res.n_dispatches = engine.n_dispatches
+    return res
+
+
+def _sequential_path(X, y, penalty, datafit, lambdas, tol, engine, metric_fn,
+                     **solve_kw):
     beta = None
-    betas, kkts, nnzs, eps, metrics = [], [], [], [], []
+    t0 = time.perf_counter()
+    betas, kkts, nnzs, eps, outers, times, metrics = [], [], [], [], [], [], []
     for lam in lambdas:
         res = solve(X, y, datafit, _with_lam(penalty, float(lam)),
-                    tol=tol, beta0=beta, **solve_kw)
+                    tol=tol, beta0=beta, engine=engine, **solve_kw)
         beta = res.beta
         betas.append(np.asarray(beta))
         kkts.append(res.kkt)
         nnzs.append(int(jnp.sum(beta != 0)))
         eps.append(res.n_epochs)
+        outers.append(res.n_outer)
+        times.append(time.perf_counter() - t0)
         if metric_fn is not None:
             metrics.append(metric_fn(lam, beta))
     return PathResult(lambdas=lambdas, betas=np.stack(betas),
                       kkts=np.asarray(kkts), nnzs=np.asarray(nnzs),
-                      n_epochs=np.asarray(eps), metrics=metrics)
+                      n_epochs=np.asarray(eps), metrics=metrics,
+                      n_outer=np.asarray(outers), times=np.asarray(times))
+
+
+def _chunked_path(X, y, penalty, datafit, lambdas, tol, engine, chunk,
+                  metric_fn, *, p0=64, max_outer=50, eps_inner_frac=0.3,
+                  **solve_kw):
+    """Chunked vmap sweep with warm-start handoff between chunks."""
+    # engine-level kwargs were consumed by make_engine; anything else the
+    # sequential driver would honor (use_ws, beta0, ...) must not be
+    # silently dropped here
+    unsupported = set(solve_kw) - set(_ENGINE_KW)
+    if unsupported:
+        raise ValueError(
+            f"vmap_chunk > 1 does not support solve kwargs "
+            f"{sorted(unsupported)}; use the sequential driver (vmap_chunk=1)")
+    p = X.shape[1]
+    policy = BucketPolicy(p0=p0)
+    L = datafit.lipschitz(X)
+    offset = datafit.grad_offset(p, X.dtype)
+    bshape = (p,) if y.ndim == 1 else (p, y.shape[1])
+    beta_prev = jnp.zeros(bshape, X.dtype)
+    Xb_prev = X @ beta_prev
+    gcount_prev = 0
+
+    t0 = time.perf_counter()
+    betas, kkts, n_eps, outers, times = [], [], [], [], []
+    for lo in range(0, len(lambdas), chunk):
+        lams_c = jnp.asarray(lambdas[lo:lo + chunk], X.dtype)
+        C = lams_c.shape[0]
+        # all lanes warm-start from the previous chunk's densest solution
+        betas0 = jnp.stack([beta_prev] * C)
+        Xbs0 = jnp.stack([Xb_prev] * C)
+        bucket = policy.first_bucket(gcount_prev, p)
+        iters_left = max_outer
+        chunk_iters = 0
+        chunk_eps = np.zeros(C, np.int64)
+        while True:
+            out = engine.chunk(bucket, X, y, lams_c, betas0, Xbs0, L, offset,
+                               datafit, penalty, tol, eps_inner_frac,
+                               iters_left)
+            betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
+            # one host sync per (chunk, bucket) attempt
+            kkts_c, gcounts_c, neps_c, it = jax.device_get(
+                (kkts_d, gcounts_d, neps_d, it_d))
+            iters_left -= int(it)
+            chunk_iters += int(it)
+            chunk_eps += np.asarray(neps_c, np.int64)
+            done = bool(np.all(kkts_c <= tol))
+            if done or bucket >= p or iters_left <= 0:
+                break
+            # a lane outgrew the bucket: escalate and resume from the
+            # partially-converged state
+            bucket = max(policy.escalate(bucket, p),
+                         policy.next_bucket(bucket, int(np.max(gcounts_c)),
+                                            p))
+            betas0, Xbs0 = betas_c, Xbs_c
+        betas_np = np.asarray(betas_c)
+        betas.extend(betas_np)
+        kkts.extend(np.asarray(kkts_c).tolist())
+        n_eps.extend(chunk_eps.tolist())
+        outers.extend([chunk_iters] * C)
+        times.extend([time.perf_counter() - t0] * C)
+        beta_prev = betas_c[-1]
+        Xb_prev = Xbs_c[-1]
+        gcount_prev = int(gcounts_c[-1])
+
+    betas = np.stack(betas)
+    metrics = []
+    if metric_fn is not None:
+        metrics = [metric_fn(lam, b) for lam, b in zip(lambdas, betas)]
+    return PathResult(lambdas=lambdas, betas=betas, kkts=np.asarray(kkts),
+                      nnzs=np.asarray([(b != 0).sum() for b in betas]),
+                      n_epochs=np.asarray(n_eps), metrics=metrics,
+                      n_outer=np.asarray(outers), times=np.asarray(times))
 
 
 def support_metrics(beta, beta_true, X=None, y=None):

@@ -1,18 +1,18 @@
 """The skglm solver: paper Algorithm 1 (working sets) + Algorithm 2 (Anderson-CD).
 
-Outer loop (host): score all features by optimality violation, grow the working
-set (ws_size = max(ws_size, 2|gsupp|)), and call the jitted inner solver on the
-restricted subproblem. Inner loop (device, lax.while_loop): blocks of M cyclic
-CD epochs followed by one Anderson extrapolation attempt guarded by an
-objective-decrease test (Algorithm 2, M=5).
-
-Quadratic datafits use the Gram fast path (TPU-native: the K x K Gram and the
-K-vector state stay VMEM-resident; see DESIGN.md §2). General datafits use the
-Xb path (Algorithm 3 verbatim).
+This is the thin HOST driver over the device-resident engine
+(`core/engine.py`, DESIGN.md §3): per outer iteration it launches exactly one
+fused jitted step — score pass, working-set selection, gather, inner
+Anderson-CD solve, scatter — compiled once per power-of-two working-set
+bucket, and reads back one small scalar tuple (kkt, objective, |gsupp|,
+epochs). Quadratic datafits use the Gram inner solver (TPU-native: the K x K
+Gram and the K-vector state stay VMEM-resident; see DESIGN.md §2); general
+datafits use the Xb inner solver (Algorithm 3 verbatim). The `backend`
+switches CD epochs between pure XLA ("jax") and the Pallas kernels
+("pallas", parameterized through the kernels/common.py penalty codec).
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
 from functools import partial
@@ -20,9 +20,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .anderson import anderson_extrapolate
-from .cd import cd_epoch_gram, cd_epoch_xb
-from .working_set import (grow_ws_size, select_working_set, violation_scores)
+from .engine import (EngineConfig, GramSolver, SolveEngine, WorkingSetContext,
+                     XbSolver, _apply_T, get_engine)
+from .working_set import BucketPolicy
 
 __all__ = ["solve", "SolveResult"]
 
@@ -38,135 +38,59 @@ class SolveResult:
     ws_history: list = field(default_factory=list)
     obj_history: list = field(default_factory=list)
     time_history: list = field(default_factory=list)
-
-
-def _lin(offset, beta):
-    if beta.ndim == 2:
-        return jnp.sum(offset[:, None] * beta)
-    return jnp.vdot(offset, beta)
-
-
-def _apply_T(Xt_ws, beta):
-    """X_ws @ beta given X stored transposed [K, n]."""
-    if beta.ndim == 2:
-        return jnp.tensordot(beta, Xt_ws, axes=((0,), (0,))).T   # [n, T]
-    return beta @ Xt_ws
-
-
-def _kernel_epoch(G, c, beta, q, L_ws, penalty):
-    """One CD epoch through the Pallas kernel (VMEM-resident state on TPU;
-    interpret mode on CPU). Drop-in for cd.cd_epoch_gram on scalar coords."""
-    import dataclasses
-    from repro.kernels import ops as kops
-    vals = [getattr(penalty, f.name) for f in dataclasses.fields(penalty)]
-    params = jnp.stack([jnp.asarray(v, G.dtype) for v in
-                        (vals + [0.0, 0.0])[:2]])
-    return kops.cd_epoch_gram(G, c, beta, q, L_ws, type(penalty), params,
-                              epochs=1)
+    n_host_syncs: int = 0            # blocking device->host readbacks
 
 
 @partial(jax.jit, static_argnames=("M", "max_blocks", "use_fp_score", "accel",
                                    "use_kernels"))
 def _inner_gram(G, c, beta0, L_ws, penalty, eps, M, max_blocks, use_fp_score,
                 accel=True, use_kernels=False):
-    """Anderson-accelerated CD on the Gram subproblem (quadratic datafits)."""
-    q0 = G @ beta0
-    epoch = _kernel_epoch if use_kernels else cd_epoch_gram
-
-    def obj(beta, q):
-        return 0.5 * jnp.vdot(beta, q) - jnp.vdot(c, beta) + penalty.value(beta)
-
-    def block(state):
-        beta, q, k, _ = state
-        hist = jnp.zeros((M + 1,) + beta.shape, beta.dtype).at[0].set(beta)
-
-        def ep(e, s):
-            beta, q, hist = s
-            beta, q = epoch(G, c, beta, q, L_ws, penalty)
-            return beta, q, hist.at[e + 1].set(beta)
-
-        beta, q, hist = jax.lax.fori_loop(0, M, ep, (beta, q, hist))
-        if accel:
-            be = penalty.prox(anderson_extrapolate(hist), 0.0)  # feasibility
-            qe = G @ be
-            take = obj(be, qe) < obj(beta, q)
-            beta = jnp.where(take, be, beta)
-            q = jnp.where(take, qe, q)
-        grad = q - c
-        kkt = jnp.max(violation_scores(penalty, beta, grad, L_ws,
-                                       use_fixed_point=use_fp_score))
-        return beta, q, k + 1, kkt
-
-    def cond(state):
-        _, _, k, kkt = state
-        return (k < max_blocks) & (kkt > eps)
-
-    init = (beta0, q0, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, beta0.dtype))
-    beta, q, k, kkt = jax.lax.while_loop(cond, block, init)
-    return beta, k * M, kkt
+    """Standalone Anderson-CD on a Gram subproblem (kept for callers that
+    orchestrate their own outer loop, e.g. core/distributed.py).
+    Returns (beta, n_epochs, kkt)."""
+    cfg = EngineConfig(M=M, max_epochs=M * max_blocks, accel=accel,
+                       use_fp_score=use_fp_score, gram=True,
+                       backend="pallas" if use_kernels else "jax")
+    ctx = WorkingSetContext(Xt_ws=None, y=None, L_ws=L_ws, offset_ws=None,
+                            datafit=None, penalty=penalty, G=G, c=c)
+    beta, _, n_ep, kkt = GramSolver(cfg).solve(ctx, beta0, eps)
+    return beta, n_ep, kkt
 
 
-@partial(jax.jit, static_argnames=("M", "max_blocks", "use_fp_score", "accel"))
+@partial(jax.jit, static_argnames=("M", "max_blocks", "use_fp_score", "accel",
+                                   "use_kernels"))
 def _inner_xb(Xt_ws, y, beta0, Xb0, L_ws, offset_ws, datafit, penalty, eps,
-              M, max_blocks, use_fp_score, accel=True):
-    """Anderson-accelerated CD maintaining Xb (general datafits, Algorithm 3)."""
-
-    def obj(beta, Xb):
-        return datafit.value(Xb, y) + _lin(offset_ws, beta) + penalty.value(beta)
-
-    def block(state):
-        beta, Xb, k, _ = state
-        hist = jnp.zeros((M + 1,) + beta.shape, beta.dtype).at[0].set(beta)
-
-        def ep(e, s):
-            beta, Xb, hist = s
-            beta, Xb = cd_epoch_xb(Xt_ws, y, beta, Xb, L_ws, offset_ws,
-                                   datafit, penalty)
-            return beta, Xb, hist.at[e + 1].set(beta)
-
-        beta, Xb, hist = jax.lax.fori_loop(0, M, ep, (beta, Xb, hist))
-        if accel:
-            be = penalty.prox(anderson_extrapolate(hist), 0.0)
-            Xbe = _apply_T(Xt_ws, be)                   # O(n |ws|), as in Algo 2
-            take = obj(be, Xbe) < obj(beta, Xb)
-            beta = jnp.where(take, be, beta)
-            Xb = jnp.where(take, Xbe, Xb)
-        grad = Xt_ws @ datafit.raw_grad(Xb, y)
-        grad = grad + (offset_ws[:, None] if grad.ndim == 2 else offset_ws)
-        kkt = jnp.max(violation_scores(penalty, beta, grad, L_ws,
-                                       use_fixed_point=use_fp_score))
-        return beta, Xb, k + 1, kkt
-
-    def cond(state):
-        _, _, k, kkt = state
-        return (k < max_blocks) & (kkt > eps)
-
-    init = (beta0, Xb0, jnp.zeros((), jnp.int32), jnp.asarray(jnp.inf, beta0.dtype))
-    beta, Xb, k, kkt = jax.lax.while_loop(cond, block, init)
-    return beta, Xb, k * M, kkt
+              M, max_blocks, use_fp_score, accel=True, use_kernels=False):
+    """Standalone Anderson-CD maintaining Xb. Returns (beta, Xb, n_epochs,
+    kkt)."""
+    cfg = EngineConfig(M=M, max_epochs=M * max_blocks, accel=accel,
+                       use_fp_score=use_fp_score, gram=False,
+                       backend="pallas" if use_kernels else "jax")
+    ctx = WorkingSetContext(Xt_ws=Xt_ws, y=y, L_ws=L_ws, offset_ws=offset_ws,
+                            datafit=datafit, penalty=penalty)
+    return XbSolver(cfg).solve(ctx, beta0, eps, aux0=Xb0)
 
 
-@partial(jax.jit, static_argnames=("use_fp_score",))
-def _score_pass(X, y, beta, Xb, offset, L, datafit, penalty, use_fp_score):
-    grad = X.T @ datafit.raw_grad(Xb, y)
-    grad = grad + (offset[:, None] if grad.ndim == 2 else offset)
-    scores = violation_scores(penalty, beta, grad, L, use_fixed_point=use_fp_score)
-    gsupp = penalty.generalized_support(beta)
-    obj = datafit.value(Xb, y) + _lin(offset, beta) + penalty.value(beta)
-    return scores, jnp.max(scores), gsupp, obj
-
-
-@partial(jax.jit, static_argnames=("ws_size",))
-def _gather_ws(X, scores, gsupp, ws_size):
-    ws = select_working_set(scores, gsupp, ws_size)
-    Xt_ws = X[:, ws].T           # [K, n], contiguous rows for the CD stream
-    return ws, Xt_ws
+def make_engine(penalty, datafit, *, M=5, max_epochs=1000, accel=True,
+                use_fp_score=None, use_gram="auto", use_kernels=False,
+                shared=False):
+    """Build a SolveEngine for a (datafit, penalty) family. `shared=True`
+    returns the process-wide cached engine for the config (compiled steps are
+    reused across solves); `shared=False` gives a fresh engine with isolated
+    retrace/dispatch counters."""
+    if use_fp_score is None:
+        use_fp_score = not penalty.HAS_SUBDIFF
+    gram = datafit.HAS_GRAM if use_gram == "auto" else bool(use_gram)
+    cfg = EngineConfig(M=M, max_epochs=max_epochs, accel=accel,
+                       use_fp_score=use_fp_score, gram=gram,
+                       backend="pallas" if use_kernels else "jax")
+    return get_engine(cfg) if shared else SolveEngine(cfg)
 
 
 def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           M=5, p0=64, use_gram="auto", use_fp_score=None, eps_inner_frac=0.3,
           beta0=None, n_tasks=None, accel=True, use_ws=True,
-          use_kernels=False):
+          use_kernels=False, engine=None, bucket_policy=None):
     """Solve Problem (1): argmin_beta F(X beta) + sum_j g_j(beta_j).
 
     Returns a SolveResult. `use_gram="auto"` picks the Gram inner solver for
@@ -174,8 +98,10 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     automatic, True for penalties without informative subdifferentials).
     `accel=False` disables Anderson extrapolation and `use_ws=False` runs the
     inner solver on all p features (the Figure 6 ablation axes).
-    `use_kernels=True` runs Gram CD epochs through the Pallas kernel
-    (VMEM-resident state on TPU; interpret mode on CPU).
+    `use_kernels=True` runs CD epochs through the Pallas kernels
+    (VMEM-resident state on TPU; interpret mode on CPU). Pass `engine` (from
+    `make_engine`) to share compiled fused steps across many solves — e.g. a
+    regularization path — and to read back retrace/dispatch telemetry.
     """
     n_rows, p = X.shape
     if not use_ws:
@@ -186,56 +112,55 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     if n_tasks is None:
         n_tasks = y.shape[1] if (hasattr(y, "ndim") and y.ndim == 2) else 0
 
+    if engine is None:
+        engine = make_engine(penalty, datafit, M=M, max_epochs=max_epochs,
+                             accel=accel, use_fp_score=use_fp_score,
+                             use_gram=gram, use_kernels=use_kernels,
+                             shared=True)
+    engine.validate(datafit, penalty, n_tasks)
+    policy = bucket_policy or BucketPolicy(p0=p0)
+
     L = datafit.lipschitz(X)
     offset = datafit.grad_offset(p, X.dtype)
     bshape = (p, n_tasks) if n_tasks else (p,)
     beta = jnp.zeros(bshape, X.dtype) if beta0 is None else jnp.asarray(beta0)
     Xb = X @ beta
 
-    max_blocks = max(1, math.ceil(max_epochs / M))
     res = SolveResult(beta=beta, kkt=float("inf"), converged=False,
                       n_outer=0, n_epochs=0)
-    ws_size = 0
     t0 = time.perf_counter()
 
+    # first-bucket sizing: cold starts have empty generalized support; warm
+    # starts probe it once (one launch + one sync per solve, not per iter)
+    if beta0 is None:
+        gcount = 0
+    else:
+        _, g0, _ = engine.probe(X, y, beta, Xb, L, offset, datafit, penalty)
+        gcount = int(g0)
+        res.n_host_syncs += 1
+    bucket = policy.first_bucket(gcount, p)
+
     for t in range(max_outer):
-        scores, kkt, gsupp, obj = _score_pass(X, y, beta, Xb, offset, L,
-                                              datafit, penalty, use_fp_score)
+        beta, Xb, kkt_d, obj_d, gcount_d, nep_d = engine.step(
+            bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+            eps_inner_frac)
+        # the single blocking host sync of this outer iteration
+        kkt, obj, gcount, n_ep = jax.device_get((kkt_d, obj_d, gcount_d,
+                                                 nep_d))
+        res.n_host_syncs += 1
         kkt = float(kkt)
         res.kkt_history.append(kkt)
         res.obj_history.append(float(obj))
         res.time_history.append(time.perf_counter() - t0)
-        res.n_outer = t
         if kkt <= tol:
             res.converged = True
+            res.n_outer = t
             break
-
-        gcount = int(jnp.sum(gsupp))
-        ws_size = grow_ws_size(ws_size, gcount, p, p0=p0)
-        res.ws_history.append(ws_size)
-        ws, Xt_ws = _gather_ws(X, scores, gsupp, ws_size)
-        L_ws = L[ws]
-        # penalties with per-coordinate hyper-parameters (e.g. weighted L1
-        # inside reweighted schemes) restrict themselves to the working set
-        pen_ws = penalty.restricted(ws) if hasattr(penalty, "restricted") \
-            else penalty
-        eps_in = max(eps_inner_frac * kkt, 0.1 * tol)
-
-        if gram:
-            G, c = datafit.make_gram(Xt_ws.T, y)
-            beta_ws, n_ep, _ = _inner_gram(G, c, beta[ws], L_ws, pen_ws,
-                                           eps_in, M, max_blocks, use_fp_score,
-                                           accel, use_kernels)
-            Xb = _apply_T(Xt_ws, beta_ws)
-        else:
-            off_ws = offset[ws]
-            beta_ws, Xb, n_ep, _ = _inner_xb(Xt_ws, y, beta[ws], Xb, L_ws,
-                                             off_ws, datafit, pen_ws, eps_in,
-                                             M, max_blocks, use_fp_score,
-                                             accel)
+        res.ws_history.append(bucket)
         res.n_epochs += int(n_ep)
-        beta = beta.at[ws].set(beta_ws)
+        res.n_outer = t + 1
+        bucket = policy.next_bucket(bucket, int(gcount), p)
 
     res.beta = beta
-    res.kkt = kkt
+    res.kkt = res.kkt_history[-1] if res.kkt_history else float("inf")
     return res

@@ -8,9 +8,14 @@ ws_size = max(ws_size, 2 |gsupp(beta)|), taking the ws_size highest scores while
 always retaining the current generalized support (scored +inf).
 
 JAX adaptation: working sets are static-size (rounded up to powers of two) so
-the jitted inner solver is compiled once per size, not per iteration.
+the jitted fused outer step is compiled once per size *bucket*, not per
+iteration — BucketPolicy (DESIGN.md §3.2) makes the bucketing rule explicit
+and enumerable, and the engine keeps a per-bucket retrace counter proving one
+compile per bucket across a whole regularization path.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +48,46 @@ def next_pow2(x: int) -> int:
     return 1 << max(0, int(x - 1)).bit_length()
 
 
-def grow_ws_size(prev_size: int, gsupp_count: int, p: int, p0: int = 64) -> int:
-    """ws_size = max(prev, 2|gsupp|), pow2-padded, clamped to p (static shapes)."""
-    target = max(p0, prev_size, 2 * gsupp_count)
+def grow_ws_size(prev_size: int, gsupp_count: int, p: int, p0: int = 64,
+                 growth: int = 2) -> int:
+    """ws_size = max(prev, growth*|gsupp|), pow2-padded, clamped to p
+    (static shapes; growth=2 is the paper's Algorithm 1 line 3)."""
+    target = max(p0, prev_size, growth * gsupp_count)
     return min(p, next_pow2(target))
+
+
+@dataclass(frozen=True)
+class BucketPolicy:
+    """Explicit working-set bucket policy (DESIGN.md §3.2).
+
+    Buckets are the only retrace axis of the fused outer step: every outer
+    iteration runs at a bucket from `ladder(p)` (powers of two from p0,
+    clamped to p), chosen monotonically by `next_bucket`. A solve or a whole
+    regularization path therefore compiles at most `len(ladder(p))` programs.
+    """
+    p0: int = 64
+    growth: int = 2                  # bucket >= growth * |generalized support|
+
+    def first_bucket(self, gsupp_count: int, p: int) -> int:
+        return grow_ws_size(0, gsupp_count, p, p0=self.p0,
+                            growth=self.growth)
+
+    def next_bucket(self, prev: int, gsupp_count: int, p: int) -> int:
+        return grow_ws_size(prev, gsupp_count, p, p0=self.p0,
+                            growth=self.growth)
+
+    def escalate(self, bucket: int, p: int) -> int:
+        """Next rung of the ladder (chunked path: bucket too small)."""
+        return min(p, next_pow2(bucket + 1))
+
+    def ladder(self, p: int):
+        """All buckets this policy can ever select for a p-feature problem."""
+        out, b = [], min(p, next_pow2(self.p0))
+        while b < p:
+            out.append(b)
+            b = next_pow2(b + 1)
+        out.append(p)
+        return out
 
 
 def select_working_set(scores, gsupp_mask, ws_size: int):

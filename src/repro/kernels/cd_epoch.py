@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import make_penalty, pid
+from .common import check_kernel_penalty, make_penalty, pid
 
 
 def _cd_gram_kernel(penalty_cls, G_col, c_ref, L_ref, params, beta0, q0,
@@ -55,7 +55,9 @@ def cd_epoch_gram_pallas(G, c, beta0, q0, L, penalty_cls, params, *, epochs=1,
 
     G: [K, K]; c, beta0, q0, L: [K]. Returns (beta, q), both [K].
     """
+    check_kernel_penalty(penalty_cls)
     K = G.shape[0]
+    W = params.shape[-1]                        # codec arity for penalty_cls
     col = lambda e, i: (0, i)
     const = lambda e, i: (0, 0)
     beta, q = pl.pallas_call(
@@ -65,7 +67,7 @@ def cd_epoch_gram_pallas(G, c, beta0, q0, L, penalty_cls, params, *, epochs=1,
             pl.BlockSpec((K, 1), col),          # streamed Gram column
             pl.BlockSpec((K, 1), const),        # c
             pl.BlockSpec((K, 1), const),        # L
-            pl.BlockSpec((1, 2), const),        # penalty params
+            pl.BlockSpec((1, W), const),        # penalty params
             pl.BlockSpec((K, 1), const),        # beta0
             pl.BlockSpec((K, 1), const),        # q0
         ],
@@ -113,7 +115,9 @@ def _cd_xb_kernel(penalty_cls, datafit_kind, n_samples, x_row, y_ref, off_ref,
 def cd_epoch_xb_pallas(Xt_ws, y, beta0, Xb0, L, offset, penalty_cls, params,
                        datafit_kind="quadratic", *, epochs=1, interpret=True):
     """Run `epochs` CD epochs maintaining Xb. Xt_ws: [K, n]. Returns (beta, Xb)."""
+    check_kernel_penalty(penalty_cls)
     K, n = Xt_ws.shape
+    W = params.shape[-1]                        # codec arity for penalty_cls
     row = lambda e, i: (i, 0)
     const = lambda e, i: (0, 0)
     kern = functools.partial(_cd_xb_kernel, penalty_cls, datafit_kind, n)
@@ -125,7 +129,7 @@ def cd_epoch_xb_pallas(Xt_ws, y, beta0, Xb0, L, offset, penalty_cls, params,
             pl.BlockSpec((1, n), const),        # y
             pl.BlockSpec((K, 1), const),        # grad offset
             pl.BlockSpec((K, 1), const),        # L
-            pl.BlockSpec((1, 2), const),        # penalty params
+            pl.BlockSpec((1, W), const),        # penalty params
             pl.BlockSpec((K, 1), const),        # beta0
             pl.BlockSpec((1, n), const),        # Xb0
         ],

@@ -1,39 +1,104 @@
-"""Shared helpers for the Pallas kernels.
+"""Shared helpers for the Pallas kernels: the penalty-parameter codec.
 
 Penalties are reconstructed *inside* kernels from an SMEM/VMEM parameter
 vector, so the same closed-form prox/subdifferential code from
 ``repro.core.penalties`` runs on the TPU without re-tracing per lambda
 (regularization paths reuse one compiled kernel).
+
+The codec (DESIGN.md §4) is exact-arity: ``penalty_params`` packs every
+scalar hyper-parameter of a registered penalty class into an ``(arity,)``
+vector and ``make_penalty`` reconstructs the penalty from that vector (the
+class itself is a static kernel argument, so different arities never collide
+in one compiled kernel). Unregistered classes and per-coordinate (array-
+valued) hyper-parameters raise ``UnsupportedPenaltyError`` instead of being
+silently truncated — the historical ``(vals + [0.0, 0.0])[:2]`` packing
+computed the wrong prox for any penalty with >2 hyper-parameters.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
 from repro.core import penalties as _pen
 
-# static penalty registry: class -> number of scalar hyper-parameters
-PENALTY_ARITY = {
-    _pen.L1: 1,
-    _pen.L1L2: 2,
-    _pen.MCP: 2,
-    _pen.SCAD: 2,
-    _pen.Box: 1,
-    _pen.L05: 1,
-    _pen.L23: 1,
-}
+
+class UnsupportedPenaltyError(TypeError):
+    """Penalty cannot be encoded for kernel use (unregistered class, or
+    array-valued / per-coordinate hyper-parameters)."""
+
+
+# class -> ordered scalar hyper-parameter field names. Every penalty class in
+# repro.core.penalties round-trips through the codec; kernels additionally
+# restrict to SCALAR_COORD_PENALTIES below.
+PENALTY_FIELDS: dict = {}
+
+
+def register_penalty(cls):
+    """Register a penalty dataclass with the codec (fields = hyper-params)."""
+    PENALTY_FIELDS[cls] = tuple(f.name for f in dataclasses.fields(cls))
+    return cls
+
+
+for _cls in (_pen.L1, _pen.L1L2, _pen.MCP, _pen.SCAD, _pen.Box, _pen.L05,
+             _pen.L23, _pen.BlockL1, _pen.BlockMCP):
+    register_penalty(_cls)
+
+# penalties whose prox acts on scalar coordinates — the set the CD-epoch and
+# ws-score kernels can instantiate (Block* penalties need row-block proxes).
+SCALAR_COORD_PENALTIES = frozenset(
+    (_pen.L1, _pen.L1L2, _pen.MCP, _pen.SCAD, _pen.Box, _pen.L05, _pen.L23))
+
+# back-compat view: class -> number of scalar hyper-parameters
+PENALTY_ARITY = {cls: len(fields) for cls, fields in PENALTY_FIELDS.items()}
+
+
+def penalty_arity(cls) -> int:
+    """Number of scalar hyper-parameters the codec packs for `cls`."""
+    try:
+        return len(PENALTY_FIELDS[cls])
+    except KeyError:
+        raise UnsupportedPenaltyError(
+            f"{cls.__name__} is not registered with the kernel penalty codec;"
+            " add it via repro.kernels.common.register_penalty") from None
+
+
+def check_kernel_penalty(cls):
+    """Raise unless `cls` can run inside the scalar-coordinate CD kernels."""
+    penalty_arity(cls)
+    if cls not in SCALAR_COORD_PENALTIES:
+        raise UnsupportedPenaltyError(
+            f"{cls.__name__} has block (non-scalar-coordinate) proxes and "
+            "cannot run inside the scalar CD kernels")
 
 
 def penalty_params(penalty) -> jnp.ndarray:
-    """Pack a penalty's hyper-parameters into a (2,) float32 vector."""
-    import dataclasses
-    vals = [float(getattr(penalty, f.name)) for f in dataclasses.fields(penalty)]
-    vals = (vals + [0.0, 0.0])[:2]
-    return jnp.asarray(vals)  # default float dtype (f64 under x64)
+    """Pack a penalty's hyper-parameters into an ``(arity,)`` vector.
+
+    Raises UnsupportedPenaltyError for unregistered classes and for
+    array-valued (per-coordinate) hyper-parameters, which cannot be carried
+    in the kernels' scalar parameter vector.
+    """
+    fields = PENALTY_FIELDS.get(type(penalty))
+    if fields is None:
+        raise UnsupportedPenaltyError(
+            f"{type(penalty).__name__} is not registered with the kernel "
+            "penalty codec")
+    vals = []
+    for name in fields:
+        v = getattr(penalty, name)
+        if hasattr(v, "ndim") and v.ndim != 0:
+            raise UnsupportedPenaltyError(
+                f"{type(penalty).__name__}.{name} is array-valued "
+                "(per-coordinate hyper-parameters are not kernel-encodable)")
+        vals.append(v)
+    return jnp.stack([jnp.asarray(v, jnp.result_type(float)) for v in vals])
 
 
 def make_penalty(cls, params_ref, dtype):
-    """Rebuild a penalty object from a parameter ref inside a kernel."""
-    arity = PENALTY_ARITY[cls]
+    """Rebuild a penalty object from a parameter ref/vector (inverse of
+    ``penalty_params``; works inside kernels and on plain arrays)."""
+    arity = penalty_arity(cls)
     args = [params_ref[i].astype(dtype) for i in range(arity)]
     return cls(*args)
 

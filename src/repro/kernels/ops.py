@@ -11,7 +11,8 @@ from functools import partial
 import jax
 
 from .cd_epoch import cd_epoch_gram_pallas, cd_epoch_xb_pallas
-from .common import penalty_params
+from .common import (UnsupportedPenaltyError, check_kernel_penalty,
+                     make_penalty, penalty_params)
 from .ws_score import ws_score_pallas
 
 
@@ -46,4 +47,5 @@ def ws_score(X, r, beta, L, offset, penalty_cls, params, *, use_fp=False,
                            use_fp=use_fp, bp=bp, bn=bn, interpret=interpret)
 
 
-__all__ = ["cd_epoch_gram", "cd_epoch_xb", "ws_score", "penalty_params"]
+__all__ = ["cd_epoch_gram", "cd_epoch_xb", "ws_score", "penalty_params",
+           "make_penalty", "check_kernel_penalty", "UnsupportedPenaltyError"]

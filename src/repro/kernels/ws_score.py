@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import make_penalty, pid
+from .common import check_kernel_penalty, make_penalty, pid
 
 
 def _score_kernel(penalty_cls, n_tiles, use_fp, X_blk, r_blk, beta_blk, L_blk,
@@ -50,7 +50,9 @@ def _score_kernel(penalty_cls, n_tiles, use_fp, X_blk, r_blk, beta_blk, L_blk,
 def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *,
                     use_fp=False, bp=256, bn=2048, interpret=True):
     """Fused scores for all p features. X: [n, p]; r: [n]. Returns [p]."""
+    check_kernel_penalty(penalty_cls)
     n, p = X.shape
+    W = params.shape[-1]                        # codec arity for penalty_cls
     bp = min(bp, p)
     bn = min(bn, n)
     assert p % bp == 0 and n % bn == 0, (n, p, bn, bp)
@@ -65,7 +67,7 @@ def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *,
             pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # beta
             pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # L
             pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # grad offset
-            pl.BlockSpec((1, 2), lambda j, i: (0, 0)),     # penalty params
+            pl.BlockSpec((1, W), lambda j, i: (0, 0)),     # penalty params
         ],
         out_specs=pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((p, 1), X.dtype),

@@ -21,10 +21,18 @@ from repro.core.api import lambda_max, lasso, mcp_regression
 from repro.data.synth import make_correlated_design
 
 
+def _make_mesh(shape, names):
+    """jax<0.5 has no sharding.AxisType / make_mesh(axis_types=...)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(names))
+    return jax.make_mesh(shape, names)
+
+
 @pytest.fixture(scope="module")
 def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
@@ -91,8 +99,11 @@ _SUBPROCESS_TEST = textwrap.dedent("""
     from repro.core.api import lambda_max, mcp_regression
     from repro.data.synth import make_correlated_design
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if hasattr(jax.sharding, "AxisType"):
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
     X, y, bt = make_correlated_design(n=128, p=512, n_nonzero=16, seed=3)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     lam = lambda_max(Xj, yj) / 5

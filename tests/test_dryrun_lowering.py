@@ -20,8 +20,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.models.config import ShapeCfg
     from repro.roofline.hlo import collective_bytes
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((2, 4), ("data", "model"))
     ARCHS = __ARCHS__
     shapes = [ShapeCfg("train_4k", "train", 128, 8, n_micro=2),
               ShapeCfg("prefill_32k", "prefill", 128, 8),

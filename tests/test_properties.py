@@ -17,10 +17,11 @@ from repro.core.penalties import MCP, SCAD, L05, L1, L1L2, Box
 pytestmark = pytest.mark.skipif(not HAVE_HYPOTHESIS,
                                 reason="hypothesis not installed")
 
-finite = st.floats(min_value=-50.0, max_value=50.0,
-                   allow_nan=False, allow_infinity=False)
-pos = st.floats(min_value=1e-3, max_value=10.0,
-                allow_nan=False, allow_infinity=False)
+if HAVE_HYPOTHESIS:
+    finite = st.floats(min_value=-50.0, max_value=50.0,
+                       allow_nan=False, allow_infinity=False)
+    pos = st.floats(min_value=1e-3, max_value=10.0,
+                    allow_nan=False, allow_infinity=False)
 
 if HAVE_HYPOTHESIS:
     @settings(max_examples=200, deadline=None)
