@@ -8,12 +8,21 @@ refactor.
 The ``seed_before`` block is the measurement of the pre-engine host-driven
 solver (3-4 jitted dispatches + 3 blocking scalar syncs per outer iteration),
 taken on this container at the refactor commit; the ``engine_after`` block is
-re-measured on every run.
+re-measured on every run. The ``mesh_2x4`` block re-measures the same two
+benchmarks through the mesh-native engine on a 2x4 mesh of 8 forced host
+devices (in a subprocess: device count must be fixed before jax
+initializes); ``seed_distributed`` records the per-outer-iteration budget of
+the seed-era core/distributed.py host loop that the mesh-native engine
+replaced (counted from its code structure: scores/topk/gather/gram/inner/
+scatter/apply_ws launches + kkt/gsupp/epochs blocking pulls).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -37,6 +46,18 @@ SEED_BEFORE = {
                  "host_syncs_per_outer": 3.0},
 }
 
+# the seed-era distributed host loop (deleted by the mesh-native engine):
+# per outer iteration it launched scores + topk + gather + gram + _inner_gram
+# + scatter + apply_ws (7 jitted dispatches) and blocked on float(max(sc)),
+# int(sum(gsupp)) and int(n_ep) (3 syncs), retracing the penalty closure per
+# lambda; quadratic datafits only
+SEED_DISTRIBUTED = {
+    "jit_dispatches_per_outer": 7.0,
+    "host_syncs_per_outer": 3.0,
+    "retrace_per_lambda": True,
+    "datafits": ["Quadratic", "MultitaskQuadratic", "QuadraticSVC"],
+}
+
 CONFIGS = {
     "small": {
         "fig2_lasso": dict(n=300, p=1500, n_nonzero=30),
@@ -49,14 +70,14 @@ CONFIGS = {
 }
 
 
-def _measure(bench, cfg):
+def _measure(bench, cfg, mesh=None):
     X, y, _ = make_correlated_design(seed=0, rho=0.5, snr=5.0, **cfg)
     X, y = jnp.asarray(X), jnp.asarray(y)
     lam = lambda_max(X, y) / 10
     penalty = L1(lam) if bench == "fig2_lasso" else MCP(lam, 3.0)
     kw = dict(tol=1e-10, max_outer=100)
 
-    engine = make_engine(penalty, Quadratic())
+    engine = make_engine(penalty, Quadratic(), mesh=mesh)
     solve(X, y, Quadratic(), penalty, engine=engine, **kw)   # compile
     wall = float("inf")
     for _ in range(3):                                       # best of 3
@@ -77,16 +98,58 @@ def _measure(bench, cfg):
     }
 
 
+_SHARDED_MARK = "BENCH_SHARDED_JSON:"
+
+
+def _child_sharded(scale):
+    """Runs inside the 8-device subprocess: measure the 2x4 mesh engine."""
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((2, 4))
+    out = {}
+    for bench, cfg in CONFIGS[scale].items():
+        out[bench] = _measure(bench, cfg, mesh=mesh)
+    print(_SHARDED_MARK + json.dumps(out, default=float))
+
+
+def _measure_sharded(scale):
+    """Launch the 2x4-mesh measurement in a subprocess (the forced 8-device
+    host platform must be configured before jax initializes)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_engine",
+         "--child-sharded", "--scale", scale],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "PYTHONPATH": "src"})
+    if r.returncode != 0:
+        raise SystemExit(f"sharded bench subprocess failed:\n{r.stdout}"
+                         f"\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith(_SHARDED_MARK):
+            return json.loads(line[len(_SHARDED_MARK):])
+    raise SystemExit(f"sharded bench subprocess emitted no result:"
+                     f"\n{r.stdout}\n{r.stderr}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the 2x4-mesh subprocess measurement")
+    ap.add_argument("--child-sharded", action="store_true",
+                    help=argparse.SUPPRESS)       # internal: subprocess mode
+    ap.add_argument("--scale", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
-    scale = "smoke" if args.smoke else "small"
+    scale = args.scale or ("smoke" if args.smoke else "small")
+    if args.child_sharded:
+        _child_sharded(scale)
+        return
     out_path = args.out or ("experiments/bench/BENCH_engine_smoke.json"
                             if args.smoke else "BENCH_engine.json")
 
-    report = {"scale": scale, "seed_before": SEED_BEFORE, "engine_after": {}}
+    report = {"scale": scale, "seed_before": SEED_BEFORE,
+              "seed_distributed": SEED_DISTRIBUTED, "engine_after": {}}
     for bench, cfg in CONFIGS[scale].items():
         report["engine_after"][bench] = _measure(bench, cfg)
         after = report["engine_after"][bench]
@@ -100,7 +163,20 @@ def main(argv=None):
         if after["host_syncs_per_outer"] > 1.0 + 1e-9:
             raise SystemExit(f"{bench} exceeded 1 host sync per outer iter")
 
-    import os
+    if not args.no_sharded:
+        report["mesh_2x4"] = _measure_sharded(scale)
+        for bench, m in report["mesh_2x4"].items():
+            print(f"{bench} [mesh 2x4]: {m['wall_s']:.3f}s, "
+                  f"{m['jit_dispatches_per_outer']:.2f} dispatches/outer, "
+                  f"{m['host_syncs_per_outer']:.2f} syncs/outer "
+                  f"(seed distributed loop: "
+                  f"{SEED_DISTRIBUTED['jit_dispatches_per_outer']:.2f} / "
+                  f"{SEED_DISTRIBUTED['host_syncs_per_outer']:.2f})")
+            if not m["converged"]:
+                raise SystemExit(f"{bench} [mesh] did not converge")
+            if m["host_syncs_per_outer"] > 1.0 + 1e-9:
+                raise SystemExit(f"{bench} [mesh] exceeded 1 sync per outer")
+
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:

@@ -1,9 +1,13 @@
-"""Distributed sparse GLM solve on a (data, model) mesh (DESIGN.md §3).
+"""Distributed sparse GLM solves on a (data, model) mesh (DESIGN.md §6).
 
 The paper's huge-scale regime: X too big for one device, sharded samples x
-features. On this CPU container we force 8 host devices to demonstrate the
-real multi-device path (the same code lowers on the 256-chip production mesh
-— see src/repro/launch/dryrun_solver.py).
+features. Since the mesh-native engine refactor this is just `mesh=` on the
+ordinary API — the same fused outer step (1 dispatch + 1 host sync per outer
+iteration, one compiled program per working-set bucket) runs under shard_map
+on any mesh, and Xb-form datafits (here: sparse logistic regression) shard
+too. On this CPU container we force 8 host devices to demonstrate the real
+multi-device path (the same code lowers on the 256-chip production mesh —
+see src/repro/launch/dryrun_solver.py).
 
 Run: PYTHONPATH=src python examples/distributed_lasso.py
 """
@@ -14,17 +18,18 @@ import time                        # noqa: E402
 import jax                         # noqa: E402
 jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp            # noqa: E402
-import numpy as np                 # noqa: E402
 
-from repro.core import MCP, L1, Quadratic, lambda_max       # noqa: E402
-from repro.core.distributed import shard_design, solve_distributed  # noqa: E402
-from repro.core.api import lasso                             # noqa: E402
-from repro.data.synth import make_correlated_design          # noqa: E402
+from repro.core import (MCP, L1, Logistic, Quadratic, lambda_max,  # noqa: E402
+                        make_engine, solve)
+from repro.core.api import lasso, sparse_logreg                    # noqa: E402
+from repro.core.distributed import shard_design                    # noqa: E402
+from repro.launch.mesh import make_test_mesh                       # noqa: E402
+from repro.data.synth import (make_classification,                 # noqa: E402
+                              make_correlated_design)
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_test_mesh((2, 4), ("data", "model"))
     print(f"devices: {len(jax.devices())}, mesh: "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
@@ -32,23 +37,36 @@ def main():
                                              rho=0.5, snr=5.0, seed=0)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     lmax = lambda_max(Xj, yj)
+    # optional: pre-place the design (solve(mesh=...) would do it lazily)
     Xs, ys = shard_design(mesh, Xj, yj)
     print(f"X sharded over {len(Xs.sharding.device_set)} devices "
           f"({Xs.nbytes / 2**20:.1f} MiB global)")
 
     for name, pen in (("lasso", L1(lmax / 10)), ("mcp", MCP(lmax / 5, 3.0))):
+        eng = make_engine(pen, Quadratic(), mesh=mesh)
         t0 = time.perf_counter()
-        res = solve_distributed(mesh, Xs, ys, Quadratic(), pen, tol=1e-8)
+        res = solve(Xs, ys, Quadratic(), pen, tol=1e-8, engine=eng)
         dt = time.perf_counter() - t0
-        print(f"[dist {name}] {dt:.2f}s kkt={res.kkt:.2e} "
+        iters = max(len(res.kkt_history), 1)
+        print(f"[mesh {name}] {dt:.2f}s kkt={res.kkt:.2e} "
               f"nnz={int(jnp.sum(res.beta != 0))} epochs={res.n_epochs} "
-              f"ws_max={max(res.ws_history or [0])}")
+              f"dispatches/outer={eng.n_dispatches / iters:.2f} "
+              f"syncs/outer={res.n_host_syncs / iters:.2f}")
+
+    # Xb-form datafit on the same mesh (the seed loop raised here)
+    Xc, yc, _ = make_classification(n=1024, p=2048, n_nonzero=32, seed=0)
+    Xc, yc = jnp.asarray(Xc), jnp.asarray(yc)
+    laml = lambda_max(Xc, yc, Logistic()) / 5
+    t0 = time.perf_counter()
+    res = sparse_logreg(Xc, yc, laml, tol=1e-7, mesh=mesh)
+    print(f"[mesh logreg] {time.perf_counter() - t0:.2f}s kkt={res.kkt:.2e} "
+          f"nnz={int(jnp.sum(res.beta != 0))}")
 
     # single-device reference agrees
     ref = lasso(Xj, yj, lmax / 10, tol=1e-8)
-    res = solve_distributed(mesh, Xs, ys, Quadratic(), L1(lmax / 10), tol=1e-8)
+    res = lasso(Xs, ys, lmax / 10, tol=1e-8, mesh=mesh)
     err = float(jnp.max(jnp.abs(res.beta - ref.beta)))
-    print(f"max |beta_dist - beta_ref| = {err:.2e}")
+    print(f"max |beta_mesh - beta_ref| = {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,11 @@
-"""Convenience API: lambda_max, duality gaps, and named estimators."""
+"""Convenience API: lambda_max, duality gaps, and named estimators.
+
+Every estimator helper forwards its keyword arguments to
+``core.solver.solve``, so all of them accept ``mesh=`` (plus
+``data_axis=``/``model_axis=``) to run on the mesh-native sharded engine —
+e.g. ``lasso(X, y, lam, mesh=make_solver_mesh())`` solves the same problem
+with X sharded samples x features over the mesh (DESIGN.md §6).
+"""
 from __future__ import annotations
 
 import jax

@@ -32,15 +32,24 @@ def _prox_coord(penalty, x, step, j):
     return penalty.prox(x, step)
 
 
-def cd_epoch_xb(Xt_ws, y, beta_ws, Xb, L_ws, offset_ws, datafit, penalty):
-    """One cyclic CD epoch over the working set; X stored transposed [K, n]."""
+def cd_epoch_xb(Xt_ws, y, beta_ws, Xb, L_ws, offset_ws, datafit, penalty,
+                axis=None):
+    """One cyclic CD epoch over the working set; X stored transposed [K, n].
+
+    `axis` names a mesh axis the samples are sharded over (mesh-native
+    engine, DESIGN.md §6): Xt_ws/y/Xb then hold the local rows and each
+    coordinate gradient is completed with one scalar psum. beta stays
+    replicated."""
     K = Xt_ws.shape[0]
 
     def body(i, state):
         beta, Xb = state
         xj = Xt_ws[i]
         raw = datafit.raw_grad(Xb, y)
-        gj = xj @ raw + offset_ws[i]
+        gj = xj @ raw
+        if axis is not None:
+            gj = jax.lax.psum(gj, axis)
+        gj = gj + offset_ws[i]
         Lj = L_ws[i]
         step = 1.0 / jnp.maximum(Lj, 1e-30)
         new = _prox_coord(penalty, beta[i] - gj * step, step, i)

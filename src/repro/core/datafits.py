@@ -9,6 +9,11 @@ Each datafit implements:
   HAS_GRAM            -> True when f is quadratic so the Gram fast path
                          G = X_ws^T X_ws (TPU/MXU-friendly inner solver) applies.
   make_gram(X_ws, y)  -> (G, c) with grad_ws(beta) = G beta - c  (HAS_GRAM only)
+  SAMPLE_MEAN         -> True when value/raw_grad/make_gram normalize by the
+                         number of samples n (sample-mean losses). The
+                         mesh-native engine uses it to rescale per-shard
+                         quantities to the GLOBAL n before psum
+                         (DESIGN.md §6); the dual SVM is an un-normalized sum.
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ def _register(cls):
 class Quadratic:
     """F(Xb) = ||y - Xb||^2 / (2 n)  (Lasso / elastic-net / MCP regression)."""
     HAS_GRAM = True
+    SAMPLE_MEAN = True
 
     def value(self, Xb, y):
         n = y.shape[0]
@@ -68,6 +74,7 @@ class Quadratic:
 class Logistic:
     """F(Xb) = (1/n) sum log(1 + exp(-y * Xb)), y in {-1, +1}."""
     HAS_GRAM = False
+    SAMPLE_MEAN = True
 
     def value(self, Xb, y):
         n = y.shape[0]
@@ -98,6 +105,7 @@ class QuadraticSVC:
     (shape d x n) plus a constant linear term -1 (grad_offset).
     """
     HAS_GRAM = True
+    SAMPLE_MEAN = False
 
     def value(self, Xb, y):
         # Xb = Z^T alpha (shape d). The -sum(alpha) part is added by the solver
@@ -130,6 +138,7 @@ class QuadraticSVC:
 class MultitaskQuadratic:
     """F(XW) = ||Y - XW||_F^2 / (2 n); blocks = rows of W (paper Appendix D)."""
     HAS_GRAM = True
+    SAMPLE_MEAN = True
 
     def value(self, Xb, y):
         n = y.shape[0]

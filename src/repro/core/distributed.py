@@ -1,74 +1,78 @@
-"""Distributed skglm solver for huge-scale designs (DESIGN.md §2/§3).
+"""Distributed solves for huge-scale designs — facade over the mesh-native
+engine (DESIGN.md §6).
 
 The paper's target regime — "millions of samples and features" — exceeds one
 device's HBM, so X is sharded over a (data, model) mesh: samples over `data`,
-features over `model`. The decomposition keeps every O(np) term a distributed
-MXU matmul and quarantines the sequential CD to a replicated K x K Gram
-subproblem (K = working-set size, small by design of Algorithm 1):
+features over `model`. Historically this module carried its own host-driven
+outer loop (~7 dispatches and syncs per outer iteration, full retrace per
+lambda, quadratic datafits only). That loop is gone: `solve_distributed` now
+delegates to `core.solver.solve(mesh=...)`, whose fused shard_map outer step
+gives sharded solves the exact same 1-dispatch / 1-sync budget, bucketed
+compilation, warm starts and Xb-form datafits (Logistic, QuadraticSVC) as a
+single-device solve. `shard_design` remains the supported way to place a
+design on a mesh.
 
-  score pass   shard_map: grad_loc = X_loc^T r_loc, psum over `data`;
-               each device scores its own feature shard (no p-vector gather).
-  top-k        local top-k per model shard, allgather of 2K candidates,
-               global top-k over K * n_model_shards entries (exact).
-  gather ws    X[:, ws] -> [n, K] sharded over `data` only.
-  Gram         G = X_ws^T X_ws: one MXU matmul + psum over `data`;
-               G is K x K, replicated.
-  inner CD     replicated Anderson-CD on the Gram (identical on all devices —
-               cheaper than per-coordinate cross-device reductions; this is
-               the deliberate departure from GPU/NCCL-style sharded CD).
-  scatter      beta[ws] update: beta stays sharded over `model`.
-
-Works on any mesh including 1x1 (single-device tests are bit-identical to the
-reference solver for quadratic datafits).
+`make_distributed_ops` (the seed-era bag of per-stage jitted primitives) is
+kept only for the production dry-run's per-primitive cost accounting and is
+DEPRECATED: new code should use the engine through `solve(mesh=...)`.
 """
 from __future__ import annotations
 
-import math
+import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-try:
-    from jax import shard_map as _jax_shard_map
-except ImportError:                      # jax < 0.5: experimental namespace
-    from jax.experimental.shard_map import shard_map as _jax_shard_map
-
-import inspect as _inspect
-
-_HAS_CHECK_VMA = "check_vma" in _inspect.signature(_jax_shard_map).parameters
-
-
-def shard_map(f, **kw):
-    """shard_map with the `check_vma` kwarg mapped to pre-0.5 `check_rep`."""
-    if "check_vma" in kw and not _HAS_CHECK_VMA:
-        kw["check_rep"] = kw.pop("check_vma")
-    return _jax_shard_map(f, **kw)
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .solver import SolveResult, _inner_gram
-from .working_set import grow_ws_size, violation_scores
+from repro.launch.mesh import shard_map
+from repro.launch.shardings import design_specs
+
+from .solver import SolveResult, solve
+from .working_set import select_working_set_local, violation_scores
 
 __all__ = ["shard_design", "solve_distributed", "make_distributed_ops"]
 
 
 def shard_design(mesh, X, y, data_axis="data", model_axis="model"):
     """Place X [n, p] over (data, model) and y [n] over (data,)."""
-    Xs = jax.device_put(X, NamedSharding(mesh, P(data_axis, model_axis)))
-    ys = jax.device_put(y, NamedSharding(mesh, P(data_axis)))
+    xspec, yspec, _ = design_specs(data_axis, model_axis)
+    Xs = jax.device_put(X, NamedSharding(mesh, xspec))
+    ys = jax.device_put(y, NamedSharding(mesh, yspec))
     return Xs, ys
+
+
+def solve_distributed(mesh, X, y, datafit, penalty, *, tol=1e-6, max_outer=50,
+                      max_epochs=1000, M=5, p0=64, data_axis="data",
+                      model_axis="model", **solve_kw) -> SolveResult:
+    """Distributed Algorithm 1 on a (data, model) mesh.
+
+    Thin facade over ``core.solver.solve(mesh=...)`` — one fused shard_map
+    dispatch and one host sync per outer iteration, any datafit the engine
+    supports (Gram-form quadratics AND Xb-form Logistic / QuadraticSVC).
+    X, y may be pre-sharded (see shard_design); unsharded input is placed on
+    the mesh automatically.
+    """
+    return solve(X, y, datafit, penalty, tol=tol, max_outer=max_outer,
+                 max_epochs=max_epochs, M=M, p0=p0, mesh=mesh,
+                 data_axis=data_axis, model_axis=model_axis, **solve_kw)
 
 
 def make_distributed_ops(mesh, n, p, penalty, *, data_axis="data",
                          model_axis="model"):
-    """Build the jitted sharded primitives for an (n, p) design on `mesh`.
+    """DEPRECATED: per-stage sharded primitives of the seed-era distributed
+    loop. The mesh-native engine (core/engine.py) fuses all of them into one
+    program; this factory survives only for the production dry-run's
+    per-primitive cost/collective accounting (launch/dryrun_solver.py).
 
-    The penalty's hyper-parameters are closed over (a path re-traces per
-    lambda; the inner Gram solver is the reusable compiled piece).
+    The penalty's hyper-parameters are closed over (the engine, by contrast,
+    treats them as pytree leaves and never retraces on a lambda change).
     """
-    n_model = mesh.shape[model_axis]
-    xspec = P(data_axis, model_axis)
-    yspec = P(data_axis)
-    bspec = P(model_axis)
+    warnings.warn(
+        "make_distributed_ops is deprecated: use solve(mesh=...) / "
+        "reg_path(mesh=...) on the mesh-native engine instead",
+        DeprecationWarning, stacklevel=2)
+    xspec, yspec, bspec = design_specs(data_axis, model_axis)
 
     @partial(jax.jit,
              in_shardings=(NamedSharding(mesh, xspec),
@@ -90,22 +94,13 @@ def make_distributed_ops(mesh, n, p, penalty, *, data_axis="data",
 
     @partial(jax.jit, static_argnames=("k",))
     def global_topk(scores_arr, gsupp, k: int):
-        """Exact distributed top-k: local top-k per shard -> global top-k."""
-        pri = jnp.where(gsupp, jnp.inf, scores_arr)
-        loc_k = min(k, p // n_model)
-
-        def local(pri_loc):
-            v, i = jax.lax.top_k(pri_loc, loc_k)
-            base = jax.lax.axis_index(model_axis) * pri_loc.shape[0]
-            return v[None], (i + base)[None]
-
-        v_all, i_all = shard_map(
-            local, mesh=mesh, in_specs=(bspec,),
-            out_specs=(P(model_axis), P(model_axis)), check_vma=False)(pri)
-        v_flat, i_flat = v_all.reshape(-1), i_all.reshape(-1)
-        _, sel = jax.lax.top_k(v_flat, min(k, v_flat.shape[0]))
-        ws = i_flat[sel]
-        return ws
+        """Exact distributed top-k (working_set.select_working_set_local):
+        min(k, shard_width) local candidates per shard, so concentrated
+        generalized support is never silently dropped."""
+        local = partial(select_working_set_local, ws_size=k,
+                        model_axis=model_axis)
+        return shard_map(local, mesh=mesh, in_specs=(bspec, bspec),
+                         out_specs=P(), check_vma=False)(scores_arr, gsupp)
 
     @partial(jax.jit,
              in_shardings=(NamedSharding(mesh, xspec), None),
@@ -135,56 +130,3 @@ def make_distributed_ops(mesh, n, p, penalty, *, data_axis="data",
     return {"lipschitz": lipschitz, "scores": scores, "topk": global_topk,
             "gather": gather_cols, "gram": gram, "apply_ws": apply_ws,
             "scatter": scatter}
-
-
-def solve_distributed(mesh, X, y, datafit, penalty, *, tol=1e-6, max_outer=50,
-                      max_epochs=1000, M=5, p0=64, data_axis="data",
-                      model_axis="model") -> SolveResult:
-    """Distributed Algorithm 1 for quadratic datafits on a (data, model) mesh.
-
-    X, y must already be sharded (see shard_design); the working-set inner
-    solve runs replicated on the K x K Gram.
-    """
-    if not datafit.HAS_GRAM:
-        raise NotImplementedError("distributed path requires a quadratic datafit")
-    n, p = X.shape
-    ops = make_distributed_ops(mesh, n, p, penalty, data_axis=data_axis,
-                               model_axis=model_axis)
-    L = ops["lipschitz"](X, y)
-    beta = jnp.zeros((p,), X.dtype)
-    beta = jax.device_put(beta, NamedSharding(mesh, P(model_axis)))
-    r = jax.device_put(jnp.zeros((n,), X.dtype),
-                       NamedSharding(mesh, P(data_axis)))   # residual Xb
-
-    max_blocks = max(1, math.ceil(max_epochs / M))
-    res = SolveResult(beta=beta, kkt=float("inf"), converged=False,
-                      n_outer=0, n_epochs=0)
-    ws_size = 0
-    kkt = float("inf")
-    for t in range(max_outer):
-        raw = datafit.raw_grad(r, y)             # elementwise on data shards
-        sc = ops["scores"](X, raw, beta, L)
-        gsupp = penalty.generalized_support(beta)
-        kkt = float(jnp.max(sc))
-        res.kkt_history.append(kkt)
-        if kkt <= tol:
-            res.converged = True
-            res.n_outer = t
-            break
-        res.n_outer = t + 1
-        ws_size = grow_ws_size(ws_size, int(jnp.sum(gsupp)), p, p0=p0)
-        res.ws_history.append(ws_size)
-        ws = ops["topk"](sc, gsupp, ws_size)
-        X_ws = ops["gather"](X, ws)
-        G, c = ops["gram"](X_ws, y)
-        L_ws = L[ws]
-        eps_in = max(0.3 * kkt, 0.1 * tol)
-        beta_ws, n_ep, _ = _inner_gram(G, c, beta[ws], L_ws, penalty,
-                                       eps_in, M, max_blocks, False)
-        res.n_epochs += int(n_ep)
-        beta = ops["scatter"](beta, ws, beta_ws)
-        r = ops["apply_ws"](X_ws, beta_ws)
-
-    res.beta = beta
-    res.kkt = kkt
-    return res

@@ -27,6 +27,14 @@ Working-set sizes are bucketed to powers of two (working_set.BucketPolicy) so
 a whole regularization path reuses one compiled step per bucket; penalties
 and datafits are pytrees with hyper-parameters as leaves, so lambda changes
 never retrace.
+
+Mesh-native mode (DESIGN.md §6): constructed with a (data, model) mesh, the
+SAME fused outer step runs under shard_map — X sharded samples x features,
+beta/L/offset over features, y/Xb over samples; the score pass psums the
+gradient over the data axis, working-set selection is an exact distributed
+top-k over the model axis, and the K-sized inner subproblem runs replicated
+(Gram form) or with per-coordinate data-axis psums (Xb form). One jitted
+program per working-set bucket serves any mesh, including 1x1.
 """
 from __future__ import annotations
 
@@ -36,10 +44,16 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import shard_map
+from repro.launch.shardings import design_specs
 
 from .anderson import anderson_extrapolate
 from .cd import cd_epoch_gram, cd_epoch_xb
-from .working_set import select_working_set, violation_scores
+from .working_set import (gather_ws_cols, gather_ws_vec, scatter_ws,
+                          select_working_set, select_working_set_local,
+                          shard_ws_mask, violation_scores)
 
 __all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
            "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS"]
@@ -85,7 +99,12 @@ class EngineConfig:
 
 @dataclass(frozen=True)
 class WorkingSetContext:
-    """Gathered per-working-set tensors consumed by a SubproblemSolver."""
+    """Gathered per-working-set tensors consumed by a SubproblemSolver.
+
+    `axis` names the mesh axis the SAMPLES are sharded over when the solve
+    runs inside shard_map (mesh-native engine): Xt_ws/y then hold local rows
+    and the Xb solver completes each n-reduction with a psum over `axis`.
+    """
     Xt_ws: jax.Array                 # [K, n] gathered design, transposed
     y: jax.Array
     L_ws: jax.Array                  # [K]
@@ -94,6 +113,50 @@ class WorkingSetContext:
     penalty: object
     G: jax.Array = None              # [K, K] (Gram solvers only)
     c: jax.Array = None              # [K(, T)] (Gram solvers only)
+    axis: str = None                 # data-shard mesh axis (sharded Xb form)
+    Xb_base: jax.Array = None        # Xb0 - X_ws beta_ws0: residual of the
+                                     # nonzero coordinates OUTSIDE ws (Xb
+                                     # solvers; Box pins coords at C with
+                                     # empty generalized support)
+
+
+def _psum_if(x, axis):
+    """psum over `axis`, statically elided for unsplit (size-1) axes."""
+    return x if axis is None else jax.lax.psum(x, axis)
+
+
+class _ShardedDatafit:
+    """Per-shard view of a datafit inside shard_map.
+
+    Sample-mean datafits (SAMPLE_MEAN) normalize by the LOCAL row count when
+    handed a shard, so their outputs are rescaled by 1/n_data_shards to make
+    them partial terms of the global-n quantities: raw_grad stays local
+    (per-sample, correctly scaled), value() completes the objective with a
+    psum over the data axis. `axis=None` (samples unsplit) makes both
+    pass-throughs — the wrapper then lowers to the plain datafit.
+    """
+
+    def __init__(self, base, n_data_shards: int, axis: str):
+        self.base = base
+        # SAMPLE_MEAN is consulted only when the samples are actually split
+        # (mesh engines validate it exists at entry): guessing a default
+        # would silently mis-scale sum-form custom datafits on data-split
+        # meshes, while dense engines must keep working with any datafit
+        self.corr = (1.0 if n_data_shards == 1
+                     else 1.0 / n_data_shards if base.SAMPLE_MEAN else 1.0)
+        self.axis = axis
+
+    @property
+    def sample_mean(self):
+        return self.base.SAMPLE_MEAN
+
+    def raw_grad(self, Xb, y):
+        raw = self.base.raw_grad(Xb, y)
+        return raw * self.corr if self.corr != 1.0 else raw
+
+    def value(self, Xb, y):
+        v = self.base.value(Xb, y)
+        return _psum_if(v * self.corr if self.corr != 1.0 else v, self.axis)
 
 
 class SubproblemSolver:
@@ -192,13 +255,22 @@ class GramSolver(SubproblemSolver):
 
 
 class XbSolver(SubproblemSolver):
-    """General datafits (Algorithm 3 verbatim): state Xb = X_ws beta."""
+    """General datafits (Algorithm 3 verbatim): state Xb = X_ws beta
+    (+ ctx.Xb_base, the constant contribution of nonzero coordinates outside
+    the working set — without it, Anderson candidates rebuilt by `refresh`
+    silently dropped those coordinates' residual and the solver could accept
+    a corrupted state while reporting convergence, e.g. dual SVC at small C
+    with bound-pinned coordinates outside ws under use_gram=False)."""
+
+    def _rebuild(self, ctx, beta):
+        Xb = _apply_T(ctx.Xt_ws, beta)
+        return Xb if ctx.Xb_base is None else ctx.Xb_base + Xb
 
     def prepare(self, ctx, beta0):
-        return _apply_T(ctx.Xt_ws, beta0)
+        return self._rebuild(ctx, beta0)
 
     def refresh(self, ctx, beta):
-        return _apply_T(ctx.Xt_ws, beta)
+        return self._rebuild(ctx, beta)
 
     def epoch(self, ctx, beta, aux):
         if self.config.backend == "pallas":
@@ -210,14 +282,19 @@ class XbSolver(SubproblemSolver):
                                     penalty_params(ctx.penalty), kind,
                                     epochs=1)
         return cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
-                           ctx.offset_ws, ctx.datafit, ctx.penalty)
+                           ctx.offset_ws, ctx.datafit, ctx.penalty,
+                           axis=ctx.axis)
 
     def objective(self, ctx, beta, aux):
+        # ctx.datafit.value is globally reduced already in sharded contexts
+        # (_ShardedDatafit psums internally); the K-sized terms are replicated
         return (ctx.datafit.value(aux, ctx.y) + _lin(ctx.offset_ws, beta)
                 + ctx.penalty.value(beta))
 
     def gradient(self, ctx, beta, aux):
         grad = ctx.Xt_ws @ ctx.datafit.raw_grad(aux, ctx.y)
+        if ctx.axis is not None:
+            grad = jax.lax.psum(grad, ctx.axis)
         return grad + (ctx.offset_ws[:, None] if grad.ndim == 2
                        else ctx.offset_ws)
 
@@ -229,10 +306,24 @@ class SolveEngine:
     plus one jitted multi-lambda chunk step, and records:
       retraces:    {bucket or ("chunk", bucket, n_lanes): trace count}
       n_dispatches: fused-step launches (== outer iterations driven)
+
+    Constructed with `mesh` (a jax Mesh with a data and a model axis) the
+    same fused step runs under shard_map on the (samples x features)-sharded
+    design — the host loop, bucket schedule, dispatch/sync budget and
+    retrace counters are identical from one device to a pod (DESIGN.md §6).
     """
 
-    def __init__(self, config: EngineConfig):
+    def __init__(self, config: EngineConfig, mesh=None, data_axis="data",
+                 model_axis="model"):
         self.config = config
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
+        if mesh is not None:
+            missing = {data_axis, model_axis} - set(mesh.axis_names)
+            if missing:
+                raise ValueError(
+                    f"mesh axes {sorted(missing)} not in {mesh.axis_names}")
         self.retraces: dict = {}
         self.n_dispatches = 0
         self._jstep = jax.jit(self._outer_step, static_argnames=("bucket",))
@@ -243,46 +334,122 @@ class SolveEngine:
         cfg = self.config
         return GramSolver(cfg) if cfg.gram else XbSolver(cfg)
 
-    # ------------------------------------------------------------ traced body
-    def _step_body(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
-                   eps_frac, bucket):
-        """Fused: score -> select -> gather -> inner solve -> scatter.
+    def _specs(self):
+        """(X, y/Xb, beta/L/offset) PartitionSpecs on the engine's mesh."""
+        return design_specs(self.data_axis, self.model_axis)
 
-        Returns (beta', Xb', kkt, obj, gsupp-count of beta', inner epochs).
-        kkt/obj are measured on the *incoming* iterate (the convergence test
-        for this outer iteration); when it already passes tol the inner solve
-        is skipped via lax.cond, so the converged launch is nearly free.
+    def _n_data_shards(self):
+        return self.mesh.shape[self.data_axis] if self.mesh is not None else 1
+
+    def _live_axes(self):
+        """(data_axis | None, model_axis | None): axis names with the size-1
+        (unsplit) axes dropped — and both None on a dense (mesh-less) engine.
+        Every collective/mask keyed on a None axis is elided statically, so
+        ONE traced body serves dense and sharded engines alike: the 1x1 mesh
+        lowers to the exact dense program (bit-identical solves) and
+        partially-split meshes skip the no-op collectives on the unsplit
+        axis."""
+        if self.mesh is None:
+            return None, None
+        da = self.data_axis if self.mesh.shape[self.data_axis] > 1 else None
+        ma = self.model_axis if self.mesh.shape[self.model_axis] > 1 else None
+        return da, ma
+
+    # ------------------------------------------------------------ traced body
+    # One body serves every engine: on a mesh it runs INSIDE shard_map on the
+    # local blocks; dense engines call it directly with the global arrays
+    # (all collectives/masks statically elided via _live_axes -> None, None).
+    def _score_pass(self, X, y, beta, Xb, L, offset, datafit, penalty):
+        """Shared head of the fused step and the probe.
+
+        Returns (sdf, grad, scores, kkt, gsupp, gcount, obj): grad/scores are
+        this shard's feature block with the data-axis reduction done; kkt,
+        gcount and obj are replicated scalars.
         """
         cfg = self.config
-        grad = X.T @ datafit.raw_grad(Xb, y)
-        grad = grad + (offset[:, None] if grad.ndim == 2 else offset)
+        da, ma = self._live_axes()
+        sdf = _ShardedDatafit(datafit, self._n_data_shards(), da)
+        raw = sdf.raw_grad(Xb, y)
+        grad = X.T @ raw
+        grad = _psum_if(grad, da) + (offset[:, None] if grad.ndim == 2
+                                     else offset)
         scores = violation_scores(penalty, beta, grad, L,
                                   use_fixed_point=cfg.use_fp_score)
         kkt = jnp.max(scores)
+        if ma is not None:
+            kkt = jax.lax.pmax(kkt, ma)
         gsupp = penalty.generalized_support(beta)
-        obj = datafit.value(Xb, y) + _lin(offset, beta) + penalty.value(beta)
+        gcount = _psum_if(jnp.sum(gsupp, dtype=jnp.int32), ma)
+        if ma is None:
+            obj = sdf.value(Xb, y) + _lin(offset, beta) + \
+                penalty.value(beta)
+        else:
+            obj = sdf.value(Xb, y) + \
+                jax.lax.psum(_lin(offset, beta) + penalty.value(beta), ma)
+        return sdf, grad, scores, kkt, gsupp, gcount, obj
 
-        ws = select_working_set(scores, gsupp, bucket)
-        Xt_ws = X[:, ws].T               # [K, n], contiguous rows for CD
-        L_ws = L[ws]
-        offset_ws = offset[ws]
-        beta_ws0 = beta[ws]
+    def _step_body(self, X, y, beta, Xb, L, offset, datafit, penalty,
+                   tol, eps_frac, bucket):
+        """Fused: score -> select -> gather -> inner solve -> scatter.
+
+        On a mesh: local views X [n_loc, width], y/Xb [n_loc], beta/L/offset
+        [width]; working-set indices are global; the K-sized subproblem runs
+        replicated over the whole mesh (Gram form) or keeps its rows
+        data-sharded with per-coordinate psums (Xb form).
+
+        Returns (beta', Xb', kkt, obj, gsupp-count of beta', inner epochs,
+        support-covered flag). kkt/obj are measured on the *incoming* iterate
+        (the convergence test for this outer iteration); when it already
+        passes tol the inner solve is skipped via lax.cond, so the converged
+        launch is nearly free. The covered flag asserts the selected working
+        set retained the whole generalized support (it must, while the
+        bucket policy keeps bucket >= |gsupp|).
+        """
+        cfg = self.config
+        da, ma = self._live_axes()
+        width = X.shape[1]
+        n_glob = X.shape[0] * self._n_data_shards()
+        sdf, grad, scores, kkt, gsupp, gcount0, obj = self._score_pass(
+            X, y, beta, Xb, L, offset, datafit, penalty)
+
+        ws = select_working_set_local(scores, gsupp, bucket, ma)
+        mine, loc = shard_ws_mask(ws, width, ma)
+        L_ws = gather_ws_vec(L, mine, loc, ma)
+        offset_ws = gather_ws_vec(offset, mine, loc, ma)
+        beta_ws0 = gather_ws_vec(beta, mine, loc, ma)
+        grad_ws0 = gather_ws_vec(grad, mine, loc, ma)
+        in_ws = gsupp[loc] if mine is None else jnp.where(mine, gsupp[loc],
+                                                          False)
+        cov = _psum_if(jnp.sum(in_ws, dtype=jnp.int32), ma) == gcount0
+        X_ws = gather_ws_cols(X, mine, loc, ma)     # [n_loc, K], model-repl.
         pen_ws = penalty.restricted(ws) if hasattr(penalty, "restricted") \
             else penalty
         eps_in = jnp.maximum(eps_frac * kkt, 0.1 * tol)
         done = kkt <= tol
         inner = self._make_inner()
+        # the pass-through sdf wrapper would break the pallas kernels'
+        # datafit-kind lookup; hand the inner solver the bare datafit
+        # whenever the samples are unsplit
+        ctx_df = datafit if da is None else sdf
 
         if cfg.gram:
-            G, _ = datafit.make_gram(Xt_ws.T, y)
+            if da is None:
+                # samples unsplit: honor the datafit's own make_gram (c is
+                # discarded — it assumes support ⊆ ws; see linearization)
+                G, _ = datafit.make_gram(X_ws, y)
+            else:
+                # exact distributed Gram: one sharded MXU matmul + psum; the
+                # K x K subproblem and its Anderson-CD run replicated
+                G = jax.lax.psum(X_ws.T @ X_ws, da)
+                if sdf.sample_mean:
+                    G = G / n_glob
             # linearize at the incoming iterate: grad_ws(b) = G (b - b0) +
             # grad0_ws, exact for quadratic datafits even when nonzero
             # coordinates live outside ws (Box pins coords at C with empty
-            # generalized support); make_gram's own c assumes support ⊆ ws
+            # generalized support)
             q0 = G @ beta_ws0
-            grad_ws0 = grad[ws]
             c = q0 - grad_ws0
-            ctx = WorkingSetContext(Xt_ws, y, L_ws, offset_ws, datafit,
+            ctx = WorkingSetContext(X_ws.T, y, L_ws, offset_ws, ctx_df,
                                     pen_ws, G=G, c=c)
 
             def run(_):
@@ -294,12 +461,17 @@ class SolveEngine:
                 return beta_ws0, jnp.zeros((), jnp.int32)
 
             beta_ws, n_ep = jax.lax.cond(done, skip, run, None)
-            # incremental: exact even when a nonzero coordinate sits outside
-            # ws (Box pins coords at C with empty generalized support)
-            Xb_new = Xb + _apply_T(Xt_ws, beta_ws - beta_ws0)
+            # incremental residual: exact even when a nonzero coordinate
+            # sits outside ws
+            Xb_new = Xb + _apply_T(X_ws.T, beta_ws - beta_ws0)
         else:
-            ctx = WorkingSetContext(Xt_ws, y, L_ws, offset_ws, datafit,
-                                    pen_ws)
+            # Xb form: rows stay data-sharded; each coordinate update's
+            # n-reduction is completed with one psum over the data axis.
+            # Xb_base carries the residual of nonzero coordinates OUTSIDE
+            # ws so Anderson refresh cannot drop them
+            ctx = WorkingSetContext(X_ws.T, y, L_ws, offset_ws, ctx_df,
+                                    pen_ws, axis=da,
+                                    Xb_base=Xb - _apply_T(X_ws.T, beta_ws0))
 
             def run(_):
                 # Xb is shared outer-loop state: enter with the caller's Xb
@@ -312,48 +484,67 @@ class SolveEngine:
 
             beta_ws, Xb_new, n_ep = jax.lax.cond(done, skip, run, None)
 
-        beta_new = beta.at[ws].set(beta_ws)
-        gcount = jnp.sum(penalty.generalized_support(beta_new),
-                         dtype=jnp.int32)
-        return beta_new, Xb_new, kkt, obj, gcount, n_ep
+        beta_new = scatter_ws(beta, mine, loc, beta_ws)
+        gcount = _psum_if(
+            jnp.sum(penalty.generalized_support(beta_new), dtype=jnp.int32),
+            ma)
+        return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov
+
+    def _sharded_step(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+                      eps_frac, bucket):
+        xs, ys, bs = self._specs()
+
+        def body(X, y, beta, Xb, L, offset, datafit, penalty, tol, eps_frac):
+            return self._step_body(X, y, beta, Xb, L, offset, datafit,
+                                   penalty, tol, eps_frac, bucket)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(xs, ys, bs, ys, bs, bs, P(), P(), P(), P()),
+            out_specs=(bs, ys, P(), P(), P(), P(), P()),
+            check_vma=False)(X, y, beta, Xb, L, offset, datafit, penalty,
+                             tol, eps_frac)
 
     def _outer_step(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
                     eps_frac, *, bucket):
         # executes once per (bucket, arg-structure) compilation: the counter
         # is the proof behind "one compile per ws bucket across a path"
         self.retraces[bucket] = self.retraces.get(bucket, 0) + 1
+        if self.mesh is not None:
+            return self._sharded_step(X, y, beta, Xb, L, offset, datafit,
+                                      penalty, tol, eps_frac, bucket)
         return self._step_body(X, y, beta, Xb, L, offset, datafit, penalty,
                                tol, eps_frac, bucket)
 
     def _probe(self, X, y, beta, Xb, L, offset, datafit, penalty):
         """Pre-loop probe: kkt/|gsupp|/obj of the initial iterate (sizes the
         first bucket under warm starts). One launch per solve, not per iter."""
-        cfg = self.config
-        grad = X.T @ datafit.raw_grad(Xb, y)
-        grad = grad + (offset[:, None] if grad.ndim == 2 else offset)
-        scores = violation_scores(penalty, beta, grad, L,
-                                  use_fixed_point=cfg.use_fp_score)
-        gsupp = penalty.generalized_support(beta)
-        obj = datafit.value(Xb, y) + _lin(offset, beta) + penalty.value(beta)
-        return jnp.max(scores), jnp.sum(gsupp), obj
+        if self.mesh is not None:
+            xs, ys, bs = self._specs()
+
+            def body(X, y, beta, Xb, L, offset, datafit, penalty):
+                _, _, _, kkt, _, gcount, obj = self._score_pass(
+                    X, y, beta, Xb, L, offset, datafit, penalty)
+                return kkt, gcount, obj
+
+            return shard_map(
+                body, mesh=self.mesh,
+                in_specs=(xs, ys, bs, ys, bs, bs, P(), P()),
+                out_specs=(P(), P(), P()),
+                check_vma=False)(X, y, beta, Xb, L, offset, datafit, penalty)
+        _, _, _, kkt, _, gcount, obj = self._score_pass(
+            X, y, beta, Xb, L, offset, datafit, penalty)
+        return kkt, gcount, obj
 
     # ---------------------------------------------------- multi-lambda chunk
-    def _chunk_solve(self, X, y, lams, betas, Xbs, L, offset, datafit,
-                     penalty, tol, eps_frac, max_outer, growth, *, bucket):
-        """Device-resident path chunk: vmap the fused step over a chunk of
-        lambdas and drive the *outer* loop with lax.while_loop, so the host
-        syncs once per chunk instead of once per (lambda, outer iteration).
-        All lanes share one bucket; the loop hands control back to the host
-        as soon as any unconverged lane's generalized support outgrows
-        bucket/growth (Algorithm 1 would grow the working set there), so the
-        host can escalate the bucket and resume from the partial state."""
-        key = ("chunk", bucket, int(lams.shape[0]))
-        self.retraces[key] = self.retraces.get(key, 0) + 1
+    def _chunk_loop(self, step_fn, p, lams, betas, Xbs, tol, max_outer,
+                    growth, bucket):
+        """The device-resident chunk outer loop, shared by the dense and the
+        sharded drivers. `step_fn(lam, beta, Xb)` is one fused outer step for
+        one lane; `p` is the GLOBAL feature count (bucket-escalation test)."""
 
         def lane(lam, beta, Xb):
-            pen = dataclasses.replace(penalty, lam=lam)
-            return self._step_body(X, y, beta, Xb, L, offset, datafit, pen,
-                                   tol, eps_frac, bucket)
+            return step_fn(lam, beta, Xb)[:6]     # drop the covered flag
 
         vstep = jax.vmap(lane, in_axes=(0, 0, 0))
 
@@ -361,8 +552,6 @@ class SolveEngine:
             betas, Xbs, kkts, objs, gcounts, n_eps, it = state
             betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas, Xbs)
             return betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1
-
-        p = X.shape[1]
 
         def cond(state):
             _, _, kkts, _, gcounts, _, it = state
@@ -381,6 +570,53 @@ class SolveEngine:
                 jnp.zeros((C,), jnp.int32), jnp.zeros((C,), jnp.int32),
                 jnp.zeros((), jnp.int32))
         return jax.lax.while_loop(cond, body, init)
+
+    def _chunk_solve(self, X, y, lams, betas, Xbs, L, offset, datafit,
+                     penalty, tol, eps_frac, max_outer, growth, *, bucket):
+        """Device-resident path chunk: vmap the fused step over a chunk of
+        lambdas and drive the *outer* loop with lax.while_loop, so the host
+        syncs once per chunk instead of once per (lambda, outer iteration).
+        All lanes share one bucket; the loop hands control back to the host
+        as soon as any unconverged lane's generalized support outgrows
+        bucket/growth (Algorithm 1 would grow the working set there), so the
+        host can escalate the bucket and resume from the partial state.
+        On a mesh the lanes are vmapped INSIDE shard_map (lanes x devices:
+        lambda is a penalty leaf, the collectives batch through vmap), so
+        the whole sharded sweep is still one program per bucket."""
+        key = ("chunk", bucket, int(lams.shape[0]))
+        self.retraces[key] = self.retraces.get(key, 0) + 1
+
+        if self.mesh is None:
+            def step(lam, beta, Xb):
+                pen = dataclasses.replace(penalty, lam=lam)
+                return self._step_body(X, y, beta, Xb, L, offset, datafit,
+                                       pen, tol, eps_frac, bucket)
+
+            return self._chunk_loop(step, X.shape[1], lams, betas, Xbs, tol,
+                                    max_outer, growth, bucket)
+
+        p_glob = X.shape[1]
+        xs, ys, bs = self._specs()
+        lane_b = P(None, *bs)                    # [C, p] lanes x features
+        lane_x = P(None, *ys)                    # [C, n] lanes x samples
+
+        def body(X, y, lams, betas, Xbs, L, offset, datafit, penalty, tol,
+                 eps_frac, max_outer, growth):
+            def step(lam, beta, Xb):
+                pen = dataclasses.replace(penalty, lam=lam)
+                return self._step_body(X, y, beta, Xb, L, offset, datafit,
+                                       pen, tol, eps_frac, bucket)
+
+            return self._chunk_loop(step, p_glob, lams, betas, Xbs, tol,
+                                    max_outer, growth, bucket)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(xs, ys, P(), lane_b, lane_x, bs, bs, P(), P(), P(),
+                      P(), P(), P()),
+            out_specs=(lane_b, lane_x, P(), P(), P(), P(), P()),
+            check_vma=False)(X, y, lams, betas, Xbs, L, offset, datafit,
+                             penalty, tol, eps_frac, max_outer, growth)
 
     # ------------------------------------------------------------- host API
     def step(self, bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
@@ -407,8 +643,41 @@ class SolveEngine:
                             penalty, tol, eps_frac, max_outer, growth,
                             bucket=bucket)
 
-    def validate(self, datafit, penalty, n_tasks):
+    def validate(self, datafit, penalty, n_tasks, shape=None):
         """Static feasibility checks, raised eagerly at solve() entry."""
+        if self.mesh is not None:
+            if shape is not None:
+                nd = self.mesh.shape[self.data_axis]
+                nm = self.mesh.shape[self.model_axis]
+                if shape[0] % nd or shape[1] % nm:
+                    raise ValueError(
+                        f"mesh=...: design shape {tuple(shape)} must divide "
+                        f"the ({self.data_axis}, {self.model_axis}) mesh "
+                        f"({nd}, {nm}) evenly; pad the design or pick a "
+                        f"dividing mesh")
+            if self.config.backend == "pallas":
+                raise NotImplementedError(
+                    "mesh=...: the Pallas epoch kernels cannot run under "
+                    "shard_map; use backend='jax' (use_kernels=False)")
+            if n_tasks:
+                raise NotImplementedError(
+                    "mesh=...: multitask datafits (2-D coefficients) are "
+                    "not supported on the sharded engine yet")
+            if type(penalty).__name__.startswith("Block"):
+                raise NotImplementedError(
+                    "mesh=...: block (row-group) penalties are not "
+                    "supported on the sharded engine yet")
+            if any(getattr(leaf, "ndim", 0) > 0
+                   for leaf in jax.tree_util.tree_leaves(penalty)):
+                raise NotImplementedError(
+                    "mesh=...: per-coordinate penalty hyper-parameters are "
+                    "not supported on the sharded engine yet")
+            if not hasattr(datafit, "SAMPLE_MEAN"):
+                raise NotImplementedError(
+                    f"mesh=...: datafit {type(datafit).__name__} must "
+                    f"declare SAMPLE_MEAN (True when value/raw_grad "
+                    f"normalize by n, False for un-normalized sums) so "
+                    f"per-shard quantities can be rescaled to the global n")
         if self.config.backend == "pallas":
             from repro.kernels.common import check_kernel_penalty, \
                 penalty_params
@@ -427,11 +696,16 @@ class SolveEngine:
 _ENGINE_CACHE: dict = {}
 
 
-def get_engine(config: EngineConfig) -> SolveEngine:
-    """Engines are cached per static config so independent solve() calls in
-    one process share compiled fused steps (a fresh SolveEngine(config) gives
-    isolated retrace counters, e.g. for tests)."""
-    eng = _ENGINE_CACHE.get(config)
+def get_engine(config: EngineConfig, mesh=None, data_axis="data",
+               model_axis="model") -> SolveEngine:
+    """Engines are cached per (static config, mesh, axis names) so
+    independent solve() calls in one process share compiled fused steps (a
+    fresh SolveEngine(config) gives isolated retrace counters, e.g. for
+    tests)."""
+    key = (config, mesh, data_axis, model_axis)
+    eng = _ENGINE_CACHE.get(key)
     if eng is None:
-        eng = _ENGINE_CACHE[config] = SolveEngine(config)
+        eng = _ENGINE_CACHE[key] = SolveEngine(config, mesh=mesh,
+                                               data_axis=data_axis,
+                                               model_axis=model_axis)
     return eng

@@ -24,11 +24,17 @@ __all__ = ["GeneralizedLinearEstimator", "Lasso", "ElasticNet",
 
 
 class GeneralizedLinearEstimator:
-    """Composable estimator: any datafit x any separable penalty."""
+    """Composable estimator: any datafit x any separable penalty.
+
+    `mesh` (a jax Mesh with data/model axes) fits on the mesh-native sharded
+    engine — the design is placed samples x features over the mesh and the
+    same fused solve runs from one device to a pod (DESIGN.md §6).
+    """
 
     def __init__(self, datafit=None, penalty=None, *, tol=1e-6, max_outer=50,
                  max_epochs=1000, M=5, p0=64, fit_intercept=False,
-                 use_kernels=False, engine=None, **solve_kw):
+                 use_kernels=False, mesh=None, data_axis="data",
+                 model_axis="model", engine=None, **solve_kw):
         self.datafit = Quadratic() if datafit is None else datafit
         self.penalty = L1(1.0) if penalty is None else penalty
         self.tol = tol
@@ -37,8 +43,12 @@ class GeneralizedLinearEstimator:
         self.M = M
         self.p0 = p0
         self.use_kernels = use_kernels
+        self.mesh = mesh
         self.engine = engine            # share compiled fused steps across fits
         self.solve_kw = solve_kw
+        if mesh is not None:
+            self.solve_kw.update(mesh=mesh, data_axis=data_axis,
+                                 model_axis=model_axis)
         if fit_intercept:
             raise NotImplementedError(
                 "center X/y beforehand; intercept handling is out of scope")

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from .api import lambda_max
 from .datafits import Quadratic
-from .solver import make_engine, solve
+from .solver import _place_design, make_engine, solve
 from .working_set import BucketPolicy
 
 __all__ = ["reg_path", "PathResult", "support_metrics"]
@@ -67,6 +67,7 @@ def _with_lam(penalty, lam: float):
 def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
              lambda_min_ratio=1e-2, tol=1e-6,
              metric_fn: Optional[Callable] = None, engine=None, vmap_chunk=1,
+             mesh=None, data_axis="data", model_axis="model",
              **solve_kw) -> PathResult:
     """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
 
@@ -75,6 +76,11 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     penalty with a `lam` hyper-parameter). `engine` (from
     `solver.make_engine`) shares compiled steps across calls and exposes
     retrace counters; one is created per call otherwise.
+
+    `mesh` runs the whole sweep on the mesh-native engine (DESIGN.md §6):
+    the sequential driver keeps its 1-dispatch/1-sync outer step, and the
+    chunked driver composes as vmap over lanes x shard_map over devices —
+    warm-start handoff and bucket escalation are unchanged.
     """
     datafit = Quadratic() if datafit is None else datafit
     if lambdas is None:
@@ -84,7 +90,19 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
 
     if engine is None:
         eng_kw = {k: solve_kw[k] for k in _ENGINE_KW if k in solve_kw}
-        engine = make_engine(penalty, datafit, shared=True, **eng_kw)
+        engine = make_engine(penalty, datafit, shared=True, mesh=mesh,
+                             data_axis=data_axis, model_axis=model_axis,
+                             **eng_kw)
+    elif mesh is not None and engine.mesh is not mesh:
+        raise ValueError("reg_path(mesh=..., engine=...): the engine was "
+                         "built for a different mesh; pass mesh to "
+                         "make_engine instead")
+    # entry-time feasibility for BOTH drivers (the chunked one never reaches
+    # solve()): unsupported mesh configs must raise here, not mid-trace
+    n_tasks = y.shape[1] if (hasattr(y, "ndim") and y.ndim == 2) else 0
+    engine.validate(datafit, penalty, n_tasks, shape=X.shape)
+    if engine.mesh is not None:
+        X, y = _place_design(engine, X, y)
 
     if vmap_chunk > 1:
         res = _chunked_path(X, y, penalty, datafit, lambdas, tol, engine,

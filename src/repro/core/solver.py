@@ -19,12 +19,21 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from .engine import (EngineConfig, GramSolver, SolveEngine, WorkingSetContext,
                      XbSolver, _apply_T, get_engine)
 from .working_set import BucketPolicy
 
 __all__ = ["solve", "SolveResult"]
+
+
+def _place_design(engine, X, y):
+    """Shard (X, y) on the engine's mesh (idempotent for pre-sharded input)."""
+    xs, ys, _ = engine._specs()
+    X = jax.device_put(X, NamedSharding(engine.mesh, xs))
+    y = jax.device_put(y, NamedSharding(engine.mesh, ys))
+    return X, y
 
 
 @dataclass
@@ -73,24 +82,32 @@ def _inner_xb(Xt_ws, y, beta0, Xb0, L_ws, offset_ws, datafit, penalty, eps,
 
 def make_engine(penalty, datafit, *, M=5, max_epochs=1000, accel=True,
                 use_fp_score=None, use_gram="auto", use_kernels=False,
+                mesh=None, data_axis="data", model_axis="model",
                 shared=False):
     """Build a SolveEngine for a (datafit, penalty) family. `shared=True`
     returns the process-wide cached engine for the config (compiled steps are
     reused across solves); `shared=False` gives a fresh engine with isolated
-    retrace/dispatch counters."""
+    retrace/dispatch counters. `mesh` (a jax Mesh holding `data_axis` and
+    `model_axis`) makes the engine mesh-native: the same fused step runs
+    under shard_map on the sharded design (DESIGN.md §6)."""
     if use_fp_score is None:
         use_fp_score = not penalty.HAS_SUBDIFF
     gram = datafit.HAS_GRAM if use_gram == "auto" else bool(use_gram)
     cfg = EngineConfig(M=M, max_epochs=max_epochs, accel=accel,
                        use_fp_score=use_fp_score, gram=gram,
                        backend="pallas" if use_kernels else "jax")
-    return get_engine(cfg) if shared else SolveEngine(cfg)
+    if shared:
+        return get_engine(cfg, mesh=mesh, data_axis=data_axis,
+                          model_axis=model_axis)
+    return SolveEngine(cfg, mesh=mesh, data_axis=data_axis,
+                       model_axis=model_axis)
 
 
 def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           M=5, p0=64, use_gram="auto", use_fp_score=None, eps_inner_frac=0.3,
           beta0=None, n_tasks=None, accel=True, use_ws=True,
-          use_kernels=False, engine=None, bucket_policy=None):
+          use_kernels=False, mesh=None, data_axis="data", model_axis="model",
+          engine=None, bucket_policy=None):
     """Solve Problem (1): argmin_beta F(X beta) + sum_j g_j(beta_j).
 
     Returns a SolveResult. `use_gram="auto"` picks the Gram inner solver for
@@ -102,6 +119,13 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     (VMEM-resident state on TPU; interpret mode on CPU). Pass `engine` (from
     `make_engine`) to share compiled fused steps across many solves — e.g. a
     regularization path — and to read back retrace/dispatch telemetry.
+
+    `mesh` (a jax Mesh holding `data_axis` and `model_axis`) runs the SAME
+    fused outer step sharded over the mesh — X samples x features, beta over
+    features, residual over samples (DESIGN.md §6). The dispatch/sync budget
+    is unchanged: one launch, one blocking readback per outer iteration.
+    Unsupported sharded configurations (multitask/block penalties, the
+    Pallas backend) raise NotImplementedError here, before any trace.
     """
     n_rows, p = X.shape
     if not use_ws:
@@ -116,14 +140,24 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         engine = make_engine(penalty, datafit, M=M, max_epochs=max_epochs,
                              accel=accel, use_fp_score=use_fp_score,
                              use_gram=gram, use_kernels=use_kernels,
-                             shared=True)
-    engine.validate(datafit, penalty, n_tasks)
+                             mesh=mesh, data_axis=data_axis,
+                             model_axis=model_axis, shared=True)
+    elif mesh is not None and engine.mesh is not mesh:
+        raise ValueError("solve(mesh=..., engine=...): the engine was built "
+                         "for a different mesh; pass mesh to make_engine "
+                         "instead")
+    engine.validate(datafit, penalty, n_tasks, shape=X.shape)
     policy = bucket_policy or BucketPolicy(p0=p0)
 
+    if engine.mesh is not None:
+        X, y = _place_design(engine, X, y)
     L = datafit.lipschitz(X)
     offset = datafit.grad_offset(p, X.dtype)
     bshape = (p, n_tasks) if n_tasks else (p,)
     beta = jnp.zeros(bshape, X.dtype) if beta0 is None else jnp.asarray(beta0)
+    if engine.mesh is not None:
+        _, _, bs = engine._specs()
+        beta = jax.device_put(beta, NamedSharding(engine.mesh, bs))
     Xb = X @ beta
 
     res = SolveResult(beta=beta, kkt=float("inf"), converged=False,
@@ -141,13 +175,18 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     bucket = policy.first_bucket(gcount, p)
 
     for t in range(max_outer):
-        beta, Xb, kkt_d, obj_d, gcount_d, nep_d = engine.step(
+        beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d = engine.step(
             bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
             eps_inner_frac)
         # the single blocking host sync of this outer iteration
-        kkt, obj, gcount, n_ep = jax.device_get((kkt_d, obj_d, gcount_d,
-                                                 nep_d))
+        kkt, obj, gcount, n_ep, cov = jax.device_get(
+            (kkt_d, obj_d, gcount_d, nep_d, cov_d))
         res.n_host_syncs += 1
+        if not bool(cov):
+            raise RuntimeError(
+                "working-set selection dropped generalized-support "
+                "coordinates (bucket too small for |gsupp| — bucket-policy "
+                "invariant violated)")
         kkt = float(kkt)
         res.kkt_history.append(kkt)
         res.obj_history.append(float(obj))

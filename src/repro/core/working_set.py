@@ -95,3 +95,70 @@ def select_working_set(scores, gsupp_mask, ws_size: int):
     pri = jnp.where(gsupp_mask, jnp.inf, scores)
     _, ws = jax.lax.top_k(pri, ws_size)
     return ws
+
+
+# ------------------------------------------------------- sharded working sets
+# Per-shard primitives of the mesh-native engine (DESIGN.md §6). All of them
+# run INSIDE shard_map: arrays are the local feature block [width], indices in
+# the returned working set are GLOBAL (block-sharded layout: global index =
+# shard * width + local index). `model_axis=None` means the features are NOT
+# split (a size-1 model axis): every collective and ownership mask is elided
+# statically, so the lowered program is the exact single-device one — the 1x1
+# mesh is bit-identical to the dense engine by construction, and a (k, 1)
+# data-parallel mesh pays zero feature-axis collectives.
+
+def select_working_set_local(scores_loc, gsupp_loc, ws_size: int, model_axis):
+    """Exact distributed top-k selection, support always retained.
+
+    Local top-k per feature shard, all_gather of the (value, global-index)
+    candidates over `model_axis`, global top-k over the union. Per shard we
+    keep min(ws_size, width) candidates — a smaller local k (the historical
+    `p // n_shards` cap) can drop generalized-support coordinates when the
+    support concentrates on one shard. With this choice the union always
+    holds >= ws_size candidates and every support coordinate (priority +inf,
+    |gsupp| <= ws_size by the bucket policy) survives both top-k rounds.
+    """
+    if model_axis is None:
+        return select_working_set(scores_loc, gsupp_loc, ws_size)
+    pri = jnp.where(gsupp_loc, jnp.inf, scores_loc)
+    width = pri.shape[0]
+    loc_k = min(ws_size, width)
+    v, i = jax.lax.top_k(pri, loc_k)
+    gi = i + jax.lax.axis_index(model_axis) * width
+    v_all = jax.lax.all_gather(v, model_axis).reshape(-1)
+    i_all = jax.lax.all_gather(gi, model_axis).reshape(-1)
+    _, sel = jax.lax.top_k(v_all, ws_size)
+    return i_all[sel]
+
+
+def shard_ws_mask(ws, width: int, model_axis):
+    """(owned-mask, local index) of a global working set on this shard.
+
+    mask is None when the features are unsplit (everything is owned)."""
+    if model_axis is None:
+        return None, ws
+    mine = (ws // width) == jax.lax.axis_index(model_axis)
+    return mine, jnp.where(mine, ws % width, 0)
+
+
+def gather_ws_vec(vec_loc, mine, loc_idx, model_axis):
+    """vec[ws] replicated over the model axis (masked gather + psum)."""
+    if mine is None:
+        return vec_loc[loc_idx]
+    return jax.lax.psum(jnp.where(mine, vec_loc[loc_idx], 0), model_axis)
+
+
+def gather_ws_cols(X_loc, mine, loc_idx, model_axis):
+    """X[:, ws] -> [n_loc, K]: data-sharded rows, replicated over model."""
+    if mine is None:
+        return X_loc[:, loc_idx]
+    cols = jnp.take(X_loc, loc_idx, axis=1) * mine.astype(X_loc.dtype)
+    return jax.lax.psum(cols, model_axis)
+
+
+def scatter_ws(vec_loc, mine, loc_idx, vals):
+    """vec[ws] = vals on the owning shard (out-of-range rows dropped)."""
+    if mine is None:
+        return vec_loc.at[loc_idx].set(vals)
+    idx = jnp.where(mine, loc_idx, vec_loc.shape[0])
+    return vec_loc.at[idx].set(vals, mode="drop")

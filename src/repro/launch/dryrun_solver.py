@@ -7,20 +7,26 @@ import time           # noqa: E402
 
 import jax            # noqa: E402
 import jax.numpy as jnp                                     # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core.datafits import Quadratic                   # noqa: E402
 from repro.core.distributed import make_distributed_ops     # noqa: E402
 from repro.core.penalties import MCP                        # noqa: E402
+from repro.core.solver import make_engine                   # noqa: E402
 from repro.launch.mesh import make_production_mesh          # noqa: E402
 from repro.roofline.hlo import collective_bytes             # noqa: E402
 
 """Multi-pod dry-run for the PAPER'S OWN TECHNIQUE: the distributed sparse-GLM
-solver at production scale. Lowers + compiles every sharded primitive of
-core.distributed (score pass with psum, exact distributed top-k, working-set
-gather, Gram build, residual update) for a huge-scale design — the regime the
-paper targets ("millions of samples and features") — on the 16x16 and 2x16x16
-meshes. Records per-primitive cost/collective accounting.
+solver at production scale, on the 16x16 and 2x16x16 meshes, for a
+huge-scale design — the regime the paper targets ("millions of samples and
+features").
+
+Two layers are lowered + compiled and cost-accounted:
+  * the mesh-native engine's FUSED outer step (core/engine.py, DESIGN.md §6)
+    — the production solve path (one program per working-set bucket);
+  * the deprecated per-stage primitives of core.distributed
+    (score pass with psum, exact distributed top-k, working-set gather, Gram
+    build, residual update), kept precisely because this per-primitive
+    breakdown attributes the fused step's cost stage by stage.
 
   PYTHONPATH=src python -m repro.launch.dryrun_solver
 """
@@ -42,9 +48,6 @@ def run(multi_pod: bool, n: int, p: int, ws: int, out_dir: str):
     Xws = jax.ShapeDtypeStruct((n, ws), dt)
     bws = jax.ShapeDtypeStruct((ws,), dt)
 
-    sh = lambda spec: NamedSharding(mesh, spec)
-    da = ("pod", "data") if multi_pod else "data"
-    mo = "model"
     units = {
         "lipschitz": (ops["lipschitz"], (X, y), None),
         "scores": (ops["scores"], (X, r, beta, L), None),
@@ -55,14 +58,12 @@ def run(multi_pod: bool, n: int, p: int, ws: int, out_dir: str):
         "apply_ws": (ops["apply_ws"], (Xws, bws), None),
     }
     rec = {"mesh": tag, "n": n, "p": p, "ws": ws, "units": {}}
-    for name, (fn, args, _) in units.items():
-        t0 = time.time()
-        compiled = jax.jit(fn).lower(*args).compile() if name == "topk" \
-            else fn.lower(*args).compile()
+
+    def record(name, compiled, t0):
         ca = compiled.cost_analysis()
         if isinstance(ca, list):
             ca = ca[0]
-        coll, by_op = collective_bytes(compiled.as_text())
+        coll, _ = collective_bytes(compiled.as_text())
         ma = compiled.memory_analysis()
         rec["units"][name] = {
             "compile_s": round(time.time() - t0, 2),
@@ -75,6 +76,20 @@ def run(multi_pod: bool, n: int, p: int, ws: int, out_dir: str):
               f"{rec['units'][name]['compile_s']}s "
               f"coll={coll / 2**20:.1f}MiB/dev "
               f"temp={ma.temp_size_in_bytes / 2**20:.0f}MiB/dev")
+
+    for name, (fn, args, _) in units.items():
+        t0 = time.time()
+        compiled = jax.jit(fn).lower(*args).compile() if name == "topk" \
+            else fn.lower(*args).compile()
+        record(name, compiled, t0)
+
+    # the production path: the mesh-native engine's fused outer step at this
+    # working-set bucket (one dispatch covers every per-stage unit above)
+    eng = make_engine(penalty, Quadratic(), mesh=mesh)
+    t0 = time.time()
+    fused = eng._jstep.lower(X, y, beta, r, L, L, Quadratic(), penalty,
+                             1e-6, 0.3, bucket=ws).compile()
+    record("fused_step", fused, t0)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, f"solver_{tag.replace('x', '-')}.json"),

@@ -1,12 +1,31 @@
-"""Production mesh construction.
+"""Production mesh construction + shard_map version compatibility.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state. The dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
 """
 from __future__ import annotations
 
+import inspect as _inspect
+
 import jax
+
+try:
+    from jax import shard_map as _jax_shard_map
+except ImportError:                      # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _jax_shard_map
+
+_HAS_CHECK_VMA = "check_vma" in _inspect.signature(_jax_shard_map).parameters
+
+
+def shard_map(f, **kw):
+    """shard_map with the `check_vma` kwarg mapped to pre-0.5 `check_rep`.
+
+    The canonical shim for the whole repo (the mesh-native solve engine in
+    core/engine.py and the core/distributed.py facade both import it)."""
+    if "check_vma" in kw and not _HAS_CHECK_VMA:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _jax_shard_map(f, **kw)
 
 
 def _mesh(shape, axes):
@@ -26,6 +45,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU distributed tests (8 forced host devices)."""
+    return _mesh(shape, axes)
+
+
+def make_solver_mesh(shape=None, axes=("data", "model")):
+    """(data, model) mesh for the mesh-native solve engine (DESIGN.md §6).
+
+    `shape=None` uses every visible device on the model axis — feature
+    sharding is what splits the O(np) score pass and the top-k, the solver's
+    dominant costs. Pass an explicit (n_data, n_model) to shard samples too
+    (huge-n designs)."""
+    if shape is None:
+        shape = (1, len(jax.devices()))
     return _mesh(shape, axes)
 
 

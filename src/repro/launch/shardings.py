@@ -153,6 +153,15 @@ def param_sharding(logical_axes, mesh=None, rules=None, shape=None):
     return NamedSharding(mesh, make_spec(logical_axes, rules, mesh, shape))
 
 
+# sparse-GLM solve engine (DESIGN.md §6): logical placement of the design.
+# One source of truth shared by core/engine.py (shard_map in_specs) and
+# core/distributed.py (shard_design device_put): X [n, p] samples x features,
+# y/Xb [n] over samples, beta/L/offset [p] over features.
+def design_specs(data_axis="data", model_axis="model"):
+    """(x_spec, y_spec, beta_spec) PartitionSpecs of the solve engine."""
+    return (P(data_axis, model_axis), P(data_axis), P(model_axis))
+
+
 # shape-specific activation overrides (see DESIGN.md §3):
 #  - decode: shard the KV cache over the model axis (context parallelism);
 #    XLA inserts the softmax-combine all-reduces automatically.

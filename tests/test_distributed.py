@@ -1,4 +1,9 @@
-"""Distributed solver tests.
+"""Distributed solver facade tests.
+
+`solve_distributed` is a facade over the mesh-native engine
+(core/engine.py, DESIGN.md §6) — these tests pin the facade's contract and
+the deprecated `make_distributed_ops` primitives. Engine-level sharding
+behavior lives in tests/test_mesh_engine.py.
 
 Semantic tests run on a 1x1 mesh in-process (shard_map correctness is
 mesh-size independent for this decomposition); the 8-device test runs in a
@@ -65,7 +70,8 @@ def test_distributed_mcp_support(mesh11, dist_data):
 def test_distributed_scores_match_full_gradient(mesh11, dist_data):
     X, y, _ = dist_data
     pen = L1(0.1)
-    ops = make_distributed_ops(mesh11, X.shape[0], X.shape[1], pen)
+    with pytest.warns(DeprecationWarning, match="make_distributed_ops"):
+        ops = make_distributed_ops(mesh11, X.shape[0], X.shape[1], pen)
     Xs, ys = shard_design(mesh11, X, y)
     beta = jnp.zeros(X.shape[1])
     L = ops["lipschitz"](Xs, ys)
@@ -78,7 +84,8 @@ def test_distributed_scores_match_full_gradient(mesh11, dist_data):
 
 def test_distributed_topk_exact(mesh11):
     pen = L1(0.1)
-    ops = make_distributed_ops(mesh11, 8, 64, pen)
+    with pytest.warns(DeprecationWarning, match="make_distributed_ops"):
+        ops = make_distributed_ops(mesh11, 8, 64, pen)
     rng = np.random.default_rng(0)
     scores = jnp.asarray(rng.standard_normal(64) ** 2)
     gsupp = jnp.zeros(64, bool)

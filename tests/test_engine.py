@@ -239,6 +239,31 @@ def test_chunked_path_rejects_unsupported_solve_kwargs(lasso_data):
         reg_path(X, y, L1(1.0), n_lambdas=4, vmap_chunk=2, use_ws=False)
 
 
+def test_xb_anderson_refresh_keeps_out_of_ws_residual(logreg_data):
+    """XbSolver's Anderson refresh must preserve the residual of nonzero
+    coordinates OUTSIDE the working set (ctx.Xb_base): without it the
+    rebuilt Xb dropped bound-pinned Box/SVC coordinates (empty generalized
+    support, legitimately outside ws) and the solver accepted a corrupted
+    state while reporting convergence."""
+    from repro.core.datafits import QuadraticSVC
+    from repro.core.working_set import violation_scores
+    X, y, _ = logreg_data
+    X, y = X[:300, :60], y[:300]
+    Z = (y[:, None] * X).T
+    df, pen = QuadraticSVC(), Box(0.02)
+    res_x = solve(Z, y, df, pen, tol=1e-7, p0=16, max_outer=300,
+                  use_gram=False)
+    res_g = solve(Z, y, df, pen, tol=1e-7, p0=16, max_outer=300)
+    assert res_x.converged
+    grad = Z.T @ df.raw_grad(Z @ res_x.beta, y) + \
+        df.grad_offset(Z.shape[1], Z.dtype)
+    true_kkt = float(jnp.max(violation_scores(pen, res_x.beta, grad,
+                                              df.lipschitz(Z))))
+    assert true_kkt <= 1e-7, (res_x.kkt, true_kkt)
+    np.testing.assert_allclose(np.asarray(res_x.beta),
+                               np.asarray(res_g.beta), atol=1e-6)
+
+
 def test_box_at_bound_coords_outside_ws_stay_exact(logreg_data):
     """Box pins coordinates at C with *empty* generalized support, so they
     can leave the working set while nonzero. The gram subproblem must
