@@ -1,9 +1,17 @@
 """Engine perf baseline: fig2 Lasso + fig5 MCP timings and host-dispatch
 counts, recorded to BENCH_engine.json so the perf trajectory of later PRs
 (sharded CD, multi-backend, serving) starts from the device-resident-engine
-refactor.
+refactor. ``sparse_fig2`` measures the CSC-native sparse path (DESIGN.md §7)
+on a news20-like power-law design — at the "small" scale this is the
+paper-regime n=50k x p=200k at density 1e-3, solved without ever
+materializing the dense X.
 
 ``PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out PATH]``
+
+``--check-budget BENCH_engine.json`` turns the run into a CI perf guard:
+it fails when any benchmark's jit-dispatches-per-outer-iteration exceed the
+budget recorded in the committed baseline (the fused-engine contract is
+exactly 1).
 
 The ``seed_before`` block is the measurement of the pre-engine host-driven
 solver (3-4 jitted dispatches + 3 blocking scalar syncs per outer iteration),
@@ -32,7 +40,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import MCP, L1, Quadratic, lambda_max, make_engine, solve  # noqa: E402
-from repro.data.synth import make_correlated_design  # noqa: E402
+from repro.data.synth import make_correlated_design, make_sparse_design  # noqa: E402
 
 # measured once on the seed (pre-engine) solver, same container, same configs:
 # per outer iteration it launched _score_pass + _gather_ws + _inner_* (plus
@@ -69,12 +77,36 @@ CONFIGS = {
     },
 }
 
+# the paper's flagship regime (sparse news20-like design, DESIGN.md §7):
+# solved CSC-native — the [n, p] dense X is never materialized. The "small"
+# scale is the acceptance-criteria shape; smoke keeps CI fast.
+SPARSE_CONFIGS = {
+    "small": {
+        "sparse_fig2": dict(n=50_000, p=200_000, density=1e-3,
+                            n_nonzero=200),
+    },
+    "smoke": {
+        "sparse_fig2": dict(n=1000, p=4000, density=5e-3, n_nonzero=40),
+    },
+}
 
-def _measure(bench, cfg, mesh=None):
-    X, y, _ = make_correlated_design(seed=0, rho=0.5, snr=5.0, **cfg)
-    X, y = jnp.asarray(X), jnp.asarray(y)
+
+def _measure(bench, cfg, mesh=None, sparse=False):
+    if sparse:
+        from repro.sparse import CSCDesign
+        Xsp, y, _ = make_sparse_design(seed=0, snr=5.0, **cfg)
+        y = jnp.asarray(y)
+        nnz = int(Xsp.nnz)
+        # convert outside the timed loop, like the dense jnp.asarray above:
+        # wall_s must measure the CSC-native solve, not host conversion
+        X = CSCDesign.from_scipy(Xsp)
+    else:
+        X, y, _ = make_correlated_design(seed=0, rho=0.5, snr=5.0, **cfg)
+        X, y = jnp.asarray(X), jnp.asarray(y)
+        nnz = None
     lam = lambda_max(X, y) / 10
-    penalty = L1(lam) if bench == "fig2_lasso" else MCP(lam, 3.0)
+    penalty = L1(lam) if bench.startswith(("fig2", "sparse")) \
+        else MCP(lam, 3.0)
     kw = dict(tol=1e-10, max_outer=100)
 
     engine = make_engine(penalty, Quadratic(), mesh=mesh)
@@ -86,7 +118,7 @@ def _measure(bench, cfg, mesh=None):
         res = solve(X, y, Quadratic(), penalty, engine=engine, **kw)
         wall = min(wall, time.perf_counter() - t0)
     iters = max(len(res.kkt_history), 1)
-    return {
+    out = {
         "wall_s": wall,
         "n_outer": res.n_outer,
         "n_epochs": res.n_epochs,
@@ -96,6 +128,10 @@ def _measure(bench, cfg, mesh=None):
         "host_syncs_per_outer": res.n_host_syncs / iters,
         "retraces": {str(k): v for k, v in engine.retraces.items()},
     }
+    if sparse:
+        out["nnz"] = nnz
+        out["shape"] = [cfg["n"], cfg["p"]]
+    return out
 
 
 _SHARDED_MARK = "BENCH_SHARDED_JSON:"
@@ -131,12 +167,42 @@ def _measure_sharded(scale):
                      f"\n{r.stdout}\n{r.stderr}")
 
 
+def _check_budget(report, budget_path):
+    """Perf-regression guard (CI): dispatches-per-outer-iteration of every
+    measured benchmark must not exceed the budget recorded in the committed
+    BENCH_engine.json (the engine contract is exactly 1 fused dispatch per
+    outer iteration; any growth means the fused step split)."""
+    with open(budget_path) as f:
+        budget = json.load(f)
+    failures = []
+    for section in ("engine_after", "mesh_2x4"):
+        ref = budget.get(section, {})
+        for bench, m in report.get(section, {}).items():
+            cap = ref.get(bench, {}).get("jit_dispatches_per_outer")
+            if cap is None:
+                continue
+            if m["jit_dispatches_per_outer"] > cap + 1e-9:
+                failures.append(
+                    f"{section}/{bench}: "
+                    f"{m['jit_dispatches_per_outer']:.3f} dispatches/outer "
+                    f"exceeds the recorded budget {cap:.3f}")
+    if failures:
+        raise SystemExit("dispatch-budget regression:\n  "
+                         + "\n  ".join(failures))
+    print(f"dispatch budgets OK (vs {budget_path})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the 2x4-mesh subprocess measurement")
+    ap.add_argument("--no-sparse", action="store_true",
+                    help="skip the sparse_fig2 CSC-native measurement")
+    ap.add_argument("--check-budget", default=None, metavar="PATH",
+                    help="fail if dispatches/outer exceed the budgets "
+                         "recorded in PATH (committed BENCH_engine.json)")
     ap.add_argument("--child-sharded", action="store_true",
                     help=argparse.SUPPRESS)       # internal: subprocess mode
     ap.add_argument("--scale", default=None, help=argparse.SUPPRESS)
@@ -163,6 +229,20 @@ def main(argv=None):
         if after["host_syncs_per_outer"] > 1.0 + 1e-9:
             raise SystemExit(f"{bench} exceeded 1 host sync per outer iter")
 
+    if not args.no_sparse:
+        for bench, cfg in SPARSE_CONFIGS[scale].items():
+            report["engine_after"][bench] = _measure(bench, cfg, sparse=True)
+            m = report["engine_after"][bench]
+            print(f"{bench} [csc n={cfg['n']} p={cfg['p']} "
+                  f"density={cfg['density']}]: {m['wall_s']:.3f}s, "
+                  f"{m['jit_dispatches_per_outer']:.2f} dispatches/outer, "
+                  f"{m['host_syncs_per_outer']:.2f} syncs/outer, "
+                  f"nnz={m['nnz']}")
+            if not m["converged"]:
+                raise SystemExit(f"{bench} did not converge")
+            if m["host_syncs_per_outer"] > 1.0 + 1e-9:
+                raise SystemExit(f"{bench} exceeded 1 host sync per outer")
+
     if not args.no_sharded:
         report["mesh_2x4"] = _measure_sharded(scale)
         for bench, m in report["mesh_2x4"].items():
@@ -176,6 +256,9 @@ def main(argv=None):
                 raise SystemExit(f"{bench} [mesh] did not converge")
             if m["host_syncs_per_outer"] > 1.0 + 1e-9:
                 raise SystemExit(f"{bench} [mesh] exceeded 1 sync per outer")
+
+    if args.check_budget:
+        _check_budget(report, args.check_budget)
 
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)

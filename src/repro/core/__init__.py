@@ -5,8 +5,9 @@ from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
 from .penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1, BlockMCP,
                         Box, soft_threshold)
 from .solver import SolveResult, make_engine, solve
-from .engine import (EngineConfig, GramSolver, SolveEngine, SubproblemSolver,
-                     XbSolver, get_engine)
+from .engine import (Design, DenseDesign, EngineConfig, GramSolver,
+                     SolveEngine, SubproblemSolver, XbSolver, as_design,
+                     get_engine)
 from .anderson import anderson_extrapolate
 from .working_set import (BucketPolicy, fixed_point_score, grow_ws_size,
                           next_pow2, select_working_set, violation_scores)
@@ -25,7 +26,8 @@ __all__ = [
     "L1", "L1L2", "MCP", "SCAD", "L05", "L23", "Box", "BlockL1", "BlockMCP",
     "soft_threshold", "solve", "SolveResult", "make_engine",
     "EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
-    "XbSolver", "get_engine", "BucketPolicy", "anderson_extrapolate",
+    "XbSolver", "get_engine", "Design", "DenseDesign", "as_design",
+    "BucketPolicy", "anderson_extrapolate",
     "violation_scores", "fixed_point_score", "select_working_set",
     "grow_ws_size", "next_pow2", "lambda_max", "lasso", "elastic_net",
     "mcp_regression", "scad_regression", "sparse_logreg", "svc_dual",

@@ -22,10 +22,16 @@ __all__ = ["lambda_max", "lasso_gap", "enet_gap", "logreg_gap",
 
 
 def lambda_max(X, y, datafit=None):
-    """Smallest lambda with solution 0: ||X^T F'(X 0)||_inf (paper §3.1)."""
+    """Smallest lambda with solution 0: ||X^T F'(X 0)||_inf (paper §3.1).
+
+    `X` may be dense, a scipy sparse matrix, or a `Design` — the sparse
+    score pass never materializes X."""
+    from .engine import as_design
     datafit = Quadratic() if datafit is None else datafit
-    Xb0 = jnp.zeros((X.shape[0],) + (y.shape[1:] if y.ndim > 1 else ()), X.dtype)
-    grad0 = X.T @ datafit.raw_grad(Xb0, y)
+    design = as_design(X)
+    Xb0 = jnp.zeros((design.shape[0],)
+                    + (y.shape[1:] if y.ndim > 1 else ()), design.dtype)
+    grad0 = design.score(datafit.raw_grad(Xb0, y))
     if grad0.ndim == 2:
         return float(jnp.max(jnp.sqrt(jnp.sum(grad0 ** 2, axis=-1))))
     return float(jnp.max(jnp.abs(grad0)))

@@ -4,6 +4,10 @@ Each datafit implements:
   value(Xb, y)        -> scalar F(Xb)
   raw_grad(Xb, y)     -> F'(Xb) per-sample gradient, shape like Xb
   lipschitz(X)        -> per-coordinate L_j of nabla_j f (Assumption 1)
+  lipschitz_cols(s, n)-> the same L_j from per-column squared norms
+                         s_j = ||x_j||^2 and the sample count n (what sparse
+                         CSCDesigns precompute; every datafit's L_j is a
+                         closed form of s_j and n)
   grad_offset(p)      -> constant linear term added to X^T raw_grad (0 for most;
                          -1 for the dual SVM whose objective has a -sum(alpha) term)
   HAS_GRAM            -> True when f is quadratic so the Gram fast path
@@ -59,6 +63,9 @@ class Quadratic:
         n = X.shape[0]
         return jnp.sum(X ** 2, axis=0) / n
 
+    def lipschitz_cols(self, col_sq, n):
+        return col_sq / n
+
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)
 
@@ -87,6 +94,9 @@ class Logistic:
     def lipschitz(self, X):
         n = X.shape[0]
         return jnp.sum(X ** 2, axis=0) / (4.0 * n)
+
+    def lipschitz_cols(self, col_sq, n):
+        return col_sq / (4.0 * n)
 
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)
@@ -123,6 +133,10 @@ class QuadraticSVC:
         # X = Z^T (d x n): L_j = ||Z_j||^2 = ||X_:j||^2
         return jnp.sum(X ** 2, axis=0)
 
+    def lipschitz_cols(self, col_sq, n):
+        del n                        # un-normalized sum datafit
+        return col_sq
+
     def grad_offset(self, p, dtype):
         return -jnp.ones((p,), dtype=dtype)
 
@@ -151,6 +165,9 @@ class MultitaskQuadratic:
     def lipschitz(self, X):
         n = X.shape[0]
         return jnp.sum(X ** 2, axis=0) / n
+
+    def lipschitz_cols(self, col_sq, n):
+        return col_sq / n
 
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)

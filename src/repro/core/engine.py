@@ -44,7 +44,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import shard_map
 from repro.launch.shardings import design_specs
@@ -56,7 +56,8 @@ from .working_set import (gather_ws_cols, gather_ws_vec, scatter_ws,
                           shard_ws_mask, violation_scores)
 
 __all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
-           "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS"]
+           "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS", "Design",
+           "DenseDesign", "as_design"]
 
 
 # datafit class name -> kernels/cd_epoch.py datafit_kind tag (the Pallas Xb
@@ -66,6 +67,143 @@ KERNEL_DATAFIT_KINDS = {
     "Logistic": "logistic",
     "QuadraticSVC": "svc",
 }
+
+
+# --------------------------------------------------------- design abstraction
+class Design:
+    """Protocol of the design matrix X as the engine consumes it (DESIGN.md
+    §7). Only three primitives ever touch the full design — the score pass
+    ``X.T @ raw``, the working-set column gather, and the residual update
+    ``Xb += X_ws d`` — so a Design supplies exactly those (plus the eager
+    host-level helpers solve() needs: matvec, Lipschitz constants, mesh
+    placement). Implementations are pytrees; ``DenseDesign`` wraps a dense
+    array and lowers to the bit-identical pre-Design program,
+    ``sparse.CSCDesign`` is the CSC-native form that never materializes X.
+
+    Traced methods run on LOCAL blocks inside shard_map (after
+    ``local_block()`` strips any stacked shard axis); eager methods see the
+    global design.
+    """
+    KIND = "abstract"
+
+    # traced (inside the fused step) --------------------------------------
+    def local_block(self):
+        raise NotImplementedError
+
+    def score(self, raw, backend="jax"):
+        """This feature block's X.T @ raw (pre data-axis reduction)."""
+        raise NotImplementedError
+
+    def gather_ws(self, mine, loc_idx, model_axis):
+        """Densify the ws columns -> ([n_loc, K] model-replicated, aux)."""
+        raise NotImplementedError
+
+    def update_xb(self, Xb, X_ws, ws_aux, delta, model_axis):
+        """Xb + X_ws @ delta (aux carries sparse scatter windows)."""
+        raise NotImplementedError
+
+    # eager (host level) ---------------------------------------------------
+    def matvec(self, beta):
+        raise NotImplementedError
+
+    def lipschitz(self, datafit):
+        raise NotImplementedError
+
+    def in_spec(self, data_axis, model_axis):
+        """Single PartitionSpec used as the shard_map pytree-prefix spec for
+        every leaf of this design."""
+        raise NotImplementedError
+
+    def place(self, mesh, data_axis, model_axis):
+        """Shard the design onto `mesh` (idempotent)."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class DenseDesign(Design):
+    """Dense design: the identity wrapper. Every method lowers to the exact
+    expression the engine used before the Design abstraction, so dense
+    solves stay bit-identical (asserted by test_engine/test_mesh_engine)."""
+    X: jax.Array
+
+    KIND = "dense"
+
+    @property
+    def shape(self):
+        return self.X.shape
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def n_rows(self):
+        return self.X.shape[0]
+
+    @property
+    def width(self):
+        return self.X.shape[1]
+
+    def local_block(self):
+        return self
+
+    def score(self, raw, backend="jax"):
+        return self.X.T @ raw
+
+    def gather_ws(self, mine, loc_idx, model_axis):
+        return gather_ws_cols(self.X, mine, loc_idx, model_axis), None
+
+    def update_xb(self, Xb, X_ws, ws_aux, delta, model_axis):
+        del ws_aux, model_axis          # X_ws is already model-replicated
+        return Xb + _apply_T(X_ws.T, delta)
+
+    def matvec(self, beta):
+        return self.X @ beta
+
+    def lipschitz(self, datafit):
+        return datafit.lipschitz(self.X)
+
+    def col_sq_norms(self):
+        return jnp.sum(self.X * self.X, axis=0)
+
+    def in_spec(self, data_axis, model_axis):
+        return design_specs(data_axis, model_axis)[0]
+
+    def place(self, mesh, data_axis, model_axis):
+        spec = self.in_spec(data_axis, model_axis)
+        return DenseDesign(jax.device_put(self.X, NamedSharding(mesh, spec)))
+
+    def take_columns(self, idx):
+        """Column subset with -1 entries as zero columns (screening pad)."""
+        import numpy as np
+        idx = np.asarray(idx)
+        Xn = np.asarray(self.X)
+        out = Xn[:, np.where(idx < 0, 0, idx)]
+        out[:, idx < 0] = 0.0
+        return DenseDesign(jnp.asarray(out))
+
+
+jax.tree_util.register_pytree_node(
+    DenseDesign, lambda d: ((d.X,), None),
+    lambda aux, ch: DenseDesign(*ch))
+
+
+def is_scipy_sparse(X) -> bool:
+    """Structural check shared by every dispatch site (as_design, the
+    estimators' predict/fit paths): scipy sparse without importing scipy."""
+    return hasattr(X, "tocsc") and hasattr(X, "nnz")
+
+
+def as_design(X) -> Design:
+    """Dispatch any accepted design input to a Design: Design instances pass
+    through, scipy sparse matrices convert to CSC, everything else is a
+    dense array."""
+    if isinstance(X, Design):
+        return X
+    if is_scipy_sparse(X):
+        from repro.sparse.matrix import CSCDesign
+        return CSCDesign.from_scipy(X)
+    return DenseDesign(jnp.asarray(X))
 
 
 def _lin(offset, beta):
@@ -359,7 +497,9 @@ class SolveEngine:
     # One body serves every engine: on a mesh it runs INSIDE shard_map on the
     # local blocks; dense engines call it directly with the global arrays
     # (all collectives/masks statically elided via _live_axes -> None, None).
-    def _score_pass(self, X, y, beta, Xb, L, offset, datafit, penalty):
+    # `design` is already the LOCAL block (local_block() stripped any stacked
+    # shard axis in the caller).
+    def _score_pass(self, design, y, beta, Xb, L, offset, datafit, penalty):
         """Shared head of the fused step and the probe.
 
         Returns (sdf, grad, scores, kkt, gsupp, gcount, obj): grad/scores are
@@ -370,7 +510,7 @@ class SolveEngine:
         da, ma = self._live_axes()
         sdf = _ShardedDatafit(datafit, self._n_data_shards(), da)
         raw = sdf.raw_grad(Xb, y)
-        grad = X.T @ raw
+        grad = design.score(raw, backend=cfg.backend)
         grad = _psum_if(grad, da) + (offset[:, None] if grad.ndim == 2
                                      else offset)
         scores = violation_scores(penalty, beta, grad, L,
@@ -388,14 +528,14 @@ class SolveEngine:
                 jax.lax.psum(_lin(offset, beta) + penalty.value(beta), ma)
         return sdf, grad, scores, kkt, gsupp, gcount, obj
 
-    def _step_body(self, X, y, beta, Xb, L, offset, datafit, penalty,
+    def _step_body(self, design, y, beta, Xb, L, offset, datafit, penalty,
                    tol, eps_frac, bucket):
         """Fused: score -> select -> gather -> inner solve -> scatter.
 
-        On a mesh: local views X [n_loc, width], y/Xb [n_loc], beta/L/offset
-        [width]; working-set indices are global; the K-sized subproblem runs
-        replicated over the whole mesh (Gram form) or keeps its rows
-        data-sharded with per-coordinate psums (Xb form).
+        On a mesh: local views design [n_loc, width], y/Xb [n_loc],
+        beta/L/offset [width]; working-set indices are global; the K-sized
+        subproblem runs replicated over the whole mesh (Gram form) or keeps
+        its rows data-sharded with per-coordinate psums (Xb form).
 
         Returns (beta', Xb', kkt, obj, gsupp-count of beta', inner epochs,
         support-covered flag). kkt/obj are measured on the *incoming* iterate
@@ -407,10 +547,11 @@ class SolveEngine:
         """
         cfg = self.config
         da, ma = self._live_axes()
-        width = X.shape[1]
-        n_glob = X.shape[0] * self._n_data_shards()
+        design = design.local_block()
+        width = design.width
+        n_glob = design.n_rows * self._n_data_shards()
         sdf, grad, scores, kkt, gsupp, gcount0, obj = self._score_pass(
-            X, y, beta, Xb, L, offset, datafit, penalty)
+            design, y, beta, Xb, L, offset, datafit, penalty)
 
         ws = select_working_set_local(scores, gsupp, bucket, ma)
         mine, loc = shard_ws_mask(ws, width, ma)
@@ -421,7 +562,8 @@ class SolveEngine:
         in_ws = gsupp[loc] if mine is None else jnp.where(mine, gsupp[loc],
                                                           False)
         cov = _psum_if(jnp.sum(in_ws, dtype=jnp.int32), ma) == gcount0
-        X_ws = gather_ws_cols(X, mine, loc, ma)     # [n_loc, K], model-repl.
+        # [n_loc, K] model-replicated ws columns (+ sparse scatter windows)
+        X_ws, ws_aux = design.gather_ws(mine, loc, ma)
         pen_ws = penalty.restricted(ws) if hasattr(penalty, "restricted") \
             else penalty
         eps_in = jnp.maximum(eps_frac * kkt, 0.1 * tol)
@@ -463,7 +605,8 @@ class SolveEngine:
             beta_ws, n_ep = jax.lax.cond(done, skip, run, None)
             # incremental residual: exact even when a nonzero coordinate
             # sits outside ws
-            Xb_new = Xb + _apply_T(X_ws.T, beta_ws - beta_ws0)
+            Xb_new = design.update_xb(Xb, X_ws, ws_aux, beta_ws - beta_ws0,
+                                      ma)
         else:
             # Xb form: rows stay data-sharded; each coordinate update's
             # n-reduction is completed with one psum over the data axis.
@@ -490,50 +633,59 @@ class SolveEngine:
             ma)
         return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov
 
-    def _sharded_step(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
-                      eps_frac, bucket):
-        xs, ys, bs = self._specs()
+    def _sharded_step(self, design, y, beta, Xb, L, offset, datafit, penalty,
+                      tol, eps_frac, bucket):
+        xs = design.in_spec(self.data_axis, self.model_axis)
+        _, ys, bs = self._specs()
 
-        def body(X, y, beta, Xb, L, offset, datafit, penalty, tol, eps_frac):
-            return self._step_body(X, y, beta, Xb, L, offset, datafit,
+        def body(design, y, beta, Xb, L, offset, datafit, penalty, tol,
+                 eps_frac):
+            return self._step_body(design, y, beta, Xb, L, offset, datafit,
                                    penalty, tol, eps_frac, bucket)
 
         return shard_map(
             body, mesh=self.mesh,
             in_specs=(xs, ys, bs, ys, bs, bs, P(), P(), P(), P()),
             out_specs=(bs, ys, P(), P(), P(), P(), P()),
-            check_vma=False)(X, y, beta, Xb, L, offset, datafit, penalty,
-                             tol, eps_frac)
+            check_vma=False)(design, y, beta, Xb, L, offset, datafit,
+                             penalty, tol, eps_frac)
 
-    def _outer_step(self, X, y, beta, Xb, L, offset, datafit, penalty, tol,
-                    eps_frac, *, bucket):
+    def _outer_step(self, design, y, beta, Xb, L, offset, datafit, penalty,
+                    tol, eps_frac, *, bucket):
         # executes once per (bucket, arg-structure) compilation: the counter
         # is the proof behind "one compile per ws bucket across a path"
-        self.retraces[bucket] = self.retraces.get(bucket, 0) + 1
+        # (sparse designs get their own key space so mixed dense/sparse use
+        # of a shared engine stays observable)
+        key = bucket if design.KIND == "dense" else (design.KIND, bucket)
+        self.retraces[key] = self.retraces.get(key, 0) + 1
         if self.mesh is not None:
-            return self._sharded_step(X, y, beta, Xb, L, offset, datafit,
-                                      penalty, tol, eps_frac, bucket)
-        return self._step_body(X, y, beta, Xb, L, offset, datafit, penalty,
-                               tol, eps_frac, bucket)
+            return self._sharded_step(design, y, beta, Xb, L, offset,
+                                      datafit, penalty, tol, eps_frac,
+                                      bucket)
+        return self._step_body(design, y, beta, Xb, L, offset, datafit,
+                               penalty, tol, eps_frac, bucket)
 
-    def _probe(self, X, y, beta, Xb, L, offset, datafit, penalty):
+    def _probe(self, design, y, beta, Xb, L, offset, datafit, penalty):
         """Pre-loop probe: kkt/|gsupp|/obj of the initial iterate (sizes the
         first bucket under warm starts). One launch per solve, not per iter."""
         if self.mesh is not None:
-            xs, ys, bs = self._specs()
+            xs = design.in_spec(self.data_axis, self.model_axis)
+            _, ys, bs = self._specs()
 
-            def body(X, y, beta, Xb, L, offset, datafit, penalty):
+            def body(design, y, beta, Xb, L, offset, datafit, penalty):
                 _, _, _, kkt, _, gcount, obj = self._score_pass(
-                    X, y, beta, Xb, L, offset, datafit, penalty)
+                    design.local_block(), y, beta, Xb, L, offset, datafit,
+                    penalty)
                 return kkt, gcount, obj
 
             return shard_map(
                 body, mesh=self.mesh,
                 in_specs=(xs, ys, bs, ys, bs, bs, P(), P()),
                 out_specs=(P(), P(), P()),
-                check_vma=False)(X, y, beta, Xb, L, offset, datafit, penalty)
+                check_vma=False)(design, y, beta, Xb, L, offset, datafit,
+                                 penalty)
         _, _, _, kkt, _, gcount, obj = self._score_pass(
-            X, y, beta, Xb, L, offset, datafit, penalty)
+            design.local_block(), y, beta, Xb, L, offset, datafit, penalty)
         return kkt, gcount, obj
 
     # ---------------------------------------------------- multi-lambda chunk
@@ -571,7 +723,7 @@ class SolveEngine:
                 jnp.zeros((), jnp.int32))
         return jax.lax.while_loop(cond, body, init)
 
-    def _chunk_solve(self, X, y, lams, betas, Xbs, L, offset, datafit,
+    def _chunk_solve(self, design, y, lams, betas, Xbs, L, offset, datafit,
                      penalty, tol, eps_frac, max_outer, growth, *, bucket):
         """Device-resident path chunk: vmap the fused step over a chunk of
         lambdas and drive the *outer* loop with lax.while_loop, so the host
@@ -583,29 +735,34 @@ class SolveEngine:
         On a mesh the lanes are vmapped INSIDE shard_map (lanes x devices:
         lambda is a penalty leaf, the collectives batch through vmap), so
         the whole sharded sweep is still one program per bucket."""
-        key = ("chunk", bucket, int(lams.shape[0]))
+        # sparse designs get their own key space, like _outer_step, so mixed
+        # dense/sparse use of a shared engine stays observable
+        key = ("chunk", bucket, int(lams.shape[0])) \
+            if design.KIND == "dense" \
+            else ("chunk", design.KIND, bucket, int(lams.shape[0]))
         self.retraces[key] = self.retraces.get(key, 0) + 1
+        p_glob = design.shape[1]
 
         if self.mesh is None:
             def step(lam, beta, Xb):
                 pen = dataclasses.replace(penalty, lam=lam)
-                return self._step_body(X, y, beta, Xb, L, offset, datafit,
-                                       pen, tol, eps_frac, bucket)
+                return self._step_body(design, y, beta, Xb, L, offset,
+                                       datafit, pen, tol, eps_frac, bucket)
 
-            return self._chunk_loop(step, X.shape[1], lams, betas, Xbs, tol,
+            return self._chunk_loop(step, p_glob, lams, betas, Xbs, tol,
                                     max_outer, growth, bucket)
 
-        p_glob = X.shape[1]
-        xs, ys, bs = self._specs()
+        xs = design.in_spec(self.data_axis, self.model_axis)
+        _, ys, bs = self._specs()
         lane_b = P(None, *bs)                    # [C, p] lanes x features
         lane_x = P(None, *ys)                    # [C, n] lanes x samples
 
-        def body(X, y, lams, betas, Xbs, L, offset, datafit, penalty, tol,
-                 eps_frac, max_outer, growth):
+        def body(design, y, lams, betas, Xbs, L, offset, datafit, penalty,
+                 tol, eps_frac, max_outer, growth):
             def step(lam, beta, Xb):
                 pen = dataclasses.replace(penalty, lam=lam)
-                return self._step_body(X, y, beta, Xb, L, offset, datafit,
-                                       pen, tol, eps_frac, bucket)
+                return self._step_body(design, y, beta, Xb, L, offset,
+                                       datafit, pen, tol, eps_frac, bucket)
 
             return self._chunk_loop(step, p_glob, lams, betas, Xbs, tol,
                                     max_outer, growth, bucket)
@@ -615,22 +772,22 @@ class SolveEngine:
             in_specs=(xs, ys, P(), lane_b, lane_x, bs, bs, P(), P(), P(),
                       P(), P(), P()),
             out_specs=(lane_b, lane_x, P(), P(), P(), P(), P()),
-            check_vma=False)(X, y, lams, betas, Xbs, L, offset, datafit,
+            check_vma=False)(design, y, lams, betas, Xbs, L, offset, datafit,
                              penalty, tol, eps_frac, max_outer, growth)
 
     # ------------------------------------------------------------- host API
-    def step(self, bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
-             eps_frac):
+    def step(self, bucket, design, y, beta, Xb, L, offset, datafit, penalty,
+             tol, eps_frac):
         """One fused outer iteration. Single device dispatch; the caller does
         the (single) scalar readback."""
         self.n_dispatches += 1
-        return self._jstep(X, y, beta, Xb, L, offset, datafit, penalty, tol,
-                           eps_frac, bucket=bucket)
+        return self._jstep(design, y, beta, Xb, L, offset, datafit, penalty,
+                           tol, eps_frac, bucket=bucket)
 
-    def probe(self, X, y, beta, Xb, L, offset, datafit, penalty):
-        return self._jprobe(X, y, beta, Xb, L, offset, datafit, penalty)
+    def probe(self, design, y, beta, Xb, L, offset, datafit, penalty):
+        return self._jprobe(design, y, beta, Xb, L, offset, datafit, penalty)
 
-    def chunk(self, bucket, X, y, lams, betas, Xbs, L, offset, datafit,
+    def chunk(self, bucket, design, y, lams, betas, Xbs, L, offset, datafit,
               penalty, tol, eps_frac, max_outer, growth=2):
         """One device-resident multi-lambda chunk solve. Returns the final
         (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state."""
@@ -639,12 +796,29 @@ class SolveEngine:
                 "chunked (vmapped) path solving requires backend='jax'; the "
                 "Pallas kernels are not batchable under vmap")
         self.n_dispatches += 1
-        return self._jchunk(X, y, lams, betas, Xbs, L, offset, datafit,
+        return self._jchunk(design, y, lams, betas, Xbs, L, offset, datafit,
                             penalty, tol, eps_frac, max_outer, growth,
                             bucket=bucket)
 
-    def validate(self, datafit, penalty, n_tasks, shape=None):
+    def validate(self, datafit, penalty, n_tasks, shape=None, design=None):
         """Static feasibility checks, raised eagerly at solve() entry."""
+        if design is not None and design.KIND == "csc":
+            if n_tasks:
+                raise NotImplementedError(
+                    "sparse designs do not support multitask datafits (2-D "
+                    "coefficients) yet; densify or fit per task")
+            if self.mesh is not None and \
+                    self.mesh.shape[self.data_axis] > 1:
+                raise NotImplementedError(
+                    f"mesh=...: sparse designs cannot be sample-sharded "
+                    f"(CSC rows are global); use a (1, k) mesh with the "
+                    f"features on the {self.model_axis} axis")
+            if self.mesh is None and self.config.backend == "pallas" and \
+                    not getattr(design, "has_ell", False):
+                raise NotImplementedError(
+                    "backend='pallas' on a sparse design needs the ELL "
+                    "score layout: build it with "
+                    "CSCDesign.from_scipy(X, ell=True)")
         if self.mesh is not None:
             if shape is not None:
                 nd = self.mesh.shape[self.data_axis]

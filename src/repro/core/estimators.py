@@ -15,12 +15,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
+from .engine import Design, as_design, is_scipy_sparse
 from .penalties import MCP, SCAD, L05, L1, L1L2, BlockL1, BlockMCP, Box
 from .solver import solve
 
 __all__ = ["GeneralizedLinearEstimator", "Lasso", "ElasticNet",
            "MCPRegression", "SCADRegression", "SparseLogisticRegression",
            "LinearSVC", "MultiTaskLasso", "MultiTaskMCP"]
+
+# datafits whose fit(X, y) supports fit_intercept=True via X/y centering
+# (quadratic losses: the centered problem's solution is the un-centered
+# slope, and intercept_ = mean(y) - mean(X) @ coef_ recovers the offset)
+_CENTERABLE_DATAFITS = (Quadratic, MultitaskQuadratic)
+
+
+def _is_sparse_input(X):
+    """True for inputs with no dense [n, p] representation to center."""
+    if isinstance(X, Design):
+        return X.KIND != "dense"
+    return is_scipy_sparse(X)
+
+
+def _design_matmul(X, coef):
+    """X @ coef for dense arrays, scipy sparse matrices, or Designs."""
+    if isinstance(X, Design):
+        return np.asarray(X.matvec(jnp.asarray(coef)))
+    if is_scipy_sparse(X):
+        return np.asarray(X @ coef)
+    return np.asarray(X) @ coef
 
 
 class GeneralizedLinearEstimator:
@@ -29,6 +51,13 @@ class GeneralizedLinearEstimator:
     `mesh` (a jax Mesh with data/model axes) fits on the mesh-native sharded
     engine — the design is placed samples x features over the mesh and the
     same fused solve runs from one device to a pod (DESIGN.md §6).
+
+    `X` may be dense, a scipy sparse matrix, or a `repro.sparse.CSCDesign`
+    (DESIGN.md §7): sparse fits run CSC-native without densifying.
+
+    `fit_intercept=True` (quadratic datafits only) fits on centered X/y and
+    exposes the un-centered `intercept_`; `predict` adds it back. Sparse
+    inputs reject it (centering densifies the design).
     """
 
     def __init__(self, datafit=None, penalty=None, *, tol=1e-6, max_outer=50,
@@ -45,22 +74,41 @@ class GeneralizedLinearEstimator:
         self.use_kernels = use_kernels
         self.mesh = mesh
         self.engine = engine            # share compiled fused steps across fits
+        self.fit_intercept = fit_intercept
         self.solve_kw = solve_kw
         if mesh is not None:
             self.solve_kw.update(mesh=mesh, data_axis=data_axis,
                                  model_axis=model_axis)
-        if fit_intercept:
+        if fit_intercept and \
+                not isinstance(self.datafit, _CENTERABLE_DATAFITS):
             raise NotImplementedError(
-                "center X/y beforehand; intercept handling is out of scope")
+                f"fit_intercept=True is only supported for quadratic "
+                f"datafits (X/y centering), not "
+                f"{type(self.datafit).__name__}; center the data beforehand")
 
     def fit(self, X, y):
-        X = jnp.asarray(X)
         y = jnp.asarray(y)
+        self.intercept_ = 0.0
+        X_mean = y_mean = None
+        if self.fit_intercept:
+            if _is_sparse_input(X):
+                raise NotImplementedError(
+                    "fit_intercept=True would densify a sparse design "
+                    "(column centering); pre-center or add a constant "
+                    "feature instead")
+            Xd = np.asarray(X.X if isinstance(X, Design) else X)
+            X_mean = Xd.mean(axis=0)
+            y_mean = np.asarray(y).mean(axis=0)
+            X = jnp.asarray(Xd - X_mean)
+            y = jnp.asarray(np.asarray(y) - y_mean)
+        X = as_design(X)
         res = solve(X, y, self.datafit, self.penalty, tol=self.tol,
                     max_outer=self.max_outer, max_epochs=self.max_epochs,
                     M=self.M, p0=self.p0, use_kernels=self.use_kernels,
                     engine=self.engine, **self.solve_kw)
         self.coef_ = np.asarray(res.beta)
+        if self.fit_intercept:
+            self.intercept_ = y_mean - X_mean @ self.coef_
         self.kkt_ = res.kkt
         self.converged_ = res.converged
         self.n_iter_ = res.n_outer
@@ -69,7 +117,7 @@ class GeneralizedLinearEstimator:
         return self
 
     def predict(self, X):
-        return np.asarray(X) @ self.coef_
+        return _design_matmul(X, self.coef_) + self.intercept_
 
     def score(self, X, y):
         """R^2 for regressors (classifiers override)."""
@@ -110,10 +158,10 @@ class SparseLogisticRegression(GeneralizedLinearEstimator):
         self.alpha = alpha
 
     def predict(self, X):
-        return np.sign(np.asarray(X) @ self.coef_ + 1e-30)
+        return np.sign(_design_matmul(X, self.coef_) + 1e-30)
 
     def predict_proba(self, X):
-        z = np.asarray(X) @ self.coef_
+        z = _design_matmul(X, self.coef_)
         p1 = 1.0 / (1.0 + np.exp(-z))
         return np.stack([1 - p1, p1], axis=-1)
 
@@ -122,22 +170,29 @@ class SparseLogisticRegression(GeneralizedLinearEstimator):
 
 
 class LinearSVC(GeneralizedLinearEstimator):
-    """Dual SVM with hinge loss (paper Eq. 33-35)."""
+    """Dual SVM with hinge loss (paper Eq. 33-35). Accepts dense or scipy
+    sparse X (the label-signed design Z^T stays sparse)."""
 
     def __init__(self, C=1.0, **kw):
         super().__init__(QuadraticSVC(), Box(C), **kw)
         self.C = C
 
     def fit(self, X, y):
-        X = jnp.asarray(X)
         y = jnp.asarray(y)
-        Z = y[:, None] * X                       # [n, d]
-        res = solve(Z.T, y, self.datafit, self.penalty, tol=self.tol,
+        if is_scipy_sparse(X):
+            yn = np.asarray(y)
+            Zt = X.multiply(yn[:, None]).T.tocsc()       # [d, n] sparse
+        else:
+            X = jnp.asarray(X)
+            Zt = (y[:, None] * X).T                      # [d, n]
+        res = solve(Zt, y, self.datafit, self.penalty, tol=self.tol,
                     max_outer=self.max_outer, max_epochs=self.max_epochs,
                     M=self.M, p0=self.p0, use_kernels=self.use_kernels,
                     engine=self.engine, **self.solve_kw)
+        self.intercept_ = 0.0
         self.dual_coef_ = np.asarray(res.beta)   # alpha
-        self.coef_ = np.asarray(Z.T @ res.beta)  # primal w (Eq. 35)
+        # primal w = Z^T alpha (Eq. 35)
+        self.coef_ = _design_matmul(Zt, self.dual_coef_)
         self.kkt_ = res.kkt
         self.converged_ = res.converged
         self.n_iter_ = res.n_outer
@@ -145,7 +200,7 @@ class LinearSVC(GeneralizedLinearEstimator):
         return self
 
     def predict(self, X):
-        return np.sign(np.asarray(X) @ self.coef_ + 1e-30)
+        return np.sign(_design_matmul(X, self.coef_) + 1e-30)
 
     def score(self, X, y):
         return float(np.mean(self.predict(X) == np.asarray(y)))

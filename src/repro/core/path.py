@@ -36,8 +36,10 @@ import jax.numpy as jnp
 
 from .api import lambda_max
 from .datafits import Quadratic
+from .engine import as_design
+from .penalties import L1
 from .solver import _place_design, make_engine, solve
-from .working_set import BucketPolicy
+from .working_set import BucketPolicy, next_pow2
 
 __all__ = ["reg_path", "PathResult", "support_metrics"]
 
@@ -58,6 +60,8 @@ class PathResult:
     times: Optional[np.ndarray] = None          # cumulative seconds
     retraces: dict = field(default_factory=dict)
     n_dispatches: int = 0
+    # gap-safe screening telemetry (screen="gap_safe" only)
+    screened_fracs: Optional[np.ndarray] = None
 
 
 def _with_lam(penalty, lam: float):
@@ -67,7 +71,7 @@ def _with_lam(penalty, lam: float):
 def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
              lambda_min_ratio=1e-2, tol=1e-6,
              metric_fn: Optional[Callable] = None, engine=None, vmap_chunk=1,
-             mesh=None, data_axis="data", model_axis="model",
+             mesh=None, data_axis="data", model_axis="model", screen=None,
              **solve_kw) -> PathResult:
     """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
 
@@ -81,10 +85,22 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     the sequential driver keeps its 1-dispatch/1-sync outer step, and the
     chunked driver composes as vmap over lanes x shard_map over devices —
     warm-start handoff and bucket escalation are unchanged.
+
+    `X` may be dense, a scipy sparse matrix, or a `Design` (DESIGN.md §7);
+    sparse paths run CSC-native end to end.
+
+    `screen="gap_safe"` (sequential driver, L1 + Quadratic only) applies
+    the gap-safe sphere test (core/screening.py) as a pre-filter at each
+    lambda: features certified zero by the previous solution's duality gap
+    are dropped from the subproblem (padded to powers of two so the engine
+    still compiles once per size), and `PathResult.screened_fracs` records
+    the screened fraction per lambda. Solutions are unchanged — the rule is
+    safe — only the per-lambda problem width shrinks.
     """
     datafit = Quadratic() if datafit is None else datafit
+    design = as_design(X)
     if lambdas is None:
-        lmax = lambda_max(X, y, datafit)
+        lmax = lambda_max(design, y, datafit)
         lambdas = lmax * np.geomspace(1.0, lambda_min_ratio, n_lambdas)
     lambdas = np.asarray(lambdas, dtype=np.float64)
 
@@ -100,28 +116,49 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     # entry-time feasibility for BOTH drivers (the chunked one never reaches
     # solve()): unsupported mesh configs must raise here, not mid-trace
     n_tasks = y.shape[1] if (hasattr(y, "ndim") and y.ndim == 2) else 0
-    engine.validate(datafit, penalty, n_tasks, shape=X.shape)
+    engine.validate(datafit, penalty, n_tasks, shape=design.shape,
+                    design=design)
+    if screen is not None:
+        if screen != "gap_safe":
+            raise ValueError(f"unknown screening rule {screen!r}; "
+                             f"supported: 'gap_safe'")
+        if vmap_chunk > 1:
+            raise ValueError("screen='gap_safe' requires the sequential "
+                             "driver (vmap_chunk=1): the per-lambda survivor "
+                             "sets have different widths")
+        if engine.mesh is not None:
+            raise ValueError("screen='gap_safe' is not supported on the "
+                             "mesh-native engine yet")
+        if not (isinstance(penalty, L1) and isinstance(datafit, Quadratic)):
+            raise ValueError(
+                "screen='gap_safe' needs a duality certificate: only the "
+                "convex L1 + Quadratic pair is supported (non-convex "
+                "penalties are exactly the case the paper's working sets "
+                "handle instead)")
     if engine.mesh is not None:
-        X, y = _place_design(engine, X, y)
+        design, y = _place_design(engine, design, y)
 
     if vmap_chunk > 1:
-        res = _chunked_path(X, y, penalty, datafit, lambdas, tol, engine,
-                            vmap_chunk, metric_fn, **solve_kw)
+        res = _chunked_path(design, y, penalty, datafit, lambdas, tol,
+                            engine, vmap_chunk, metric_fn, **solve_kw)
     else:
-        res = _sequential_path(X, y, penalty, datafit, lambdas, tol, engine,
-                               metric_fn, **solve_kw)
+        res = _sequential_path(design, y, penalty, datafit, lambdas, tol,
+                               engine, metric_fn, screen=screen, **solve_kw)
     res.retraces = dict(engine.retraces)
     res.n_dispatches = engine.n_dispatches
     return res
 
 
-def _sequential_path(X, y, penalty, datafit, lambdas, tol, engine, metric_fn,
-                     **solve_kw):
+def _sequential_path(design, y, penalty, datafit, lambdas, tol, engine,
+                     metric_fn, *, screen=None, **solve_kw):
+    if screen is not None:
+        return _screened_path(design, y, penalty, datafit, lambdas, tol,
+                              engine, metric_fn, **solve_kw)
     beta = None
     t0 = time.perf_counter()
     betas, kkts, nnzs, eps, outers, times, metrics = [], [], [], [], [], [], []
     for lam in lambdas:
-        res = solve(X, y, datafit, _with_lam(penalty, float(lam)),
+        res = solve(design, y, datafit, _with_lam(penalty, float(lam)),
                     tol=tol, beta0=beta, engine=engine, **solve_kw)
         beta = res.beta
         betas.append(np.asarray(beta))
@@ -138,7 +175,62 @@ def _sequential_path(X, y, penalty, datafit, lambdas, tol, engine, metric_fn,
                       n_outer=np.asarray(outers), times=np.asarray(times))
 
 
-def _chunked_path(X, y, penalty, datafit, lambdas, tol, engine, chunk,
+def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
+                   metric_fn, **solve_kw):
+    """Sequential path with the gap-safe pre-filter (opt-in, L1+Quadratic).
+
+    Per lambda: certify zeros with the previous solution's duality gap,
+    solve the surviving-column subproblem (width padded to a power of two so
+    compiled steps are shared across lambdas), scatter back into the full
+    coefficient vector. Safe screening => identical solutions.
+    """
+    from .screening import gap_safe_mask_design
+
+    n, p = design.shape
+    beta_full = np.zeros(p)
+    t0 = time.perf_counter()
+    betas, kkts, nnzs, eps, outers, times = [], [], [], [], [], []
+    metrics, fracs = [], []
+    for lam in lambdas:
+        mask = np.asarray(gap_safe_mask_design(design, y,
+                                               jnp.asarray(beta_full),
+                                               float(lam)))
+        surv = np.flatnonzero(mask)
+        fracs.append(1.0 - len(surv) / p)
+        beta_full = np.where(mask, beta_full, 0.0)
+        if len(surv):
+            width = min(p, next_pow2(max(len(surv), 16)))
+            idx = np.full(width, -1, np.int64)
+            idx[:len(surv)] = surv
+            sub = design.take_columns(idx)
+            beta0_sub = np.zeros(width)
+            beta0_sub[:len(surv)] = beta_full[surv]
+            res = solve(sub, y, datafit, _with_lam(penalty, float(lam)),
+                        tol=tol, beta0=jnp.asarray(beta0_sub),
+                        engine=engine, **solve_kw)
+            beta_full = np.zeros(p)
+            beta_full[surv] = np.asarray(res.beta)[:len(surv)]
+            kkts.append(res.kkt)
+            eps.append(res.n_epochs)
+            outers.append(res.n_outer)
+        else:
+            beta_full = np.zeros(p)
+            kkts.append(0.0)
+            eps.append(0)
+            outers.append(0)
+        betas.append(beta_full.copy())
+        nnzs.append(int(np.sum(beta_full != 0)))
+        times.append(time.perf_counter() - t0)
+        if metric_fn is not None:
+            metrics.append(metric_fn(lam, beta_full))
+    return PathResult(lambdas=lambdas, betas=np.stack(betas),
+                      kkts=np.asarray(kkts), nnzs=np.asarray(nnzs),
+                      n_epochs=np.asarray(eps), metrics=metrics,
+                      n_outer=np.asarray(outers), times=np.asarray(times),
+                      screened_fracs=np.asarray(fracs))
+
+
+def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
                   metric_fn, *, p0=64, max_outer=50, eps_inner_frac=0.3,
                   **solve_kw):
     """Chunked vmap sweep with warm-start handoff between chunks."""
@@ -150,19 +242,19 @@ def _chunked_path(X, y, penalty, datafit, lambdas, tol, engine, chunk,
         raise ValueError(
             f"vmap_chunk > 1 does not support solve kwargs "
             f"{sorted(unsupported)}; use the sequential driver (vmap_chunk=1)")
-    p = X.shape[1]
+    p = design.shape[1]
     policy = BucketPolicy(p0=p0)
-    L = datafit.lipschitz(X)
-    offset = datafit.grad_offset(p, X.dtype)
+    L = design.lipschitz(datafit)
+    offset = datafit.grad_offset(p, design.dtype)
     bshape = (p,) if y.ndim == 1 else (p, y.shape[1])
-    beta_prev = jnp.zeros(bshape, X.dtype)
-    Xb_prev = X @ beta_prev
+    beta_prev = jnp.zeros(bshape, design.dtype)
+    Xb_prev = design.matvec(beta_prev)
     gcount_prev = 0
 
     t0 = time.perf_counter()
     betas, kkts, n_eps, outers, times = [], [], [], [], []
     for lo in range(0, len(lambdas), chunk):
-        lams_c = jnp.asarray(lambdas[lo:lo + chunk], X.dtype)
+        lams_c = jnp.asarray(lambdas[lo:lo + chunk], design.dtype)
         C = lams_c.shape[0]
         # all lanes warm-start from the previous chunk's densest solution
         betas0 = jnp.stack([beta_prev] * C)
@@ -172,8 +264,8 @@ def _chunked_path(X, y, penalty, datafit, lambdas, tol, engine, chunk,
         chunk_iters = 0
         chunk_eps = np.zeros(C, np.int64)
         while True:
-            out = engine.chunk(bucket, X, y, lams_c, betas0, Xbs0, L, offset,
-                               datafit, penalty, tol, eps_inner_frac,
+            out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0, L,
+                               offset, datafit, penalty, tol, eps_inner_frac,
                                iters_left)
             betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
             # one host sync per (chunk, bucket) attempt

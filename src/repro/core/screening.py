@@ -18,30 +18,47 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lasso_gap_safe_mask", "screened_fraction"]
+__all__ = ["lasso_gap_safe_mask", "gap_safe_mask_design",
+           "screened_fraction"]
 
 
-@jax.jit
 def lasso_gap_safe_mask(X, y, beta, lam):
     """Boolean mask: True = feature *survives* (may be nonzero at optimum).
 
     Safe: any feature marked False is provably zero in every Lasso solution
-    at this lambda (Gap Safe sphere test).
+    at this lambda (Gap Safe sphere test). Dense-array entry point; the one
+    implementation of the rule is the design-generic
+    ``gap_safe_mask_design`` below.
     """
+    from .engine import DenseDesign
+    return _gap_safe_mask_impl(DenseDesign(jnp.asarray(X)), y, beta, lam)
+
+
+@jax.jit
+def _gap_safe_mask_impl(design, y, beta, lam):
     n = y.shape[0]
-    resid = y - X @ beta
+    resid = y - design.matvec(beta)
     theta = resid / (lam * n)
-    # rescale into the dual-feasible box |X^T theta|_inf <= 1
-    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(
-        jnp.max(jnp.abs(X.T @ theta)), 1e-30))
+    corr = design.score(theta)
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(jnp.max(jnp.abs(corr)),
+                                               1e-30))
     theta = theta * scale
+    corr = corr * scale
     primal = jnp.sum(resid ** 2) / (2 * n) + lam * jnp.sum(jnp.abs(beta))
     dual = (lam * jnp.vdot(y, theta)
             - 0.5 * lam ** 2 * n * jnp.sum(theta ** 2))
     gap = jnp.maximum(primal - dual, 0.0)
     r = jnp.sqrt(2.0 * gap / n) / lam
-    col_norms = jnp.sqrt(jnp.sum(X * X, axis=0))
-    return jnp.abs(X.T @ theta) + r * col_norms >= 1.0
+    col_norms = jnp.sqrt(design.col_sq_norms())
+    return jnp.abs(corr) + r * col_norms >= 1.0
+
+
+def gap_safe_mask_design(design, y, beta, lam):
+    """Design-generic gap-safe survivor mask (Lasso form): works on dense
+    and CSC designs alike through the Design protocol's score/matvec/
+    col_sq_norms — the sparse path never materializes X. Used by
+    ``reg_path(screen="gap_safe")``."""
+    return _gap_safe_mask_impl(design, y, beta, lam)
 
 
 def screened_fraction(mask) -> float:

@@ -22,18 +22,19 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
 from .engine import (EngineConfig, GramSolver, SolveEngine, WorkingSetContext,
-                     XbSolver, _apply_T, get_engine)
+                     XbSolver, _apply_T, as_design, get_engine)
 from .working_set import BucketPolicy
 
 __all__ = ["solve", "SolveResult"]
 
 
-def _place_design(engine, X, y):
-    """Shard (X, y) on the engine's mesh (idempotent for pre-sharded input)."""
-    xs, ys, _ = engine._specs()
-    X = jax.device_put(X, NamedSharding(engine.mesh, xs))
+def _place_design(engine, design, y):
+    """Shard (design, y) on the engine's mesh (idempotent for pre-sharded
+    input; sparse designs convert to their stacked per-shard form here)."""
+    _, ys, _ = engine._specs()
+    design = design.place(engine.mesh, engine.data_axis, engine.model_axis)
     y = jax.device_put(y, NamedSharding(engine.mesh, ys))
-    return X, y
+    return design, y
 
 
 @dataclass
@@ -126,8 +127,15 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     is unchanged: one launch, one blocking readback per outer iteration.
     Unsupported sharded configurations (multitask/block penalties, the
     Pallas backend) raise NotImplementedError here, before any trace.
+
+    `X` may be a dense array, a scipy sparse matrix (converted to a
+    CSC-native `repro.sparse.CSCDesign`, DESIGN.md §7), or any `Design`
+    instance: the sparse path never materializes a dense X — the score pass
+    is a segment-sum over the nnz entries and only the K working-set columns
+    are densified for the inner solve.
     """
-    n_rows, p = X.shape
+    design = as_design(X)
+    n_rows, p = design.shape
     if not use_ws:
         p0 = p
     if use_fp_score is None:
@@ -146,19 +154,21 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         raise ValueError("solve(mesh=..., engine=...): the engine was built "
                          "for a different mesh; pass mesh to make_engine "
                          "instead")
-    engine.validate(datafit, penalty, n_tasks, shape=X.shape)
+    engine.validate(datafit, penalty, n_tasks, shape=design.shape,
+                    design=design)
     policy = bucket_policy or BucketPolicy(p0=p0)
 
     if engine.mesh is not None:
-        X, y = _place_design(engine, X, y)
-    L = datafit.lipschitz(X)
-    offset = datafit.grad_offset(p, X.dtype)
+        design, y = _place_design(engine, design, y)
+    L = design.lipschitz(datafit)
+    offset = datafit.grad_offset(p, design.dtype)
     bshape = (p, n_tasks) if n_tasks else (p,)
-    beta = jnp.zeros(bshape, X.dtype) if beta0 is None else jnp.asarray(beta0)
+    beta = jnp.zeros(bshape, design.dtype) if beta0 is None \
+        else jnp.asarray(beta0)
     if engine.mesh is not None:
         _, _, bs = engine._specs()
         beta = jax.device_put(beta, NamedSharding(engine.mesh, bs))
-    Xb = X @ beta
+    Xb = design.matvec(beta)
 
     res = SolveResult(beta=beta, kkt=float("inf"), converged=False,
                       n_outer=0, n_epochs=0)
@@ -169,14 +179,15 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     if beta0 is None:
         gcount = 0
     else:
-        _, g0, _ = engine.probe(X, y, beta, Xb, L, offset, datafit, penalty)
+        _, g0, _ = engine.probe(design, y, beta, Xb, L, offset, datafit,
+                                penalty)
         gcount = int(g0)
         res.n_host_syncs += 1
     bucket = policy.first_bucket(gcount, p)
 
     for t in range(max_outer):
         beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d = engine.step(
-            bucket, X, y, beta, Xb, L, offset, datafit, penalty, tol,
+            bucket, design, y, beta, Xb, L, offset, datafit, penalty, tol,
             eps_inner_frac)
         # the single blocking host sync of this outer iteration
         kkt, obj, gcount, n_ep, cov = jax.device_get(

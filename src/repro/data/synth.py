@@ -42,6 +42,62 @@ def make_classification(n=500, p=1000, n_nonzero=50, seed=0, dtype=np.float64):
     return X.astype(dtype), y.astype(dtype), beta_true.astype(dtype)
 
 
+def make_sparse_design(n=10000, p=50000, density=1e-3, n_nonzero=100,
+                       snr=5.0, power=1.1, max_col_frac=0.02, seed=0,
+                       dtype=np.float64):
+    """News20-like sparse design: power-law column densities (a few frequent
+    'header' features, a long tail of rare ones), standard-normal values, a
+    sparse ground truth drawn from the denser half of the columns, Gaussian
+    noise at the prescribed SNR.
+
+    Column j's expected nnz is proportional to (j+1)^-power, rescaled so the
+    total nnz matches `density * n * p` (so nnz/row ~ density * p, the
+    news20-ish regime), and clipped to `max_col_frac * n` — the clip bounds
+    the CSC gather window (max_col_nnz) that sizes the engine's
+    static-shape working-set densify.
+
+    Returns (X_csc, y, beta_true): X is a scipy.sparse CSC matrix — the
+    solve stack consumes it without densifying.
+    """
+    from scipy import sparse as sp
+
+    rng = np.random.default_rng(seed)
+    target_nnz = density * n * p
+    cap = max(1, int(max_col_frac * n))
+    w = (np.arange(p, dtype=np.float64) + 1.0) ** -power
+    # rescale until the clipped total hits the target density: the clip
+    # removes head mass, so unclipped (tail) columns absorb the deficit
+    scale = target_nnz / w.sum()
+    col_nnz = np.clip(np.round(w * scale), 1, cap).astype(np.int64)
+    for _ in range(16):
+        tot = col_nnz.sum()
+        if tot >= 0.98 * target_nnz or (col_nnz == cap).all():
+            break
+        scale *= target_nnz / tot
+        col_nnz = np.clip(np.round(w * scale), 1, cap).astype(np.int64)
+    # vectorized sampling with per-column dedup: draw rows with replacement,
+    # drop duplicate (col, row) pairs (total nnz lands a hair under target)
+    cols = np.repeat(np.arange(p, dtype=np.int64), col_nnz)
+    rows = rng.integers(0, n, cols.shape[0])
+    keys = np.unique(cols * n + rows)
+    cols, rows = keys // n, keys % n
+    vals = rng.standard_normal(len(keys)).astype(dtype)
+    X = sp.csc_matrix((vals, (rows, cols)), shape=(n, p), dtype=dtype)
+    X.sort_indices()
+
+    beta_true = np.zeros(p, dtype)
+    # support from the denser half so the signal actually reaches y
+    supp = rng.choice(p // 2, size=min(n_nonzero, p // 2), replace=False)
+    beta_true[supp] = rng.standard_normal(len(supp))
+    signal = X @ beta_true
+    noise = rng.standard_normal(n)
+    nrm = np.linalg.norm(signal)
+    if nrm > 0:
+        noise *= nrm / (snr * np.linalg.norm(noise))
+    y = (signal + noise).astype(dtype)
+    return X, y, beta_true
+
+
 def make_multitask(n=300, p=600, n_tasks=10, n_nonzero=20, snr=3.0, seed=0,
                    dtype=np.float64):
     rng = np.random.default_rng(seed)

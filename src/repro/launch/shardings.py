@@ -162,6 +162,15 @@ def design_specs(data_axis="data", model_axis="model"):
     return (P(data_axis, model_axis), P(data_axis), P(model_axis))
 
 
+def sparse_design_spec(model_axis="model"):
+    """Leading-axis spec of the stacked per-shard CSC design leaves
+    (ShardedCSCDesign, DESIGN.md §7): every leaf is [n_shards, ...] and
+    shard_map splits the shard axis over the model mesh axis. Samples stay
+    unsplit for sparse designs — the row structure of CSC cannot be
+    block-split without re-indexing every shard."""
+    return P(model_axis)
+
+
 # shape-specific activation overrides (see DESIGN.md §3):
 #  - decode: shard the KV cache over the model axis (context parallelism);
 #    XLA inserts the softmax-combine all-reduces automatically.

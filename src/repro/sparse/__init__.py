@@ -1,0 +1,18 @@
+"""repro.sparse — device-resident sparse design matrices (DESIGN.md §7).
+
+The paper's flagship workloads (news20, rcv1, finance) are sparse designs
+with millions of samples and features; only the *score pass* ``X.T @ grad``
+and the *residual updates* ``Xb += X_ws d`` ever touch the full design. This
+package provides a CSC-native ``Design`` implementation whose three hot
+primitives (score / working-set column gather / incremental Xb update) are
+jit-compatible with static shapes, so the fused solve engine in
+``core/engine.py`` runs unchanged on sparse inputs — the working-set inner
+solve densifies only the selected K columns.
+"""
+from .matrix import CSCDesign, ShardedCSCDesign
+from .ops import (csc_gather_columns, csc_incremental_xb, csc_matvec,
+                  csc_score, csc_score_ell, csc_score_pallas)
+
+__all__ = ["CSCDesign", "ShardedCSCDesign", "csc_score", "csc_score_ell",
+           "csc_score_pallas", "csc_gather_columns", "csc_incremental_xb",
+           "csc_matvec"]

@@ -1,0 +1,379 @@
+"""CSC design matrices for the solve engine (DESIGN.md §7).
+
+``CSCDesign`` is the sparse implementation of the ``Design`` protocol
+(``core/engine.py``): column-pointer / row-index / value arrays padded to
+static shapes so every engine primitive jits once per matrix, plus cached
+per-column squared norms (the only design statistic the datafits need for
+their Lipschitz constants). Conversion accepts any scipy sparse matrix (or a
+(data, indices, indptr) triple) and canonicalizes to sorted-indices CSC.
+
+Static-shape strategy: the flat arrays are padded by one column window
+(``max_col_nnz`` entries, value 0.0, col id p-1, row 0) so that the
+per-column ``dynamic_slice`` windows of the working-set gather stay in
+bounds for every column, and window tails that spill into the next column
+are value-masked to exact zeros (see ``sparse/ops.py``).
+
+``ShardedCSCDesign`` is the mesh form: columns are split into
+``n_shards`` equal-width local CSC blocks, stacked on a leading shard axis
+that ``shard_map`` splits over the *model* mesh axis (each device holds only
+its own columns' nnz). Samples stay unsplit — the score pass is then local
+per shard and only the K densified working-set columns are psum-replicated,
+exactly like the dense mesh engine's gather.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.core.engine import Design
+from repro.launch.shardings import sparse_design_spec
+
+from .ops import (csc_column_windows, csc_gather_columns, csc_incremental_xb,
+                  csc_matvec, csc_score, csc_score_ell, csc_score_pallas)
+
+__all__ = ["CSCDesign", "ShardedCSCDesign"]
+
+
+def _ell_from_flat(data, indices, indptr, m):
+    """Host-side ELL layout [p, m] (rows / vals, padding 0) for the Pallas
+    score kernel. Vectorized: CSC order is already (col-major, rank-minor)."""
+    p = len(indptr) - 1
+    lens = np.diff(indptr)
+    nnz = int(indptr[-1])
+    cols = np.repeat(np.arange(p), lens)
+    ranks = np.arange(nnz) - np.repeat(indptr[:-1], lens)
+    rows = np.zeros((p, m), dtype=indices.dtype)
+    vals = np.zeros((p, m), dtype=data.dtype)
+    rows[cols, ranks] = indices[:nnz]
+    vals[cols, ranks] = data[:nnz]
+    return rows, vals
+
+
+@dataclass(frozen=True)
+class CSCDesign(Design):
+    """Device-resident CSC design (one feature block; see module docstring).
+
+    Children (traced): data/indices/col_ids [nnz + m] (window-padded),
+    indptr [p + 1], col_sq [p], optional ELL rows/vals [p, m].
+    Static aux: (n, p) shape and the max column nnz m.
+    """
+    data: jax.Array
+    indices: jax.Array
+    col_ids: jax.Array
+    indptr: jax.Array
+    col_sq: jax.Array
+    ell_rows: Optional[jax.Array]
+    ell_vals: Optional[jax.Array]
+    shape: Tuple[int, int]
+    max_col_nnz: int
+
+    KIND = "csc"
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def from_scipy(cls, A, *, dtype=None, ell: bool = False) -> "CSCDesign":
+        """Build from any scipy sparse matrix (CSC/CSR/COO; converted and
+        canonicalized). ``ell=True`` additionally materializes the [p, m]
+        ELL layout consumed by the Pallas score backend."""
+        A = A.tocsc()
+        A.sort_indices()
+        A.sum_duplicates()
+        if dtype is None:
+            dtype = np.float64 if jax.config.jax_enable_x64 else np.float32
+        return cls.from_arrays(A.data.astype(dtype), A.indices, A.indptr,
+                               A.shape, ell=ell)
+
+    @classmethod
+    def from_arrays(cls, data, indices, indptr, shape, *, ell: bool = False,
+                    max_col_nnz: Optional[int] = None,
+                    pad_nnz_pow2: bool = False):
+        """Build from canonical (sorted, deduplicated) flat CSC arrays.
+
+        `max_col_nnz` overrides the derived window size (must be >= the true
+        max) and `pad_nnz_pow2` rounds the padded flat-array length up to a
+        power of two: column subsets pass both so their static shapes — and
+        therefore the compiled fused steps — stay shared across subsets."""
+        data = np.asarray(data)
+        indices = np.asarray(indices, np.int32)
+        indptr = np.asarray(indptr, np.int64)
+        n, p = shape
+        col_nnz = np.diff(indptr)
+        m = max(1, int(col_nnz.max())) if p else 1
+        if max_col_nnz is not None:
+            if max_col_nnz < m:
+                raise ValueError(
+                    f"max_col_nnz={max_col_nnz} is below the true max "
+                    f"column nnz {m}: gather windows would silently "
+                    f"truncate columns")
+            m = max_col_nnz
+        col_ids = np.repeat(np.arange(p, dtype=np.int32), col_nnz)
+        col_sq = np.zeros(p, data.dtype)
+        np.add.at(col_sq, col_ids, data * data)
+        # padding: one gather window, optionally rounded up to a pow2 total
+        # length (value 0.0, last column id, row 0 — exact no-ops downstream)
+        pad = m
+        if pad_nnz_pow2:
+            total = len(data) + m
+            pad = (1 << max(0, total - 1).bit_length()) - len(data)
+        pad_d = np.zeros(pad, data.dtype)
+        pad_i = np.zeros(pad, np.int32)
+        pad_c = np.full(pad, max(p - 1, 0), np.int32)
+        er = ev = None
+        if ell:
+            er, ev = _ell_from_flat(data, indices, indptr, m)
+            er, ev = jnp.asarray(er), jnp.asarray(ev)
+        return cls(jnp.asarray(np.concatenate([data, pad_d])),
+                   jnp.asarray(np.concatenate([indices, pad_i])),
+                   jnp.asarray(np.concatenate([col_ids, pad_c])),
+                   jnp.asarray(indptr), jnp.asarray(col_sq), er, ev,
+                   (int(n), int(p)), m)
+
+    # -------------------------------------------------------------- protocol
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        # host-side only (indptr must be concrete): true nnz regardless of
+        # how much static-shape padding the flat arrays carry
+        return int(self.indptr[-1])
+
+    @property
+    def has_ell(self) -> bool:
+        return self.ell_rows is not None
+
+    def local_block(self):
+        return self
+
+    def score(self, raw, backend: str = "jax"):
+        """X.T @ raw for this feature block (O(nnz), no dense X)."""
+        if raw.ndim != 1:
+            raise NotImplementedError(
+                "sparse designs do not support multitask (2-D) datafits; "
+                "densify or fit per task")
+        if backend == "pallas":
+            return csc_score_pallas(self.ell_rows, self.ell_vals, raw)
+        return csc_score(self.data, self.indices, self.col_ids, raw,
+                         self.width)
+
+    def gather_ws(self, mine, loc_idx, model_axis):
+        """Densify the working-set columns into [n, K] (model-replicated);
+        returns the (rows, vals) windows for the incremental Xb update."""
+        rows, vals = csc_column_windows(self.data, self.indices, self.indptr,
+                                        loc_idx, self.max_col_nnz)
+        if mine is not None:
+            vals = jnp.where(mine[:, None], vals, jnp.zeros((), vals.dtype))
+        X_ws = csc_gather_columns(rows, vals, self.n_rows, model_axis)
+        return X_ws, (rows, vals)
+
+    def update_xb(self, Xb, X_ws, ws_aux, delta, model_axis):
+        rows, vals = ws_aux
+        return csc_incremental_xb(Xb, rows, vals, delta, model_axis)
+
+    def matvec(self, beta):
+        if beta.ndim != 1:
+            raise NotImplementedError(
+                "sparse designs do not support multitask (2-D) "
+                "coefficients; densify or fit per task")
+        return csc_matvec(self.data, self.indices, self.col_ids, beta,
+                          self.n_rows)
+
+    def lipschitz(self, datafit):
+        return datafit.lipschitz_cols(self.col_sq, self.n_rows)
+
+    def col_sq_norms(self):
+        return self.col_sq
+
+    def score_ell_reference(self, raw):
+        """Pure-jax reference of the Pallas score path (validation)."""
+        return csc_score_ell(self.ell_rows, self.ell_vals, raw)
+
+    # --------------------------------------------------------------- sharding
+    def in_spec(self, data_axis, model_axis):
+        raise NotImplementedError(
+            "CSCDesign must be converted to ShardedCSCDesign before entering "
+            "shard_map (solve() does this via place())")
+
+    def place(self, mesh, data_axis, model_axis):
+        return ShardedCSCDesign.from_csc(self, mesh, data_axis, model_axis)
+
+    def take_columns(self, idx) -> "CSCDesign":
+        """Host-side column subset (screening): `idx` is an int array; -1
+        entries become explicit zero columns (static-shape padding).
+        Vectorized (one fancy-index per flat array) — _screened_path calls
+        this once per lambda at up to paper-scale p."""
+        idx = np.asarray(idx)
+        data = np.asarray(self.data)
+        indices = np.asarray(self.indices)
+        indptr = np.asarray(self.indptr)
+        sel = np.where(idx < 0, 0, idx)
+        lens = np.where(idx < 0, 0, indptr[sel + 1] - indptr[sel])
+        starts = np.repeat(indptr[sel], lens)
+        within = np.arange(int(lens.sum())) \
+            - np.repeat(np.cumsum(lens) - lens, lens)
+        gidx = starts + within
+        new_d = data[gidx]
+        new_i = indices[gidx]
+        new_ptr = np.concatenate([[0], np.cumsum(lens)])
+        # keep the parent's static window so every pow2-padded subset of
+        # this design shares one compiled fused step per width
+        return CSCDesign.from_arrays(new_d, new_i, new_ptr,
+                                     (self.n_rows, len(idx)),
+                                     ell=self.has_ell,
+                                     max_col_nnz=self.max_col_nnz,
+                                     pad_nnz_pow2=True)
+
+    def todense(self):
+        """Dense [n, p] copy — tests/debug only, never on the solve path."""
+        rows = np.asarray(self.indices)[:self.nnz]
+        cols = np.asarray(self.col_ids)[:self.nnz]
+        vals = np.asarray(self.data)[:self.nnz]
+        out = np.zeros(self.shape, vals.dtype)
+        out[rows, cols] = vals
+        return out
+
+
+def _flatten_csc(d: CSCDesign):
+    children = (d.data, d.indices, d.col_ids, d.indptr, d.col_sq,
+                d.ell_rows, d.ell_vals)
+    return children, (d.shape, d.max_col_nnz)
+
+
+def _unflatten_csc(aux, children):
+    return CSCDesign(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(CSCDesign, _flatten_csc, _unflatten_csc)
+
+
+@dataclass(frozen=True)
+class ShardedCSCDesign(Design):
+    """Feature-sharded CSC design: ``n_shards`` equal-width local CSC blocks
+    stacked on a leading axis that shard_map splits over the model mesh axis
+    (spec ``P(model)`` on every leaf). ``local_block()`` runs inside
+    shard_map and strips the (per-device size-1) shard axis, yielding the
+    local ``CSCDesign`` the engine primitives consume. Samples are unsplit:
+    sparse solves require a (1, k) mesh (``SolveEngine.validate``)."""
+    data: jax.Array          # [S, L]
+    indices: jax.Array       # [S, L]
+    col_ids: jax.Array       # [S, L] local (within-shard) column ids
+    indptr: jax.Array        # [S, width + 1]
+    col_sq: jax.Array        # [S, width]
+    shape: Tuple[int, int]   # GLOBAL (n, p)
+    max_col_nnz: int
+    n_shards: int
+
+    KIND = "csc"
+
+    @classmethod
+    def from_csc(cls, d: CSCDesign, mesh, data_axis, model_axis):
+        S = mesh.shape[model_axis]
+        n, p = d.shape
+        if p % S:
+            raise ValueError(
+                f"sparse design width {p} must divide the {model_axis} mesh "
+                f"axis ({S}) evenly")
+        w = p // S
+        data = np.asarray(d.data)[:d.nnz]
+        indices = np.asarray(d.indices)[:d.nnz]
+        indptr = np.asarray(d.indptr)
+        m = d.max_col_nnz
+        shard_nnz = (indptr[w * np.arange(1, S + 1)]
+                     - indptr[w * np.arange(S)])
+        L = max(int(shard_nnz.max()), 1) + m
+        sd = np.zeros((S, L), data.dtype)
+        si = np.zeros((S, L), np.int32)
+        sc = np.full((S, L), max(w - 1, 0), np.int32)
+        sp = np.zeros((S, w + 1), np.int64)
+        sq = np.zeros((S, w), data.dtype)
+        for s in range(S):
+            lo, hi = indptr[s * w], indptr[(s + 1) * w]
+            k = hi - lo
+            sd[s, :k] = data[lo:hi]
+            si[s, :k] = indices[lo:hi]
+            local_ptr = indptr[s * w:(s + 1) * w + 1] - lo
+            sp[s] = local_ptr
+            col_nnz = np.diff(local_ptr)
+            sc[s, :k] = np.repeat(np.arange(w, dtype=np.int32), col_nnz)
+            np.add.at(sq[s], sc[s, :k], sd[s, :k] ** 2)
+        spec = sparse_design_spec(model_axis)
+        sharding = NamedSharding(mesh, spec)
+        put = lambda x: jax.device_put(jnp.asarray(x), sharding)
+        return cls(put(sd), put(si), put(sc), put(sp), put(sq),
+                   (n, p), m, S)
+
+    # -------------------------------------------------------------- protocol
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.shape[1]
+
+    def local_block(self) -> CSCDesign:
+        """Strip the (size-1 per device) shard axis inside shard_map."""
+        w = self.shape[1] // self.n_shards
+        return CSCDesign(self.data[0], self.indices[0], self.col_ids[0],
+                         self.indptr[0], self.col_sq[0], None, None,
+                         (self.n_rows, w),
+                         self.max_col_nnz)
+
+    def matvec(self, beta):
+        """X @ beta, eagerly, from the stacked shard blocks (global ids =
+        shard * width + local)."""
+        w = self.shape[1] // self.n_shards
+        gids = (self.col_ids
+                + (jnp.arange(self.n_shards, dtype=self.col_ids.dtype)
+                   * w)[:, None])
+        contrib = (self.data * beta[gids]).reshape(-1)
+        return jnp.zeros((self.n_rows,), self.dtype).at[
+            self.indices.reshape(-1)].add(contrib)
+
+    def lipschitz(self, datafit):
+        return datafit.lipschitz_cols(self.col_sq.reshape(-1), self.n_rows)
+
+    @property
+    def has_ell(self) -> bool:
+        return False
+
+    def in_spec(self, data_axis, model_axis):
+        return sparse_design_spec(model_axis)
+
+    def place(self, mesh, data_axis, model_axis):
+        if self.n_shards != mesh.shape[model_axis]:
+            raise ValueError(
+                f"design sharded {self.n_shards}-way does not match the "
+                f"{model_axis} mesh axis ({mesh.shape[model_axis]})")
+        return self
+
+
+def _flatten_scsc(d: ShardedCSCDesign):
+    children = (d.data, d.indices, d.col_ids, d.indptr, d.col_sq)
+    return children, (d.shape, d.max_col_nnz, d.n_shards)
+
+
+def _unflatten_scsc(aux, children):
+    return ShardedCSCDesign(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(ShardedCSCDesign, _flatten_scsc,
+                                   _unflatten_scsc)

@@ -1,0 +1,160 @@
+"""Jit-compatible kernels for the three hot CSC primitives (DESIGN.md §7).
+
+All shapes are static: the flat CSC arrays are padded by one column window
+(``max_col_nnz`` entries) so per-column ``dynamic_slice`` windows never run
+out of bounds, and padding entries carry value 0.0 so every scatter/segment
+reduction they join is exact.
+
+  csc_score          full score pass X.T @ raw as a segment-sum over the
+                     nnz entries (O(nnz), never materializes dense X)
+  csc_gather_columns densify K selected columns into the engine's [K, n]
+                     working-set buffer (vmapped window slice + scatter-add)
+  csc_incremental_xb Xb += X_ws @ delta via scatter-add on the gathered
+                     (rows, vals) windows (O(K * max_col_nnz))
+  csc_matvec         full X @ beta (initial residual of a warm start)
+
+``csc_score_pallas`` is the Pallas epoch-backend variant of the score pass
+(grid over feature tiles, VMEM-resident raw gradient, MXU-free gather-
+multiply-accumulate over the per-column ELL windows). Like the CD epoch
+kernels in ``kernels/cd_epoch.py`` it is validated against the pure-jax
+reference (``tests/test_sparse.py``) and selected through the engine's
+``backend="pallas"`` switch; it consumes the optional ELL layout
+(``CSCDesign.from_scipy(..., ell=True)``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _psum_if(x, axis):
+    """psum over `axis`, statically elided for unsplit (None) axes."""
+    return x if axis is None else jax.lax.psum(x, axis)
+
+
+# ---------------------------------------------------------------- score pass
+def csc_score(data, indices, col_ids, raw, p: int):
+    """X.T @ raw over flat CSC arrays: [nnz_pad] -> [p].
+
+    Padding entries have data == 0.0 and col_ids == p - 1, so they add an
+    exact 0.0 to the last segment.
+    """
+    contrib = data * raw[indices]
+    return jax.ops.segment_sum(contrib, col_ids, num_segments=p,
+                               indices_are_sorted=True)
+
+
+def csc_score_ell(rows, vals, raw):
+    """Reference for the Pallas kernel: score pass over the ELL layout
+    (rows/vals [p, m], padding vals 0.0). Returns [p]."""
+    return jnp.sum(vals * raw[rows], axis=1)
+
+
+# ------------------------------------------------------- working-set windows
+def csc_column_windows(data, indices, indptr, cols, max_col_nnz: int):
+    """Per-column nnz windows of `cols` (local column indices, in range).
+
+    Returns (rows [K, m], vals [K, m]) with vals masked to 0.0 beyond each
+    column's nnz — window tails that spill into the next column's entries
+    contribute exact zeros to every downstream scatter.
+    """
+    m = max_col_nnz
+    starts = indptr[cols]
+    nnz = indptr[cols + 1] - starts
+
+    def window(s):
+        r = jax.lax.dynamic_slice(indices, (s,), (m,))
+        v = jax.lax.dynamic_slice(data, (s,), (m,))
+        return r, v
+
+    rows, vals = jax.vmap(window)(starts)
+    mask = jnp.arange(m)[None, :] < nnz[:, None]
+    return rows, jnp.where(mask, vals, jnp.zeros((), vals.dtype))
+
+
+def csc_gather_columns(rows, vals, n_rows: int, model_axis=None):
+    """Densify gathered column windows into the engine's [n, K] ws buffer.
+
+    Under feature sharding `vals` are already masked to the owned columns;
+    the psum over `model_axis` replicates the buffer like the dense
+    `gather_ws_cols`.
+    """
+    K = rows.shape[0]
+    Xt = jnp.zeros((K, n_rows), vals.dtype)
+    Xt = Xt.at[jnp.arange(K)[:, None], rows].add(vals)
+    return _psum_if(Xt, model_axis).T
+
+
+def csc_incremental_xb(Xb, rows, vals, delta, model_axis=None):
+    """Xb += X_ws @ delta via scatter-add on the gathered windows (exact:
+    padding vals are 0.0)."""
+    inc = jnp.zeros_like(Xb)
+    inc = inc.at[rows.reshape(-1)].add((vals * delta[:, None]).reshape(-1))
+    return Xb + _psum_if(inc, model_axis)
+
+
+# ----------------------------------------------------------------- full ops
+def csc_matvec(data, indices, col_ids, beta, n_rows: int):
+    """X @ beta over flat CSC arrays -> [n]. Padding cols point at p - 1
+    with data 0.0, so the gathered beta contributes exact zeros."""
+    contrib = data * beta[col_ids]
+    return jnp.zeros((n_rows,), data.dtype).at[indices].add(contrib)
+
+
+# ------------------------------------------------------------- pallas kernel
+def _score_kernel(m_tiles, rows_blk, vals_blk, raw_blk, out_blk, acc):
+    """One (BP, BM) ELL tile: gather raw at the tile's row indices, multiply
+    by the stored values, accumulate into the per-feature VMEM scratch."""
+    mt = pl.program_id(1)
+
+    @pl.when(mt == 0)
+    def _init():
+        acc[:, :] = jnp.zeros_like(acc)
+
+    raw = raw_blk[:, 0]
+    acc[:, :] += jnp.sum(vals_blk[:, :] * raw[rows_blk[:, :]], axis=1,
+                         keepdims=True)
+
+    @pl.when(mt == m_tiles - 1)
+    def _emit():
+        out_blk[:, :] = acc[:, :]
+
+
+def csc_score_pallas(rows, vals, raw, *, bp=256, bm=512, interpret=None):
+    """Pallas score pass over the ELL layout: rows/vals [p, m], raw [n].
+
+    Grid = (p_tiles, m_tiles); the raw gradient stays VMEM-resident across
+    the whole grid and each feature tile accumulates its gathered
+    contributions in a VMEM scratch, emitted on the last m-step. Returns the
+    [p] gradient (validated against ``csc_score_ell``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    p, m = rows.shape
+    n = raw.shape[0]
+    bp = min(bp, p)
+    bm = min(bm, m)
+    # pad to the tile grid (padding rows point at row 0 with value 0.0)
+    pp, pm = -p % bp, -m % bm
+    if pp or pm:
+        rows = jnp.pad(rows, ((0, pp), (0, pm)))
+        vals = jnp.pad(vals, ((0, pp), (0, pm)))
+    m_tiles = (m + pm) // bm
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        functools.partial(_score_kernel, m_tiles),
+        grid=((p + pp) // bp, m_tiles),
+        in_specs=[
+            pl.BlockSpec((bp, bm), lambda j, i: (j, i)),   # row indices
+            pl.BlockSpec((bp, bm), lambda j, i: (j, i)),   # values
+            pl.BlockSpec((n, 1), lambda j, i: (0, 0)),     # raw gradient
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p + pp, 1), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, 1), vals.dtype)],
+        interpret=interpret,
+    )(rows, vals, raw[:, None])
+    return out[:p, 0]

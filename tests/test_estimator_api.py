@@ -1,0 +1,171 @@
+"""Estimator API satellites: predict/predict_proba/score round-trips,
+fit_intercept via X/y centering (quadratic datafits), and sharing a warm
+`engine=` across successive fits (compile count asserted — the behavior the
+GeneralizedLinearEstimator docstring advertises)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (L1, Lasso, ElasticNet, LinearSVC, MCPRegression,
+                        Quadratic, SparseLogisticRegression, lambda_max,
+                        make_engine)
+from repro.core.estimators import GeneralizedLinearEstimator
+from repro.data.synth import make_classification, make_correlated_design
+
+
+@pytest.fixture(scope="module")
+def reg_data():
+    return make_correlated_design(n=200, p=400, n_nonzero=15, seed=0)
+
+
+@pytest.fixture(scope="module")
+def clf_data():
+    return make_classification(n=250, p=300, n_nonzero=15, seed=1)
+
+
+# ----------------------------------------------------------- fit round trips
+def test_lasso_predict_score_roundtrip(reg_data):
+    X, y, _ = reg_data
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 20
+    est = Lasso(alpha=lam, tol=1e-8).fit(X, y)
+    pred = est.predict(X)
+    assert pred.shape == y.shape
+    np.testing.assert_allclose(pred, X @ est.coef_, atol=1e-12)
+    r2 = est.score(X, y)
+    assert 0.8 < r2 <= 1.0
+    # score is consistent with predict
+    resid = y - pred
+    r2_manual = 1.0 - resid @ resid / ((y - y.mean()) @ (y - y.mean()))
+    np.testing.assert_allclose(r2, r2_manual, atol=1e-12)
+
+
+def test_logreg_predict_proba_roundtrip(clf_data):
+    X, y, _ = clf_data
+    from repro.core import Logistic
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y), Logistic()) / 20
+    est = SparseLogisticRegression(alpha=lam, tol=1e-7).fit(X, y)
+    proba = est.predict_proba(X)
+    assert proba.shape == (len(y), 2)
+    np.testing.assert_allclose(proba.sum(axis=-1), 1.0, atol=1e-12)
+    assert np.all((proba >= 0) & (proba <= 1))
+    # predict is the argmax of predict_proba (signed labels)
+    pred = est.predict(X)
+    np.testing.assert_array_equal(pred > 0, proba[:, 1] > 0.5)
+    assert est.score(X, y) == np.mean(pred == y)
+
+
+def test_svc_predict_score_roundtrip(clf_data):
+    X, y, _ = clf_data
+    Xs, ys = X[:120, :40], y[:120]
+    est = LinearSVC(C=1.0, tol=1e-6).fit(Xs, ys)
+    pred = est.predict(Xs)
+    assert set(np.unique(pred)) <= {-1.0, 1.0}
+    np.testing.assert_allclose(pred, np.sign(Xs @ est.coef_ + 1e-30))
+    assert est.score(Xs, ys) == np.mean(pred == ys)
+    # dual/primal consistency (Eq. 35)
+    Z = ys[:, None] * Xs
+    np.testing.assert_allclose(est.coef_, Z.T @ est.dual_coef_, atol=1e-10)
+
+
+# ------------------------------------------------------------- warm engines
+def test_shared_engine_across_fits_no_recompile(reg_data):
+    """A warm engine= shared across successive fits reuses the compiled
+    fused steps: the second fit on same-shaped data adds no retraces."""
+    X, y, _ = reg_data
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 20
+    eng = make_engine(L1(lam), Quadratic())
+    est1 = Lasso(alpha=lam, tol=1e-8, engine=eng).fit(X, y)
+    assert est1.converged_
+    compiles_after_first = dict(eng.retraces)
+    assert compiles_after_first, "engine recorded no compilations"
+    # different lambda, same shapes: lambda is a pytree leaf, zero retraces
+    est2 = Lasso(alpha=lam * 2, tol=1e-8, engine=eng).fit(X, y)
+    assert est2.converged_
+    assert eng.retraces == compiles_after_first
+    assert all(v == 1 for v in eng.retraces.values())
+    # the engine really drove both fits
+    assert eng.n_dispatches >= len(est1.result_.kkt_history) + \
+        len(est2.result_.kkt_history)
+
+
+def test_shared_engine_isolated_from_default_cache(reg_data):
+    X, y, _ = reg_data
+    lam = lambda_max(jnp.asarray(X), jnp.asarray(y)) / 20
+    eng = make_engine(L1(lam), Quadratic())
+    before = eng.n_dispatches
+    Lasso(alpha=lam, tol=1e-8).fit(X, y)        # default (shared-cache) path
+    assert eng.n_dispatches == before           # fresh engine untouched
+
+
+# ------------------------------------------------------------ fit_intercept
+def test_fit_intercept_quadratic(reg_data):
+    """Satellite: fit_intercept=True centers X/y, exposes the un-centered
+    intercept_, and predict adds it back."""
+    X, y, _ = reg_data
+    X = X + 2.5                                  # shift columns off zero
+    y = y + 11.0
+    lam = 0.05
+    est = Lasso(alpha=lam, tol=1e-10, fit_intercept=True).fit(X, y)
+    # reference: manual centering
+    Xc = X - X.mean(axis=0)
+    yc = y - y.mean()
+    ref = Lasso(alpha=lam, tol=1e-10).fit(Xc, yc)
+    np.testing.assert_allclose(est.coef_, ref.coef_, atol=1e-10)
+    np.testing.assert_allclose(est.intercept_,
+                               y.mean() - X.mean(axis=0) @ est.coef_,
+                               atol=1e-12)
+    np.testing.assert_allclose(est.predict(X), X @ est.coef_
+                               + est.intercept_, atol=1e-12)
+    # centering removes the offset the un-intercepted model must absorb
+    assert est.score(X, y) > Lasso(alpha=lam, tol=1e-10).fit(X, y).score(X, y)
+
+
+def test_fit_intercept_other_quadratic_estimators(reg_data):
+    X, y, _ = reg_data
+    for cls in (ElasticNet, MCPRegression):
+        est = cls(alpha=0.1, tol=1e-8, fit_intercept=True).fit(X + 1.0,
+                                                               y + 3.0)
+        assert est.converged_
+        assert np.isfinite(est.intercept_)
+
+
+def test_fit_intercept_rejected_for_non_quadratic():
+    from repro.core import Logistic
+    with pytest.raises(NotImplementedError, match="quadratic"):
+        SparseLogisticRegression(alpha=0.1, fit_intercept=True)
+    with pytest.raises(NotImplementedError, match="quadratic"):
+        LinearSVC(C=1.0, fit_intercept=True)
+    with pytest.raises(NotImplementedError, match="quadratic"):
+        GeneralizedLinearEstimator(datafit=Logistic(), penalty=L1(0.1),
+                                   fit_intercept=True)
+    # the quadratic default accepts it
+    GeneralizedLinearEstimator(fit_intercept=True)
+
+
+def test_fit_intercept_accepts_dense_design_input(reg_data):
+    """DenseDesign has a dense representation: centering must work on it
+    exactly as on the raw array (only CSC inputs reject fit_intercept)."""
+    from repro.core import DenseDesign
+    X, y, _ = reg_data
+    ref = Lasso(alpha=0.05, tol=1e-10, fit_intercept=True).fit(X + 1.0,
+                                                               y + 3.0)
+    via_design = Lasso(alpha=0.05, tol=1e-10, fit_intercept=True).fit(
+        DenseDesign(jnp.asarray(X + 1.0)), y + 3.0)
+    np.testing.assert_allclose(via_design.coef_, ref.coef_, atol=1e-12)
+    np.testing.assert_allclose(via_design.intercept_, ref.intercept_,
+                               atol=1e-12)
+
+
+def test_fit_intercept_rejected_for_sparse_input(reg_data):
+    import scipy.sparse as sp
+    X, y, _ = reg_data
+    Xs = sp.csc_matrix(X)
+    with pytest.raises(NotImplementedError, match="densify"):
+        Lasso(alpha=0.1, fit_intercept=True).fit(Xs, y)
+
+
+def test_default_intercept_is_zero(reg_data):
+    X, y, _ = reg_data
+    est = Lasso(alpha=0.1, tol=1e-8).fit(X, y)
+    assert est.intercept_ == 0.0
+    np.testing.assert_allclose(est.predict(X), X @ est.coef_, atol=1e-12)

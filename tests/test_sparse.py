@@ -1,0 +1,375 @@
+"""Sparse design-matrix subsystem tests (DESIGN.md §7).
+
+Covers the PR-3 acceptance criteria:
+  * CSC kernel primitives (score / gather / incremental Xb / matvec) agree
+    with their dense counterparts exactly.
+  * The Pallas score-pass variant agrees with the pure-jax reference (same
+    validation contract as kernels/cd_epoch.py).
+  * `Lasso().fit(X_sparse, y)` on a scipy CSC matrix matches the dense
+    solve to 1e-8 (downsampled news20-like design) and keeps the engine's
+    1-dispatch + 1-host-sync-per-outer-iteration budget.
+  * Sparse regularization paths (sequential + chunked) match dense, with
+    one compile per working-set bucket.
+  * The gap-safe screening pre-filter (`reg_path(screen="gap_safe")`)
+    leaves solutions unchanged while shrinking the per-lambda problem.
+  * Mesh mode: a 1x1 mesh solve is bit-identical to the unsharded sparse
+    solve; feature-sharded (1, k) meshes match; sample-sharded meshes and
+    the other unsupported combos raise at solve() entry.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (MCP, L1, Logistic, MultitaskQuadratic, Quadratic,
+                        BlockL1, DenseDesign, Lasso, as_design, lambda_max,
+                        make_engine, reg_path, solve)
+from repro.core.screening import gap_safe_mask_design, lasso_gap_safe_mask
+from repro.data.synth import make_sparse_design
+from repro.launch.mesh import make_solver_mesh, make_test_mesh
+from repro.sparse import (CSCDesign, csc_score_ell, csc_score_pallas)
+
+requires8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def sparse_data():
+    X, y, bt = make_sparse_design(n=400, p=1200, density=5e-3, n_nonzero=30,
+                                  seed=0)
+    return X, jnp.asarray(y), bt
+
+
+@pytest.fixture(scope="module")
+def sparse_logreg_data():
+    rng = np.random.default_rng(3)
+    n, p = 300, 600
+    X = sp.random(n, p, density=0.02, random_state=2, format="csc",
+                  data_rvs=rng.standard_normal)
+    bt = np.zeros(p)
+    bt[rng.choice(p, 20, replace=False)] = rng.standard_normal(20)
+    probs = 1.0 / (1.0 + np.exp(-(X @ bt)))
+    y = np.where(rng.uniform(size=n) < probs, 1.0, -1.0)
+    return X, jnp.asarray(y)
+
+
+# ---------------------------------------------------------------- primitives
+def test_csc_design_roundtrip(sparse_data):
+    X, _, _ = sparse_data
+    d = CSCDesign.from_scipy(X)
+    assert d.shape == X.shape
+    assert d.nnz == X.nnz
+    np.testing.assert_array_equal(d.todense(), X.toarray())
+    # accepts CSR/COO too
+    np.testing.assert_array_equal(CSCDesign.from_scipy(X.tocsr()).todense(),
+                                  X.toarray())
+
+
+def test_csc_primitives_match_dense(sparse_data):
+    X, y, _ = sparse_data
+    d = CSCDesign.from_scipy(X)
+    Xd = jnp.asarray(X.toarray())
+    rng = np.random.default_rng(0)
+    raw = jnp.asarray(rng.standard_normal(X.shape[0]))
+    beta = jnp.asarray(rng.standard_normal(X.shape[1]))
+
+    # score pass: X.T @ raw without dense X
+    np.testing.assert_allclose(np.asarray(d.score(raw)),
+                               np.asarray(Xd.T @ raw), atol=1e-12)
+    # matvec: X @ beta
+    np.testing.assert_allclose(np.asarray(d.matvec(beta)),
+                               np.asarray(Xd @ beta), atol=1e-12)
+    # Lipschitz from cached column norms
+    np.testing.assert_allclose(np.asarray(d.lipschitz(Quadratic())),
+                               np.asarray(Quadratic().lipschitz(Xd)),
+                               atol=1e-12)
+    # working-set gather densifies exactly the selected columns
+    ws = jnp.asarray(rng.choice(X.shape[1], 32, replace=False))
+    X_ws, aux = d.gather_ws(None, ws, None)
+    np.testing.assert_allclose(np.asarray(X_ws), np.asarray(Xd[:, ws]),
+                               atol=1e-12)
+    # incremental Xb via scatter-add == dense X_ws @ delta
+    delta = jnp.asarray(rng.standard_normal(32))
+    Xb = jnp.asarray(rng.standard_normal(X.shape[0]))
+    got = d.update_xb(Xb, X_ws, aux, delta, None)
+    want = Xb + Xd[:, ws] @ delta
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-12)
+
+
+def test_pallas_score_matches_jax_reference(sparse_data):
+    """The Pallas score variant is validated against the pure-jax reference,
+    like the CD-epoch kernels."""
+    X, _, _ = sparse_data
+    d = CSCDesign.from_scipy(X, ell=True)
+    rng = np.random.default_rng(1)
+    raw = jnp.asarray(rng.standard_normal(X.shape[0]))
+    ref = d.score(raw)                                   # flat segment-sum
+    ell = csc_score_ell(d.ell_rows, d.ell_vals, raw)     # jax ELL reference
+    pal = csc_score_pallas(d.ell_rows, d.ell_vals, raw)  # pallas kernel
+    np.testing.assert_allclose(np.asarray(ell), np.asarray(ref), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=1e-10)
+
+
+def test_as_design_dispatch(sparse_data):
+    X, _, _ = sparse_data
+    assert isinstance(as_design(X), CSCDesign)
+    d = as_design(X)
+    assert as_design(d) is d
+    assert isinstance(as_design(np.zeros((3, 4))), DenseDesign)
+
+
+# ------------------------------------------------------------- solve parity
+def test_sparse_lasso_estimator_matches_dense_1e8(sparse_data):
+    """Acceptance: Lasso().fit on scipy CSC == dense fit to 1e-8, CSC-native
+    (the design enters the engine as a CSCDesign, never densified)."""
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 10
+    est_s = Lasso(alpha=lam, tol=1e-10).fit(X, np.asarray(y))
+    est_d = Lasso(alpha=lam, tol=1e-10).fit(X.toarray(), np.asarray(y))
+    assert est_s.converged_
+    assert isinstance(as_design(X), CSCDesign)
+    np.testing.assert_allclose(est_s.coef_, est_d.coef_, atol=1e-8)
+    np.testing.assert_allclose(est_s.predict(X), est_d.predict(X.toarray()),
+                               atol=1e-8)
+
+
+def test_sparse_dispatch_and_sync_budget(sparse_data):
+    """Acceptance: the sparse fused step keeps 1 dispatch + 1 host sync per
+    outer iteration, compiled once per working-set bucket."""
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 10
+    eng = make_engine(L1(lam), Quadratic())
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-9, engine=eng)
+    assert res.converged
+    iters = len(res.kkt_history)
+    assert eng.n_dispatches == iters
+    assert res.n_host_syncs == iters
+    for key, count in eng.retraces.items():
+        assert key[0] == "csc" and count == 1, eng.retraces
+
+
+def test_sparse_mcp_matches_dense(sparse_data):
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 5
+    rs = solve(X, y, Quadratic(), MCP(lam, 3.0), tol=1e-10)
+    rd = solve(jnp.asarray(X.toarray()), y, Quadratic(), MCP(lam, 3.0),
+               tol=1e-10)
+    assert rs.converged
+    np.testing.assert_allclose(np.asarray(rs.beta), np.asarray(rd.beta),
+                               atol=1e-8)
+
+
+def test_sparse_logistic_xb_path_matches_dense(sparse_logreg_data):
+    """General (non-Gram) datafits run the sparse score + gather with the Xb
+    inner solver."""
+    X, y = sparse_logreg_data
+    lam = lambda_max(X, y, Logistic()) / 3
+    rs = solve(X, y, Logistic(), L1(lam), tol=1e-8)
+    rd = solve(jnp.asarray(X.toarray()), y, Logistic(), L1(lam), tol=1e-8)
+    assert rs.converged
+    np.testing.assert_allclose(np.asarray(rs.beta), np.asarray(rd.beta),
+                               atol=1e-7)
+
+
+def test_sparse_pallas_backend_agrees(sparse_data):
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 10
+    d = CSCDesign.from_scipy(X, ell=True)
+    rk = solve(d, y, Quadratic(), L1(lam), tol=1e-9, use_kernels=True)
+    rj = solve(X, y, Quadratic(), L1(lam), tol=1e-9)
+    assert rk.converged
+    np.testing.assert_allclose(np.asarray(rk.beta), np.asarray(rj.beta),
+                               atol=1e-8)
+
+
+def test_sparse_entry_errors(sparse_data, multitask_data):
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 10
+    # pallas backend needs the ELL layout
+    with pytest.raises(NotImplementedError, match="ell=True"):
+        solve(X, y, Quadratic(), L1(lam), use_kernels=True)
+    # multitask datafits are dense-only
+    _, Y, _ = multitask_data
+    Xs = sp.random(Y.shape[0], 64, density=0.05, random_state=0,
+                   format="csc")
+    with pytest.raises(NotImplementedError, match="multitask"):
+        solve(Xs, Y, MultitaskQuadratic(), BlockL1(0.1))
+    # ... including through lambda_max's score pass (2-D raw gradient)
+    with pytest.raises(NotImplementedError, match="multitask"):
+        lambda_max(Xs, Y, MultitaskQuadratic())
+
+
+# ---------------------------------------------------------------- reg paths
+def test_sparse_path_matches_dense(sparse_data):
+    X, y, _ = sparse_data
+    seq = reg_path(X, y, L1(1.0), n_lambdas=6, lambda_min_ratio=0.05,
+                   tol=1e-9, engine=make_engine(L1(1.0), Quadratic()))
+    dense = reg_path(jnp.asarray(X.toarray()), y, L1(1.0), n_lambdas=6,
+                     lambda_min_ratio=0.05, tol=1e-9,
+                     engine=make_engine(L1(1.0), Quadratic()))
+    assert np.all(seq.kkts <= 1e-9)
+    np.testing.assert_allclose(seq.betas, dense.betas, atol=1e-7)
+    chk = reg_path(X, y, L1(1.0), n_lambdas=6, lambda_min_ratio=0.05,
+                   tol=1e-9, engine=make_engine(L1(1.0), Quadratic()),
+                   vmap_chunk=3)
+    np.testing.assert_allclose(chk.betas, dense.betas, atol=1e-6)
+
+
+# ---------------------------------------------------------------- screening
+def test_gap_safe_mask_design_matches_reference(sparse_data):
+    """The design-generic mask equals the legacy dense-array rule on dense
+    input (same ops); the CSC mask may differ only on features whose test
+    statistic sits at the decision boundary (segment-sum order shifts the
+    last ulp), never on clearly-screened or clearly-surviving ones."""
+    X, y, _ = sparse_data
+    Xd = jnp.asarray(X.toarray())
+    n = X.shape[0]
+    lam = lambda_max(X, y) / 5
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-6)
+    ref = np.asarray(lasso_gap_safe_mask(Xd, y, res.beta, lam))
+    got_dense = np.asarray(gap_safe_mask_design(DenseDesign(Xd), y,
+                                                res.beta, lam))
+    got_sparse = np.asarray(gap_safe_mask_design(as_design(X), y,
+                                                 res.beta, lam))
+    np.testing.assert_array_equal(got_dense, ref)
+    # numpy replica of the sphere-test statistic: |x_j^T theta| + r ||x_j||
+    Xn, yn, b = np.asarray(Xd), np.asarray(y), np.asarray(res.beta)
+    resid = yn - Xn @ b
+    theta = resid / (lam * n)
+    theta *= min(1.0, 1.0 / max(np.max(np.abs(Xn.T @ theta)), 1e-30))
+    primal = resid @ resid / (2 * n) + lam * np.abs(b).sum()
+    dual = lam * (yn @ theta) - 0.5 * lam ** 2 * n * (theta @ theta)
+    r = np.sqrt(2.0 * max(primal - dual, 0.0) / n) / lam
+    stat = np.abs(Xn.T @ theta) + r * np.sqrt((Xn * Xn).sum(0))
+    disagree = got_sparse != ref
+    assert np.all(np.abs(stat[disagree] - 1.0) < 1e-8), \
+        f"{disagree.sum()} non-boundary disagreements"
+
+
+@pytest.mark.parametrize("sparse_input", [False, True],
+                         ids=["dense", "sparse"])
+def test_screened_path_matches_unscreened(sparse_data, sparse_input):
+    """Satellite: screen='gap_safe' in reg_path is safe — identical
+    solutions, nonzero screened fractions recorded per lambda."""
+    X, y, _ = sparse_data
+    Xin = X if sparse_input else jnp.asarray(X.toarray())
+    ref = reg_path(Xin, y, L1(1.0), n_lambdas=6, lambda_min_ratio=0.05,
+                   tol=1e-9, engine=make_engine(L1(1.0), Quadratic()))
+    scr = reg_path(Xin, y, L1(1.0), n_lambdas=6, lambda_min_ratio=0.05,
+                   tol=1e-9, engine=make_engine(L1(1.0), Quadratic()),
+                   screen="gap_safe")
+    np.testing.assert_allclose(scr.betas, ref.betas, atol=1e-7)
+    assert scr.screened_fracs is not None
+    assert scr.screened_fracs.shape == (6,)
+    assert np.max(scr.screened_fracs) > 0.1      # the rule actually fires
+    assert np.all(scr.kkts <= 1e-9)
+
+
+def test_screening_rejections(sparse_data):
+    X, y, _ = sparse_data
+    with pytest.raises(ValueError, match="gap_safe"):
+        reg_path(X, y, L1(1.0), n_lambdas=2, screen="unknown_rule")
+    with pytest.raises(ValueError, match="L1"):
+        reg_path(X, y, MCP(1.0, 3.0), n_lambdas=2, screen="gap_safe")
+    with pytest.raises(ValueError, match="sequential"):
+        reg_path(X, y, L1(1.0), n_lambdas=4, vmap_chunk=2,
+                 screen="gap_safe")
+
+
+# --------------------------------------------------------------------- mesh
+def test_mesh_1x1_sparse_bit_identical(sparse_data):
+    """The 1x1 mesh lowers the sparse fused step to the exact unsharded
+    program (same static elision contract as the dense engine)."""
+    X, y, _ = sparse_data
+    lam = lambda_max(X, y) / 10
+    mesh = make_solver_mesh((1, 1))
+    ref = solve(X, y, Quadratic(), L1(lam), tol=1e-9)
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-9, mesh=mesh)
+    assert res.converged == ref.converged
+    assert np.array_equal(np.asarray(res.beta), np.asarray(ref.beta))
+    assert res.n_outer == ref.n_outer
+
+
+@requires8
+def test_mesh_1x8_sparse_matches_unsharded(sparse_data):
+    """Feature-sharded sparse solve: local CSC shards, replicated ws gather
+    via psum; matches the unsharded solve."""
+    X, y, _ = sparse_data
+    Xp = X[:, :1024].tocsc()                  # width must divide the mesh
+    lam = lambda_max(Xp, y) / 10
+    mesh = make_test_mesh((1, 8))
+    eng = make_engine(L1(lam), Quadratic(), mesh=mesh)
+    res = solve(Xp, y, Quadratic(), L1(lam), tol=1e-10, engine=eng)
+    ref = solve(Xp, y, Quadratic(), L1(lam), tol=1e-10)
+    assert res.converged
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-10)
+    iters = len(res.kkt_history)
+    assert eng.n_dispatches == iters == res.n_host_syncs
+
+
+@requires8
+def test_mesh_data_split_sparse_raises_at_entry(sparse_data):
+    X, y, _ = sparse_data
+    with pytest.raises(NotImplementedError, match="sample-sharded"):
+        solve(X[:, :1024].tocsc(), y, Quadratic(), L1(0.1),
+              mesh=make_test_mesh((2, 4)))
+
+
+_SUBPROCESS_TEST = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import L1, Quadratic, lambda_max, solve
+    from repro.data.synth import make_sparse_design
+    from repro.launch.mesh import make_test_mesh
+
+    X, y, _ = make_sparse_design(n=200, p=512, density=0.01, n_nonzero=16,
+                                 seed=5)
+    y = jnp.asarray(y)
+    lam = lambda_max(X, y) / 10
+    mesh = make_test_mesh((1, 2))
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-10, mesh=mesh)
+    ref = solve(X, y, Quadratic(), L1(lam), tol=1e-10)
+    assert res.converged, res.kkt
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-10)
+    print("OK sparse 1x2 mesh")
+""")
+
+
+def test_sparse_mesh_subprocess_smoke():
+    """Real feature-sharded run on 2 forced host devices (device count must
+    be fixed before jax initializes, hence the subprocess)."""
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_TEST],
+                       capture_output=True, text=True, timeout=600,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK sparse 1x2 mesh" in r.stdout
+
+
+# -------------------------------------------------------------- synth gen
+def test_make_sparse_design_stats():
+    X, y, bt = make_sparse_design(n=2000, p=5000, density=1e-3,
+                                  n_nonzero=50, seed=0)
+    assert sp.issparse(X) and X.format == "csc"
+    assert X.shape == (2000, 5000)
+    nnz_per_row = X.nnz / 2000
+    # target nnz/row = density * p = 5; dedup loses a little
+    assert 4.0 <= nnz_per_row <= 5.5
+    col_nnz = np.diff(X.indptr)
+    # power law: the densest column is much denser than the median
+    assert col_nnz.max() >= 5 * max(np.median(col_nnz), 1)
+    assert col_nnz.max() <= 0.02 * 2000 + 1       # max_col_frac clip
+    assert np.isfinite(y).all() and bt.shape == (5000,)
