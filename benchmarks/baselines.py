@@ -24,7 +24,7 @@ import numpy as np
 from repro.core.cd import cd_epoch_xb
 from repro.core.datafits import Quadratic
 from repro.core.penalties import L1, soft_threshold
-from repro.core.solver import _apply_T
+from repro.core.engine import _apply_T
 
 
 def _obj(X, y, beta, datafit, penalty, offset=None):

@@ -4,7 +4,9 @@ counts, recorded to BENCH_engine.json so the perf trajectory of later PRs
 refactor. ``sparse_fig2`` measures the CSC-native sparse path (DESIGN.md §7)
 on a news20-like power-law design — at the "small" scale this is the
 paper-regime n=50k x p=200k at density 1e-3, solved without ever
-materializing the dense X.
+materializing the dense X. ``fig4_meeg`` measures the block-coordinate
+(multitask) engine path on the Figure 4 M/EEG-analog workload
+(DESIGN.md §8) with the same 1-dispatch/1-sync-per-outer contract.
 
 ``PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out PATH]``
 
@@ -39,7 +41,8 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import MCP, L1, Quadratic, lambda_max, make_engine, solve  # noqa: E402
+from repro.core import (MCP, L1, BlockL1, MultitaskQuadratic, Quadratic,  # noqa: E402
+                        lambda_max, make_engine, solve)
 from repro.data.synth import make_correlated_design, make_sparse_design  # noqa: E402
 
 # measured once on the seed (pre-engine) solver, same container, same configs:
@@ -77,6 +80,20 @@ CONFIGS = {
     },
 }
 
+# Figure 4's M/EEG analog (multitask regression, block penalty) through the
+# block-coordinate fused engine (DESIGN.md §8): leadfield-like column-coherent
+# design, T time samples, L2,1 penalty. The engine contract (1 dispatch +
+# 1 host sync per outer iteration) is enforced for blocks exactly like for
+# scalar coordinates.
+MT_CONFIGS = {
+    "small": {
+        "fig4_meeg": dict(n=60, p_per_hemi=150, T=20),
+    },
+    "smoke": {
+        "fig4_meeg": dict(n=30, p_per_hemi=60, T=8),
+    },
+}
+
 # the paper's flagship regime (sparse news20-like design, DESIGN.md §7):
 # solved CSC-native — the [n, p] dense X is never materialized. The "small"
 # scale is the acceptance-criteria shape; smoke keeps CI fast.
@@ -89,6 +106,32 @@ SPARSE_CONFIGS = {
         "sparse_fig2": dict(n=1000, p=4000, density=5e-3, n_nonzero=40),
     },
 }
+
+
+def _timed_solve(X, y, datafit, penalty, mesh, tol):
+    """The shared measurement protocol: compile warm-up, best-of-3 timed
+    solves, per-outer dispatch/sync telemetry. One protocol for every
+    benchmark (scalar, sparse, multitask) so budget semantics can't fork."""
+    kw = dict(tol=tol, max_outer=100)
+    engine = make_engine(penalty, datafit, mesh=mesh)
+    solve(X, y, datafit, penalty, engine=engine, **kw)       # compile
+    wall = float("inf")
+    for _ in range(3):                                       # best of 3
+        engine.n_dispatches = 0
+        t0 = time.perf_counter()
+        res = solve(X, y, datafit, penalty, engine=engine, **kw)
+        wall = min(wall, time.perf_counter() - t0)
+    iters = max(len(res.kkt_history), 1)
+    return {
+        "wall_s": wall,
+        "n_outer": res.n_outer,
+        "n_epochs": res.n_epochs,
+        "kkt": res.kkt,
+        "converged": res.converged,
+        "jit_dispatches_per_outer": engine.n_dispatches / iters,
+        "host_syncs_per_outer": res.n_host_syncs / iters,
+        "retraces": {str(k): v for k, v in engine.retraces.items()},
+    }
 
 
 def _measure(bench, cfg, mesh=None, sparse=False):
@@ -107,30 +150,24 @@ def _measure(bench, cfg, mesh=None, sparse=False):
     lam = lambda_max(X, y) / 10
     penalty = L1(lam) if bench.startswith(("fig2", "sparse")) \
         else MCP(lam, 3.0)
-    kw = dict(tol=1e-10, max_outer=100)
-
-    engine = make_engine(penalty, Quadratic(), mesh=mesh)
-    solve(X, y, Quadratic(), penalty, engine=engine, **kw)   # compile
-    wall = float("inf")
-    for _ in range(3):                                       # best of 3
-        engine.n_dispatches = 0
-        t0 = time.perf_counter()
-        res = solve(X, y, Quadratic(), penalty, engine=engine, **kw)
-        wall = min(wall, time.perf_counter() - t0)
-    iters = max(len(res.kkt_history), 1)
-    out = {
-        "wall_s": wall,
-        "n_outer": res.n_outer,
-        "n_epochs": res.n_epochs,
-        "kkt": res.kkt,
-        "converged": res.converged,
-        "jit_dispatches_per_outer": engine.n_dispatches / iters,
-        "host_syncs_per_outer": res.n_host_syncs / iters,
-        "retraces": {str(k): v for k, v in engine.retraces.items()},
-    }
+    out = _timed_solve(X, y, Quadratic(), penalty, mesh, tol=1e-10)
     if sparse:
         out["nnz"] = nnz
         out["shape"] = [cfg["n"], cfg["p"]]
+    return out
+
+
+def _measure_fig4(cfg):
+    """Multitask (block-coordinate) engine measurement on the Figure 4
+    M/EEG-analog workload (leadfield-like design, L2,1 penalty)."""
+    from repro.data.synth import make_leadfield
+    X, Y, _, _ = make_leadfield(seed=0, **cfg)
+    X, Y = jnp.asarray(X), jnp.asarray(Y)
+    datafit = MultitaskQuadratic()
+    penalty = BlockL1(lambda_max(X, Y, datafit) / 10)
+    out = _timed_solve(X, Y, datafit, penalty, None, tol=1e-9)
+    out["n_tasks"] = cfg["T"]
+    out["shape"] = [cfg["n"], 2 * cfg["p_per_hemi"]]
     return out
 
 
@@ -227,6 +264,18 @@ def main(argv=None):
         if not after["converged"]:
             raise SystemExit(f"{bench} did not converge — engine regression")
         if after["host_syncs_per_outer"] > 1.0 + 1e-9:
+            raise SystemExit(f"{bench} exceeded 1 host sync per outer iter")
+
+    for bench, cfg in MT_CONFIGS[scale].items():
+        report["engine_after"][bench] = _measure_fig4(cfg)
+        m = report["engine_after"][bench]
+        print(f"{bench} [multitask n={m['shape'][0]} p={m['shape'][1]} "
+              f"T={m['n_tasks']}]: {m['wall_s']:.3f}s, "
+              f"{m['jit_dispatches_per_outer']:.2f} dispatches/outer, "
+              f"{m['host_syncs_per_outer']:.2f} syncs/outer")
+        if not m["converged"]:
+            raise SystemExit(f"{bench} did not converge — engine regression")
+        if m["host_syncs_per_outer"] > 1.0 + 1e-9:
             raise SystemExit(f"{bench} exceeded 1 host sync per outer iter")
 
     if not args.no_sparse:

@@ -29,30 +29,9 @@ SIZES = {"smoke": dict(n=30, p_per_hemi=60, T=8),
          "paper": dict(n=120, p_per_hemi=500, T=50)}
 
 
-def make_leadfield(n, p_per_hemi, T, *, coherence=0.98, snr=1.5, seed=0):
-    """Two column-coherent "hemisphere" blocks; one true source per block,
-    the second 4x weaker (the paper's hard case: the l_{2,1} amplitude bias
-    must choose between missing the weak source and over-selecting)."""
-    rng = np.random.default_rng(seed)
-    cols = []
-    true_rows = []
-    for h in range(2):
-        base = rng.standard_normal((n, 1))
-        block = (coherence * base
-                 + np.sqrt(1 - coherence ** 2)
-                 * rng.standard_normal((n, p_per_hemi)))
-        cols.append(block)
-        true_rows.append(h * p_per_hemi + rng.integers(0, p_per_hemi))
-    X = np.concatenate(cols, axis=1)
-    X /= np.linalg.norm(X, axis=0) / np.sqrt(n)
-    W = np.zeros((2 * p_per_hemi, T))
-    t = np.linspace(0, 1, T)
-    W[true_rows[0]] = np.sin(2 * np.pi * 5 * t)
-    W[true_rows[1]] = np.cos(2 * np.pi * 3 * t) * 0.25
-    signal = X @ W
-    noise = rng.standard_normal((n, T))
-    noise *= np.linalg.norm(signal) / (snr * np.linalg.norm(noise))
-    return X, signal + noise, W, true_rows
+# one generator shared with bench_engine's fig4_meeg entry and
+# examples/multitask_meg.py, so all three describe the same workload
+from repro.data.synth import make_leadfield  # noqa: F401  (re-export)
 
 
 def run(scale="small", seed=0):

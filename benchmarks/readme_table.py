@@ -1,0 +1,106 @@
+"""Generate README.md's benchmark table from the committed BENCH_engine.json.
+
+Run: PYTHONPATH=src python -m benchmarks.readme_table [--bench BENCH_engine.json]
+
+Prints the markdown table between README's
+``<!-- bench-table:begin -->`` / ``<!-- bench-table:end -->`` markers;
+``--write`` splices it into README.md in place, so the table is always a
+mechanical function of the measured baseline (the CI docs job keeps the
+links honest, this script keeps the numbers honest).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# workload key -> (display name, fallback problem text for entries that
+# predate the recorded shape fields). When the measurement records
+# shape/n_tasks/nnz, the problem column is derived from those fields so the
+# table can't drift from BENCH_engine.json.
+ROWS = [
+    ("fig2_lasso", "Lasso (fig. 2)", "dense n=300 p=1500"),
+    ("fig5_mcp", "MCP (fig. 5)", "dense n=400 p=2000"),
+    ("fig4_meeg", "Multitask L2,1 (fig. 4)", None),
+    ("sparse_fig2", "Sparse Lasso (news20-like)", None),
+]
+
+
+def _fmt_count(x):
+    if x >= 1_000_000:
+        return f"{x / 1e6:.0f}M"
+    return f"{x / 1000:.0f}k" if x >= 10_000 else str(x)
+
+
+def _problem_text(m, fallback):
+    """Problem column from the measurement's own recorded fields."""
+    if "shape" not in m:
+        return fallback or "—"
+    n, p = m["shape"]
+    desc = f"n={_fmt_count(n)} p={_fmt_count(p)}"
+    if "n_tasks" in m:
+        return f"dense {desc} T={m['n_tasks']}"
+    if "nnz" in m:
+        return f"CSC {desc} nnz~{_fmt_count(m['nnz'])}"
+    return f"dense {desc}"
+
+BEGIN, END = "<!-- bench-table:begin -->", "<!-- bench-table:end -->"
+
+
+def build_table(bench_path):
+    with open(bench_path) as f:
+        b = json.load(f)
+    after = b.get("engine_after", {})
+    mesh = b.get("mesh_2x4", {})
+    lines = [
+        "| workload | problem | wall (s) | dispatches/outer | syncs/outer |"
+        " 2x4-mesh wall (s) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key, name, fallback in ROWS:
+        m = after.get(key)
+        if m is None:
+            continue
+        prob = _problem_text(m, fallback)
+        mm = mesh.get(key)
+        mesh_wall = f"{mm['wall_s']:.3f}" if mm else "—"
+        lines.append(
+            f"| {name} | {prob} | {m['wall_s']:.3f} | "
+            f"{m['jit_dispatches_per_outer']:.1f} | "
+            f"{m['host_syncs_per_outer']:.1f} | {mesh_wall} |")
+    seed = b.get("seed_before", {}).get("fig2_lasso", {})
+    if seed:
+        lines.append(
+            f"| _seed host loop (pre-engine), fig. 2_ | same | "
+            f"{seed['wall_s']:.3f} | "
+            f"{seed['jit_dispatches_per_outer']:.1f} | "
+            f"{seed['host_syncs_per_outer']:.1f} | — |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=os.path.join(ROOT, "BENCH_engine.json"))
+    ap.add_argument("--write", action="store_true",
+                    help="splice the table into README.md between the "
+                         "bench-table markers")
+    args = ap.parse_args(argv)
+    table = build_table(args.bench)
+    if not args.write:
+        print(table)
+        return
+    readme = os.path.join(ROOT, "README.md")
+    text = open(readme).read()
+    pattern = re.compile(re.escape(BEGIN) + r".*?" + re.escape(END),
+                         re.DOTALL)
+    assert pattern.search(text), "README.md lacks the bench-table markers"
+    text = pattern.sub(BEGIN + "\n" + table + "\n" + END, text)
+    open(readme, "w").write(text)
+    print(f"updated {readme}")
+
+
+if __name__ == "__main__":
+    main()

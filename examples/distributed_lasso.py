@@ -10,9 +10,12 @@ multi-device path (the same code lowers on the 256-chip production mesh —
 see src/repro/launch/dryrun_solver.py).
 
 Run: PYTHONPATH=src python examples/distributed_lasso.py
+Smoke (CI): EXAMPLES_SMOKE=1 PYTHONPATH=src python examples/distributed_lasso.py
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+SMOKE = bool(os.environ.get("EXAMPLES_SMOKE"))
 
 import time                        # noqa: E402
 import jax                         # noqa: E402
@@ -33,7 +36,8 @@ def main():
     print(f"devices: {len(jax.devices())}, mesh: "
           f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    X, y, beta_true = make_correlated_design(n=1024, p=4096, n_nonzero=64,
+    n, p, nnz = (256, 1024, 16) if SMOKE else (1024, 4096, 64)
+    X, y, beta_true = make_correlated_design(n=n, p=p, n_nonzero=nnz,
                                              rho=0.5, snr=5.0, seed=0)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     lmax = lambda_max(Xj, yj)
@@ -53,8 +57,24 @@ def main():
               f"dispatches/outer={eng.n_dispatches / iters:.2f} "
               f"syncs/outer={res.n_host_syncs / iters:.2f}")
 
+    # multitask block coordinates on the same mesh (DESIGN.md §8): W is
+    # [p, T], the task axis replicated, block top-k over the model axis
+    from repro.core import BlockL1, MultitaskQuadratic
+    from repro.data.synth import make_multitask
+    Xm, Ym, _ = make_multitask(n=min(n, 512), p=p // 4, n_tasks=8,
+                               n_nonzero=max(nnz // 4, 4), seed=0)
+    Xm, Ym = jnp.asarray(Xm), jnp.asarray(Ym)
+    lmt = lambda_max(Xm, Ym, MultitaskQuadratic()) / 10
+    t0 = time.perf_counter()
+    res = solve(Xm, Ym, MultitaskQuadratic(), BlockL1(lmt), tol=1e-8,
+                mesh=mesh)
+    act = int(jnp.sum(jnp.linalg.norm(res.beta, axis=1) != 0))
+    print(f"[mesh multitask] {time.perf_counter() - t0:.2f}s "
+          f"kkt={res.kkt:.2e} active_rows={act} T={Ym.shape[1]}")
+
     # Xb-form datafit on the same mesh (the seed loop raised here)
-    Xc, yc, _ = make_classification(n=1024, p=2048, n_nonzero=32, seed=0)
+    nc, pc = (256, 512) if SMOKE else (1024, 2048)
+    Xc, yc, _ = make_classification(n=nc, p=pc, n_nonzero=32, seed=0)
     Xc, yc = jnp.asarray(Xc), jnp.asarray(yc)
     laml = lambda_max(Xc, yc, Logistic()) / 5
     t0 = time.perf_counter()
@@ -67,6 +87,7 @@ def main():
     res = lasso(Xs, ys, lmax / 10, tol=1e-8, mesh=mesh)
     err = float(jnp.max(jnp.abs(res.beta - ref.beta)))
     print(f"max |beta_mesh - beta_ref| = {err:.2e}")
+    print("done distributed_lasso")
 
 
 if __name__ == "__main__":

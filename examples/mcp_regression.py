@@ -4,7 +4,10 @@ a critical point, compared against the iterative-reweighted-L1 baseline, with
 the full regularization path and support-recovery report (Figure 1).
 
 Run: PYTHONPATH=src python examples/mcp_regression.py
+Smoke (CI): EXAMPLES_SMOKE=1 PYTHONPATH=src python examples/mcp_regression.py
 """
+import os
+
 import jax
 jax.config.update("jax_enable_x64", True)
 
@@ -16,10 +19,13 @@ from repro.core import MCP, lambda_max, mcp_regression      # noqa: E402
 from repro.core.path import reg_path, support_metrics       # noqa: E402
 from repro.data.synth import make_correlated_design         # noqa: E402
 
+SMOKE = bool(os.environ.get("EXAMPLES_SMOKE"))
+
 
 def main():
+    n, p, nnz = (200, 800, 20) if SMOKE else (1000, 5000, 100)
     X, y, beta_true = make_correlated_design(
-        n=1000, p=5000, n_nonzero=100, rho=0.5, snr=5.0, seed=0,
+        n=n, p=p, n_nonzero=nnz, rho=0.5, snr=5.0, seed=0,
         normalize=True)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     lmax = lambda_max(Xj, yj)
@@ -28,7 +34,7 @@ def main():
     t0 = time.perf_counter()
     res = mcp_regression(Xj, yj, lmax / 10, gamma=3.0, tol=1e-9)
     dt = time.perf_counter() - t0
-    print(f"[mcp n=1000 p=5000] solved in {dt:.2f}s: kkt={res.kkt:.2e} "
+    print(f"[mcp n={n} p={p}] solved in {dt:.2f}s: kkt={res.kkt:.2e} "
           f"nnz={int(jnp.sum(res.beta != 0))} epochs={res.n_epochs} "
           f"outer={res.n_outer} ws_max={max(res.ws_history or [0])}")
 
@@ -49,16 +55,18 @@ def main():
           f"(skglm obj={df_obj(res.beta):.6f})")
 
     # ---- full path + Figure 1 metrics ----------------------------------
+    n_lam = 8 if SMOKE else 20
     t0 = time.perf_counter()
-    path = reg_path(Xj, yj, MCP(1.0, 3.0), n_lambdas=20,
+    path = reg_path(Xj, yj, MCP(1.0, 3.0), n_lambdas=n_lam,
                     lambda_min_ratio=0.02, tol=1e-7,
                     metric_fn=lambda lam, b: support_metrics(b, beta_true))
     dt_path = time.perf_counter() - t0
     best = max(path.metrics, key=lambda m: m["f1"])
     exact = sum(m["exact_support"] for m in path.metrics)
-    print(f"[path 20 lambdas] {dt_path:.2f}s best_f1={best['f1']:.3f} "
+    print(f"[path {n_lam} lambdas] {dt_path:.2f}s best_f1={best['f1']:.3f} "
           f"exact_support_at={exact} lambdas "
           f"total_epochs={int(path.n_epochs.sum())}")
+    print("done mcp_regression")
 
 
 if __name__ == "__main__":

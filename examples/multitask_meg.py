@@ -1,0 +1,70 @@
+"""Multitask regression with block penalties — the paper's Figure 4 M/EEG
+source-localization experiment on the block-coordinate fused engine
+(DESIGN.md §8).
+
+Two "hemisphere" blocks of highly correlated leadfield-like columns hide one
+true neural source each (the second 4x weaker). The convex l_{2,1}
+(MultiTaskLasso) must trade missing the weak source against over-selecting;
+the block MCP (MultiTaskMCP) localizes exactly one source per hemisphere.
+The whole sweep runs through the same fused one-dispatch-per-outer engine as
+the scalar solvers — dense here, and identically with ``mesh=`` sharding or
+scipy-sparse designs.
+
+Run: PYTHONPATH=src python examples/multitask_meg.py
+Smoke (CI): EXAMPLES_SMOKE=1 PYTHONPATH=src python examples/multitask_meg.py
+"""
+import os
+
+import jax
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np               # noqa: E402
+import jax.numpy as jnp          # noqa: E402
+
+from repro.core import (MultiTaskLasso, MultiTaskMCP,          # noqa: E402
+                        MultitaskQuadratic, lambda_max)
+from repro.data.synth import make_leadfield                    # noqa: E402
+
+SMOKE = bool(os.environ.get("EXAMPLES_SMOKE"))
+
+
+def active_rows(coef):
+    return np.flatnonzero(np.linalg.norm(coef, axis=1))
+
+
+def main():
+    size = dict(n=30, p_per_hemi=60, T=8) if SMOKE \
+        else dict(n=120, p_per_hemi=500, T=50)
+    X, Y, _, true_rows = make_leadfield(**size)
+    Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+    p_hemi = size["p_per_hemi"]
+    lmax = lambda_max(Xj, Yj, MultitaskQuadratic())
+    print(f"n={X.shape[0]} p={X.shape[1]} T={size['T']} "
+          f"true sources: {sorted(true_rows)}")
+
+    for name, Est in (("l21 (MultiTaskLasso)", MultiTaskLasso),
+                      ("block MCP (MultiTaskMCP)", MultiTaskMCP)):
+        # pick the sparsest fit that still covers both hemispheres
+        best = None
+        for frac in np.geomspace(3, 40, 8):
+            est = Est(alpha=float(lmax / frac), tol=1e-8,
+                      max_outer=60).fit(Xj, Yj)
+            act = active_rows(est.coef_)
+            both = bool(np.any(act < p_hemi)) and bool(np.any(act >= p_hemi))
+            if both and (best is None or len(act) < best[1]):
+                best = (est, len(act), sorted(act.tolist()))
+        if best is None:
+            print(f"[{name}] no lambda in the sweep covered both "
+                  f"hemispheres")
+            continue
+        est, n_src, rows = best
+        exact = rows == sorted(true_rows)
+        print(f"[{name}] sources={n_src} exact_two_sources={exact} "
+              f"kkt={est.kkt_:.1e} outer={est.n_iter_} "
+              f"syncs/outer={est.result_.n_host_syncs / max(est.n_iter_, 1):.1f}")
+
+    print("done multitask_meg")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,21 +1,29 @@
 """Quickstart: fit sparse GLMs with the skglm solver (paper Algorithm 1).
 
 Run: PYTHONPATH=src python examples/quickstart.py
+Smoke (CI): EXAMPLES_SMOKE=1 PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import jax
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp          # noqa: E402
 import numpy as np               # noqa: E402
 
-from repro.core import Lasso, MCPRegression, lambda_max   # noqa: E402
+from repro.core import (Lasso, MCPRegression, MultiTaskLasso,  # noqa: E402
+                        MultitaskQuadratic, lambda_max)
 from repro.core.api import lasso_gap                       # noqa: E402
-from repro.data.synth import make_correlated_design        # noqa: E402
+from repro.data.synth import (make_correlated_design,      # noqa: E402
+                              make_multitask)
+
+SMOKE = bool(os.environ.get("EXAMPLES_SMOKE"))
 
 
 def main():
     # the paper §E.5 design: AR(0.6)-correlated features, sparse truth, SNR 5
-    X, y, beta_true = make_correlated_design(n=500, p=2000, n_nonzero=50,
+    n, p, nnz = (120, 400, 12) if SMOKE else (500, 2000, 50)
+    X, y, beta_true = make_correlated_design(n=n, p=p, n_nonzero=nnz,
                                              rho=0.6, snr=5.0, seed=0)
     lmax = lambda_max(jnp.asarray(X), jnp.asarray(y))
     print(f"n={X.shape[0]} p={X.shape[1]} lambda_max={lmax:.4f}")
@@ -41,18 +49,33 @@ def main():
                 SCAD(lmax / 5, 3.7), tol=1e-9)
     print(f"[scad]  nnz={int(jnp.sum(res.beta != 0))} kkt={res.kkt:.2e}")
 
+    # --- multitask (block penalties, DESIGN.md §8) -----------------------
+    # Y is [n, T]; the coefficients are [p, T] with whole zero rows — the
+    # same fused engine runs block coordinates (paper Fig. 4)
+    Xm, Ym, Wm = make_multitask(n=max(n // 2, 60), p=p // 2, n_tasks=5,
+                                n_nonzero=max(nnz // 2, 6), seed=0)
+    lmax_m = lambda_max(jnp.asarray(Xm), jnp.asarray(Ym),
+                        MultitaskQuadratic())
+    est4 = MultiTaskLasso(alpha=lmax_m / 8, tol=1e-8).fit(Xm, Ym)
+    active = int(np.sum(np.linalg.norm(est4.coef_, axis=1) != 0))
+    print(f"[multitask] T={Ym.shape[1]} active_rows={active} "
+          f"R2={est4.score(Xm, Ym):.3f}")
+
     # --- sparse designs (DESIGN.md §7): pass scipy CSC straight in -------
     # news20-like power-law sparsity; the solve stack runs CSC-native —
     # the dense [n, p] X is never materialized, only the working-set
     # columns are densified for the inner solve
     from repro.data.synth import make_sparse_design
-    Xs, ys, _ = make_sparse_design(n=5000, p=20000, density=1e-3,
+    ns, ps = (1000, 4000) if SMOKE else (5000, 20000)
+    Xs, ys, _ = make_sparse_design(n=ns, p=ps, density=1e-3,
                                    n_nonzero=50, seed=0)
     lmax_s = lambda_max(Xs, jnp.asarray(ys))
     est3 = Lasso(alpha=lmax_s / 10, tol=1e-8).fit(Xs, ys)
     print(f"[sparse lasso] n={Xs.shape[0]} p={Xs.shape[1]} "
           f"nnz(X)={Xs.nnz} nnz(beta)={np.sum(est3.coef_ != 0)} "
           f"R2={est3.score(Xs, ys):.3f}")
+
+    print("done quickstart")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Doctest-style smoke runner for every example (the CI `docs` job).
+
+Runs each example as a subprocess with ``EXAMPLES_SMOKE=1`` (examples that
+support it shrink their problem sizes) and asserts an expected output
+marker, so a broken example — import error, API drift, diverging solve —
+fails CI instead of rotting silently.
+
+Run: PYTHONPATH=src python examples/smoke_all.py [--only quickstart,...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+# script -> (extra argv, expected stdout marker)
+EXAMPLES = {
+    "quickstart.py": ([], "done quickstart"),
+    "mcp_regression.py": ([], "done mcp_regression"),
+    "multitask_meg.py": ([], "done multitask_meg"),
+    "distributed_lasso.py": ([], "done distributed_lasso"),
+    "serve_lm.py": ([], "second call:"),
+    "sparse_probe_lm.py": ([], "[mcp probe]"),
+    "train_lm.py": (["--steps", "4", "--batch", "2", "--seq", "64"],
+                    "trained 4 steps"),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated example names (no .py)")
+    args = ap.parse_args(argv)
+    names = ([f"{n}.py" for n in args.only.split(",")] if args.only
+             else list(EXAMPLES))
+
+    env = {**os.environ, "EXAMPLES_SMOKE": "1",
+           "PYTHONPATH": os.path.join(ROOT, "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    failures = []
+    for name in names:
+        extra, marker = EXAMPLES[name]
+        t0 = time.perf_counter()
+        try:
+            r = subprocess.run([sys.executable, os.path.join(HERE, name),
+                                *extra], capture_output=True, text=True,
+                               timeout=1200, env=env, cwd=ROOT)
+            rc, out, err = r.returncode, r.stdout, r.stderr
+        except subprocess.TimeoutExpired as e:
+            rc = "timeout"
+            out = (e.stdout or b"").decode(errors="replace") \
+                if isinstance(e.stdout, bytes) else (e.stdout or "")
+            err = (e.stderr or b"").decode(errors="replace") \
+                if isinstance(e.stderr, bytes) else (e.stderr or "")
+        dt = time.perf_counter() - t0
+        ok = rc == 0 and marker in out
+        print(f"{'PASS' if ok else 'FAIL'} {name} ({dt:.1f}s)")
+        if not ok:
+            failures.append(name)
+            print(f"  rc={rc}, expected marker {marker!r}")
+            tail = "\n".join((out + "\n" + err).splitlines()[-15:])
+            print("  " + tail.replace("\n", "\n  "))
+    if failures:
+        raise SystemExit(f"examples smoke failed: {failures}")
+    print(f"all {len(names)} examples passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -74,6 +74,7 @@ def _enet_gap(X, y, beta, lam, rho):
 
 
 def enet_gap(X, y, beta, lam, rho):
+    """Elastic-net duality gap + primal value at beta."""
     gap, primal = _enet_gap(X, y, beta, lam, rho)
     return float(gap), float(primal)
 
@@ -92,36 +93,44 @@ def _logreg_gap(X, y, beta, lam):
 
 
 def logreg_gap(X, y, beta, lam):
+    """L1-logistic duality gap + primal value at beta."""
     gap, primal = _logreg_gap(X, y, beta, lam)
     return float(gap), float(primal)
 
 
 # ---------------------------------------------------------------- estimators
 def lasso(X, y, lam, **kw):
+    """Lasso: quadratic datafit + L1 penalty. Returns a SolveResult."""
     return solve(X, y, Quadratic(), L1(lam), **kw)
 
 
 def elastic_net(X, y, lam, rho=0.5, **kw):
+    """Elastic net: quadratic datafit + L1L2(lam, rho)."""
     return solve(X, y, Quadratic(), L1L2(lam, rho), **kw)
 
 
 def mcp_regression(X, y, lam, gamma=3.0, **kw):
+    """MCP-penalized regression (non-convex, lower bias than L1; Fig. 1)."""
     return solve(X, y, Quadratic(), MCP(lam, gamma), **kw)
 
 
 def scad_regression(X, y, lam, gamma=3.7, **kw):
+    """SCAD-penalized regression (non-convex; gamma > 2)."""
     return solve(X, y, Quadratic(), SCAD(lam, gamma), **kw)
 
 
 def l05_regression(X, y, lam, **kw):
+    """l_{1/2}-penalized regression (fixed-point scores, Appendix C)."""
     return solve(X, y, Quadratic(), L05(lam), **kw)
 
 
 def l23_regression(X, y, lam, **kw):
+    """l_{2/3}-penalized regression (fixed-point scores, Appendix C)."""
     return solve(X, y, Quadratic(), L23(lam), **kw)
 
 
 def sparse_logreg(X, y, lam, **kw):
+    """L1-penalized logistic regression, y in {-1, +1}."""
     return solve(X, y, Logistic(), L1(lam), **kw)
 
 
@@ -134,8 +143,17 @@ def svc_dual(X, y, C=1.0, **kw):
 
 
 def multitask_lasso(X, Y, lam, **kw):
+    """Multitask Lasso: Frobenius datafit + row-block l_{2,1} penalty.
+
+    ``Y`` is ``[n, T]``; the solution is ``[p, T]`` with whole zero rows
+    (shared support across tasks — the M/EEG model, paper Fig. 4). Runs
+    through the block-coordinate fused engine on dense, sparse, and
+    mesh-sharded designs (DESIGN.md §8).
+    """
     return solve(X, Y, MultitaskQuadratic(), BlockL1(lam), **kw)
 
 
 def multitask_mcp(X, Y, lam, gamma=3.0, **kw):
+    """Multitask MCP: block non-convex penalty on the row norms — localizes
+    sources the convex l_{2,1} misses (paper Fig. 4)."""
     return solve(X, Y, MultitaskQuadratic(), BlockMCP(lam, gamma), **kw)

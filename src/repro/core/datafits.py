@@ -150,7 +150,14 @@ class QuadraticSVC:
 @_register
 @dataclass(frozen=True)
 class MultitaskQuadratic:
-    """F(XW) = ||Y - XW||_F^2 / (2 n); blocks = rows of W (paper Appendix D)."""
+    """F(XW) = ||Y - XW||_F^2 / (2 n); blocks = rows of W (paper Appendix D).
+
+    Y is [n, T] and the coefficients W are [p, T]: every engine stage treats
+    the rows W_j: as block coordinates (DESIGN.md §8) — pair with the block
+    penalties (BlockL1 / BlockMCP) for shared row support across tasks.
+    Runs on dense, CSC-sparse, and mesh-sharded designs; the Pallas backend
+    is scalar-only and rejects it at entry.
+    """
     HAS_GRAM = True
     SAMPLE_MEAN = True
 

@@ -35,6 +35,15 @@ gradient over the data axis, working-set selection is an exact distributed
 top-k over the model axis, and the K-sized inner subproblem runs replicated
 (Gram form) or with per-coordinate data-axis psums (Xb form). One jitted
 program per working-set bucket serves any mesh, including 1x1.
+
+Block coordinates (DESIGN.md §8): every stage is written over coordinate
+*blocks* — beta may be [p] (scalar coordinates) or [p, T] (multitask row
+blocks, e.g. MultitaskQuadratic + BlockL1/BlockMCP). Violation scores are
+per-row block norms, so selection/top-k/bucketing are unchanged; gathers
+and scatters move [K, T] blocks; the Gram inner solve is the K x K Gram
+against a [K, T] right-hand side; the task dimension is replicated on every
+mesh. The only scalar-only backend is Pallas (rejected at entry by
+``SolveEngine.validate``).
 """
 from __future__ import annotations
 
@@ -47,7 +56,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import shard_map
-from repro.launch.shardings import design_specs
+from repro.launch.shardings import design_specs, task_spec
 
 from .anderson import anderson_extrapolate
 from .cd import cd_epoch_gram, cd_epoch_xb
@@ -88,6 +97,8 @@ class Design:
 
     # traced (inside the fused step) --------------------------------------
     def local_block(self):
+        """This device's local feature block (strips any stacked shard
+        axis inside shard_map; identity for unsharded designs)."""
         raise NotImplementedError
 
     def score(self, raw, backend="jax"):
@@ -104,9 +115,11 @@ class Design:
 
     # eager (host level) ---------------------------------------------------
     def matvec(self, beta):
+        """X @ beta on the global design ([p] or multitask [p, T])."""
         raise NotImplementedError
 
     def lipschitz(self, datafit):
+        """Per-coordinate Lipschitz constants L_j of nabla_j f."""
         raise NotImplementedError
 
     def in_spec(self, data_axis, model_axis):
@@ -309,6 +322,7 @@ class SubproblemSolver:
 
     # -- state hooks -------------------------------------------------------
     def prepare(self, ctx, beta0):
+        """Initial auxiliary state for beta0 (q = G beta or Xb)."""
         raise NotImplementedError
 
     def refresh(self, ctx, beta):
@@ -316,12 +330,15 @@ class SubproblemSolver:
         raise NotImplementedError
 
     def epoch(self, ctx, beta, aux):
+        """One cyclic CD epoch over the working set."""
         raise NotImplementedError
 
     def objective(self, ctx, beta, aux):
+        """Restricted objective (Anderson acceptance test)."""
         raise NotImplementedError
 
     def gradient(self, ctx, beta, aux):
+        """Restricted smooth gradient (KKT stopping test)."""
         raise NotImplementedError
 
     # -- shared Anderson-CD block loop ------------------------------------
@@ -637,6 +654,10 @@ class SolveEngine:
                       tol, eps_frac, bucket):
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
+        # multitask: y/Xb are [n, T], beta is [p, T] — the task dimension is
+        # explicitly replicated; L/offset stay 1-D feature vectors
+        T = y.ndim - 1
+        yt, bt = task_spec(ys, T), task_spec(bs, T)
 
         def body(design, y, beta, Xb, L, offset, datafit, penalty, tol,
                  eps_frac):
@@ -645,8 +666,8 @@ class SolveEngine:
 
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(xs, ys, bs, ys, bs, bs, P(), P(), P(), P()),
-            out_specs=(bs, ys, P(), P(), P(), P(), P()),
+            in_specs=(xs, yt, bt, yt, bs, bs, P(), P(), P(), P()),
+            out_specs=(bt, yt, P(), P(), P(), P(), P()),
             check_vma=False)(design, y, beta, Xb, L, offset, datafit,
                              penalty, tol, eps_frac)
 
@@ -654,9 +675,12 @@ class SolveEngine:
                     tol, eps_frac, *, bucket):
         # executes once per (bucket, arg-structure) compilation: the counter
         # is the proof behind "one compile per ws bucket across a path"
-        # (sparse designs get their own key space so mixed dense/sparse use
-        # of a shared engine stays observable)
+        # (sparse designs and multitask solves get their own key spaces so
+        # mixed use of a shared engine stays observable — [p] and [p, T]
+        # traces are distinct compilations)
         key = bucket if design.KIND == "dense" else (design.KIND, bucket)
+        if beta.ndim == 2:
+            key = ("mt", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         if self.mesh is not None:
             return self._sharded_step(design, y, beta, Xb, L, offset,
@@ -671,6 +695,8 @@ class SolveEngine:
         if self.mesh is not None:
             xs = design.in_spec(self.data_axis, self.model_axis)
             _, ys, bs = self._specs()
+            T = y.ndim - 1
+            yt, bt = task_spec(ys, T), task_spec(bs, T)
 
             def body(design, y, beta, Xb, L, offset, datafit, penalty):
                 _, _, _, kkt, _, gcount, obj = self._score_pass(
@@ -680,7 +706,7 @@ class SolveEngine:
 
             return shard_map(
                 body, mesh=self.mesh,
-                in_specs=(xs, ys, bs, ys, bs, bs, P(), P()),
+                in_specs=(xs, yt, bt, yt, bs, bs, P(), P()),
                 out_specs=(P(), P(), P()),
                 check_vma=False)(design, y, beta, Xb, L, offset, datafit,
                                  penalty)
@@ -740,6 +766,8 @@ class SolveEngine:
         key = ("chunk", bucket, int(lams.shape[0])) \
             if design.KIND == "dense" \
             else ("chunk", design.KIND, bucket, int(lams.shape[0]))
+        if betas.ndim == 3:               # [C, p, T] multitask lanes
+            key = ("mt", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         p_glob = design.shape[1]
 
@@ -754,8 +782,13 @@ class SolveEngine:
 
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
-        lane_b = P(None, *bs)                    # [C, p] lanes x features
-        lane_x = P(None, *ys)                    # [C, n] lanes x samples
+        T = y.ndim - 1
+        # [C, p(, T)] lanes x features and [C, n(, T)] lanes x samples, the
+        # task dimension (multitask sweeps) explicitly replicated — on the
+        # shared y [n, T] too
+        yt = task_spec(ys, T)
+        lane_b = P(None, *task_spec(bs, T))
+        lane_x = P(None, *yt)
 
         def body(design, y, lams, betas, Xbs, L, offset, datafit, penalty,
                  tol, eps_frac, max_outer, growth):
@@ -769,7 +802,7 @@ class SolveEngine:
 
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(xs, ys, P(), lane_b, lane_x, bs, bs, P(), P(), P(),
+            in_specs=(xs, yt, P(), lane_b, lane_x, bs, bs, P(), P(), P(),
                       P(), P(), P()),
             out_specs=(lane_b, lane_x, P(), P(), P(), P(), P()),
             check_vma=False)(design, y, lams, betas, Xbs, L, offset, datafit,
@@ -785,6 +818,8 @@ class SolveEngine:
                            tol, eps_frac, bucket=bucket)
 
     def probe(self, design, y, beta, Xb, L, offset, datafit, penalty):
+        """One pre-loop launch returning (kkt, |gsupp|, obj) of the
+        initial iterate (sizes the first bucket under warm starts)."""
         return self._jprobe(design, y, beta, Xb, L, offset, datafit, penalty)
 
     def chunk(self, bucket, design, y, lams, betas, Xbs, L, offset, datafit,
@@ -801,12 +836,15 @@ class SolveEngine:
                             bucket=bucket)
 
     def validate(self, datafit, penalty, n_tasks, shape=None, design=None):
-        """Static feasibility checks, raised eagerly at solve() entry."""
+        """Static feasibility checks, raised eagerly at ``solve()`` entry.
+
+        Every combination the engine cannot run raises here — before any
+        trace — with the exact messages documented in DESIGN.md §8.4. The
+        supported matrix (datafit x penalty x dense/sparse/mesh/pallas) is
+        in README.md; since the block-coordinate generalization, multitask
+        datafits (2-D coefficients) run on every backend except Pallas.
+        """
         if design is not None and design.KIND == "csc":
-            if n_tasks:
-                raise NotImplementedError(
-                    "sparse designs do not support multitask datafits (2-D "
-                    "coefficients) yet; densify or fit per task")
             if self.mesh is not None and \
                     self.mesh.shape[self.data_axis] > 1:
                 raise NotImplementedError(
@@ -833,14 +871,6 @@ class SolveEngine:
                 raise NotImplementedError(
                     "mesh=...: the Pallas epoch kernels cannot run under "
                     "shard_map; use backend='jax' (use_kernels=False)")
-            if n_tasks:
-                raise NotImplementedError(
-                    "mesh=...: multitask datafits (2-D coefficients) are "
-                    "not supported on the sharded engine yet")
-            if type(penalty).__name__.startswith("Block"):
-                raise NotImplementedError(
-                    "mesh=...: block (row-group) penalties are not "
-                    "supported on the sharded engine yet")
             if any(getattr(leaf, "ndim", 0) > 0
                    for leaf in jax.tree_util.tree_leaves(penalty)):
                 raise NotImplementedError(
@@ -858,8 +888,10 @@ class SolveEngine:
             check_kernel_penalty(type(penalty))
             penalty_params(penalty)       # raises on per-coordinate params
             if n_tasks:
-                raise ValueError("backend='pallas' supports scalar "
-                                 "coordinates only (n_tasks=0)")
+                raise NotImplementedError(
+                    "backend='pallas' supports scalar coordinates only "
+                    "(n_tasks=0); use backend='jax' (use_kernels=False) "
+                    "for multitask solves")
             if not self.config.gram and \
                     type(datafit).__name__ not in KERNEL_DATAFIT_KINDS:
                 raise ValueError(

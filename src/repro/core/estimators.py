@@ -87,6 +87,10 @@ class GeneralizedLinearEstimator:
                 f"{type(self.datafit).__name__}; center the data beforehand")
 
     def fit(self, X, y):
+        """Run Algorithm 1 on (X, y); fitted state lands on ``coef_``,
+        ``intercept_``, ``kkt_``, ``converged_``, ``n_iter_``,
+        ``n_epochs_``, ``result_``. ``y`` may be ``[n]`` or ``[n, T]``
+        (multitask datafits; ``coef_`` is then ``[p, T]``)."""
         y = jnp.asarray(y)
         self.intercept_ = 0.0
         X_mean = y_mean = None
@@ -117,6 +121,8 @@ class GeneralizedLinearEstimator:
         return self
 
     def predict(self, X):
+        """Linear predictions ``X @ coef_ + intercept_`` (dense, scipy
+        sparse, or Design input)."""
         return _design_matmul(X, self.coef_) + self.intercept_
 
     def score(self, X, y):
@@ -129,30 +135,43 @@ class GeneralizedLinearEstimator:
 
 
 class Lasso(GeneralizedLinearEstimator):
+    """L1-penalized least squares: ``Quadratic() + L1(alpha)``."""
+
     def __init__(self, alpha=1.0, **kw):
         super().__init__(Quadratic(), L1(alpha), **kw)
         self.alpha = alpha
 
 
 class ElasticNet(GeneralizedLinearEstimator):
+    """Elastic net: ``Quadratic() + L1L2(alpha, l1_ratio)``."""
+
     def __init__(self, alpha=1.0, l1_ratio=0.5, **kw):
         super().__init__(Quadratic(), L1L2(alpha, l1_ratio), **kw)
         self.alpha, self.l1_ratio = alpha, l1_ratio
 
 
 class MCPRegression(GeneralizedLinearEstimator):
+    """MCP-penalized least squares (non-convex, lower bias than L1 —
+    paper Fig. 1): ``Quadratic() + MCP(alpha, gamma)``."""
+
     def __init__(self, alpha=1.0, gamma=3.0, **kw):
         super().__init__(Quadratic(), MCP(alpha, gamma), **kw)
         self.alpha, self.gamma = alpha, gamma
 
 
 class SCADRegression(GeneralizedLinearEstimator):
+    """SCAD-penalized least squares: ``Quadratic() + SCAD(alpha, gamma)``
+    (gamma > 2)."""
+
     def __init__(self, alpha=1.0, gamma=3.7, **kw):
         super().__init__(Quadratic(), SCAD(alpha, gamma), **kw)
         self.alpha, self.gamma = alpha, gamma
 
 
 class SparseLogisticRegression(GeneralizedLinearEstimator):
+    """L1-penalized logistic regression, labels in {-1, +1}:
+    ``Logistic() + L1(alpha)``."""
+
     def __init__(self, alpha=1.0, **kw):
         super().__init__(Logistic(), L1(alpha), **kw)
         self.alpha = alpha
@@ -207,12 +226,23 @@ class LinearSVC(GeneralizedLinearEstimator):
 
 
 class MultiTaskLasso(GeneralizedLinearEstimator):
+    """Multitask Lasso: ``MultitaskQuadratic() + BlockL1(alpha)``.
+
+    ``fit(X, Y)`` takes targets ``[n, T]`` and produces ``coef_ [p, T]``
+    with whole zero rows (shared support across tasks). Runs through the
+    block-coordinate fused engine — dense, scipy-sparse, or ``mesh=``
+    sharded (DESIGN.md §8)."""
+
     def __init__(self, alpha=1.0, **kw):
         super().__init__(MultitaskQuadratic(), BlockL1(alpha), **kw)
         self.alpha = alpha
 
 
 class MultiTaskMCP(GeneralizedLinearEstimator):
+    """Multitask MCP: ``MultitaskQuadratic() + BlockMCP(alpha, gamma)`` —
+    the block non-convex penalty that localizes sources the convex
+    l_{2,1} misses (paper Fig. 4, DESIGN.md §8)."""
+
     def __init__(self, alpha=1.0, gamma=3.0, **kw):
         super().__init__(MultitaskQuadratic(), BlockMCP(alpha, gamma), **kw)
         self.alpha, self.gamma = alpha, gamma

@@ -49,8 +49,29 @@ _ENGINE_KW = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
 
 @dataclass
 class PathResult:
+    """Result of one :func:`reg_path` sweep.
+
+    Attributes
+    ----------
+    lambdas : np.ndarray
+        The decreasing regularization grid.
+    betas : np.ndarray
+        Solutions, ``[n_lambdas, p]`` or ``[n_lambdas, p, T]`` (multitask).
+    kkts, nnzs, n_epochs, n_outer, times : np.ndarray
+        Per-lambda KKT violation, nonzero count, inner epochs, outer
+        iterations, and cumulative wall-clock seconds.
+    metrics : list of dict
+        Per-lambda ``metric_fn`` outputs (when provided).
+    retraces : dict
+        The engine's compile counter per (bucket, driver) key — the proof
+        behind "one compile per working-set bucket across a path".
+    n_dispatches : int
+        Total fused-step launches of the sweep.
+    screened_fracs : np.ndarray, optional
+        Fraction of features pre-screened per lambda (gap-safe runs only).
+    """
     lambdas: np.ndarray
-    betas: np.ndarray                 # [n_lambdas, p]
+    betas: np.ndarray                 # [n_lambdas, p(, T)]
     kkts: np.ndarray
     nnzs: np.ndarray
     n_epochs: np.ndarray
@@ -75,27 +96,53 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
              **solve_kw) -> PathResult:
     """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
 
-    `vmap_chunk=C > 1` sweeps the path C lambdas at a time through the
-    engine's device-resident chunk step (requires the "jax" backend and a
-    penalty with a `lam` hyper-parameter). `engine` (from
-    `solver.make_engine`) shares compiled steps across calls and exposes
-    retrace counters; one is created per call otherwise.
+    Parameters
+    ----------
+    X : array_like, scipy sparse matrix, or Design
+        Design matrix (DESIGN.md §7); sparse paths run CSC-native end to
+        end.
+    y : array_like
+        Targets ``[n]``, or ``[n, T]`` for multitask sweeps (block
+        penalties; the betas stack to ``[n_lambdas, p, T]``, DESIGN.md §8).
+    penalty : object
+        Penalty template; its ``lam`` leaf is replaced per grid point
+        without retracing.
+    datafit : object, optional
+        Defaults to ``Quadratic()``.
+    lambdas : array_like, optional
+        Explicit grid; otherwise ``n_lambdas`` points from ``lambda_max``
+        down to ``lambda_min_ratio * lambda_max``.
+    tol : float, optional
+        Per-lambda outer KKT tolerance.
+    metric_fn : callable, optional
+        ``metric_fn(lam, beta)`` recorded per lambda on
+        ``PathResult.metrics``.
+    engine : SolveEngine, optional
+        Share compiled steps across calls (see ``solver.make_engine``); one
+        shared engine is looked up per config otherwise.
+    vmap_chunk : int, optional
+        ``C > 1`` sweeps C lambdas at a time through the device-resident
+        chunk step (outer loop in a lax.while_loop, one host sync per
+        (chunk, bucket) instead of per (lambda, iteration)); requires the
+        "jax" backend and a penalty with a ``lam`` hyper-parameter.
+    mesh : jax.sharding.Mesh, optional
+        Run the whole sweep on the mesh-native engine (DESIGN.md §6): the
+        sequential driver keeps its 1-dispatch/1-sync outer step and the
+        chunked driver composes as vmap over lanes x shard_map over
+        devices. Multitask/block sweeps shard too (DESIGN.md §8).
+    screen : {"gap_safe"}, optional
+        Sequential driver, L1 + Quadratic only: gap-safe sphere-test
+        pre-filter per lambda (solutions unchanged — the rule is safe —
+        only the per-lambda problem width shrinks;
+        ``PathResult.screened_fracs`` records the screened fraction).
+    **solve_kw
+        Forwarded to :func:`repro.core.solver.solve` (sequential driver) or
+        restricted to engine-level keys (chunked driver).
 
-    `mesh` runs the whole sweep on the mesh-native engine (DESIGN.md §6):
-    the sequential driver keeps its 1-dispatch/1-sync outer step, and the
-    chunked driver composes as vmap over lanes x shard_map over devices —
-    warm-start handoff and bucket escalation are unchanged.
-
-    `X` may be dense, a scipy sparse matrix, or a `Design` (DESIGN.md §7);
-    sparse paths run CSC-native end to end.
-
-    `screen="gap_safe"` (sequential driver, L1 + Quadratic only) applies
-    the gap-safe sphere test (core/screening.py) as a pre-filter at each
-    lambda: features certified zero by the previous solution's duality gap
-    are dropped from the subproblem (padded to powers of two so the engine
-    still compiles once per size), and `PathResult.screened_fracs` records
-    the screened fraction per lambda. Solutions are unchanged — the rule is
-    safe — only the per-lambda problem width shrinks.
+    Returns
+    -------
+    PathResult
+        Solutions plus per-lambda and engine telemetry.
     """
     datafit = Quadratic() if datafit is None else datafit
     design = as_design(X)

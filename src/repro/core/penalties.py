@@ -43,6 +43,8 @@ def _register(cls):
 
 
 def soft_threshold(x, t):
+    """Elementwise soft-thresholding ``sign(x) * max(|x| - t, 0)`` — the
+    prox of ``t * |.|`` (the Lasso shrinkage operator)."""
     return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
 
 

@@ -15,14 +15,12 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
-from .engine import (EngineConfig, GramSolver, SolveEngine, WorkingSetContext,
-                     XbSolver, _apply_T, as_design, get_engine)
+from .engine import EngineConfig, SolveEngine, as_design, get_engine
 from .working_set import BucketPolicy
 
 __all__ = ["solve", "SolveResult"]
@@ -30,15 +28,37 @@ __all__ = ["solve", "SolveResult"]
 
 def _place_design(engine, design, y):
     """Shard (design, y) on the engine's mesh (idempotent for pre-sharded
-    input; sparse designs convert to their stacked per-shard form here)."""
+    input; sparse designs convert to their stacked per-shard form here).
+    Multitask targets [n, T] keep the task dimension replicated."""
+    from repro.launch.shardings import task_spec
     _, ys, _ = engine._specs()
     design = design.place(engine.mesh, engine.data_axis, engine.model_axis)
-    y = jax.device_put(y, NamedSharding(engine.mesh, ys))
+    spec = task_spec(ys, y.ndim - 1)
+    y = jax.device_put(y, NamedSharding(engine.mesh, spec))
     return design, y
 
 
 @dataclass
 class SolveResult:
+    """Result of one :func:`solve` call.
+
+    Attributes
+    ----------
+    beta : jax.Array
+        Final coefficients, ``[p]`` or ``[p, T]`` (multitask).
+    kkt : float
+        Final maximum optimality-violation score (paper Eq. 2).
+    converged : bool
+        Whether ``kkt <= tol`` within ``max_outer`` iterations.
+    n_outer, n_epochs : int
+        Outer iterations driven / total inner CD epochs.
+    kkt_history, ws_history, obj_history, time_history : list
+        Per-outer-iteration telemetry (violation, bucket size, objective,
+        cumulative seconds).
+    n_host_syncs : int
+        Blocking device-to-host readbacks (the engine contract is one per
+        outer iteration, plus one probe for warm starts).
+    """
     beta: jax.Array
     kkt: float                       # final max optimality violation
     converged: bool
@@ -49,36 +69,6 @@ class SolveResult:
     obj_history: list = field(default_factory=list)
     time_history: list = field(default_factory=list)
     n_host_syncs: int = 0            # blocking device->host readbacks
-
-
-@partial(jax.jit, static_argnames=("M", "max_blocks", "use_fp_score", "accel",
-                                   "use_kernels"))
-def _inner_gram(G, c, beta0, L_ws, penalty, eps, M, max_blocks, use_fp_score,
-                accel=True, use_kernels=False):
-    """Standalone Anderson-CD on a Gram subproblem (kept for callers that
-    orchestrate their own outer loop, e.g. core/distributed.py).
-    Returns (beta, n_epochs, kkt)."""
-    cfg = EngineConfig(M=M, max_epochs=M * max_blocks, accel=accel,
-                       use_fp_score=use_fp_score, gram=True,
-                       backend="pallas" if use_kernels else "jax")
-    ctx = WorkingSetContext(Xt_ws=None, y=None, L_ws=L_ws, offset_ws=None,
-                            datafit=None, penalty=penalty, G=G, c=c)
-    beta, _, n_ep, kkt = GramSolver(cfg).solve(ctx, beta0, eps)
-    return beta, n_ep, kkt
-
-
-@partial(jax.jit, static_argnames=("M", "max_blocks", "use_fp_score", "accel",
-                                   "use_kernels"))
-def _inner_xb(Xt_ws, y, beta0, Xb0, L_ws, offset_ws, datafit, penalty, eps,
-              M, max_blocks, use_fp_score, accel=True, use_kernels=False):
-    """Standalone Anderson-CD maintaining Xb. Returns (beta, Xb, n_epochs,
-    kkt)."""
-    cfg = EngineConfig(M=M, max_epochs=M * max_blocks, accel=accel,
-                       use_fp_score=use_fp_score, gram=False,
-                       backend="pallas" if use_kernels else "jax")
-    ctx = WorkingSetContext(Xt_ws=Xt_ws, y=y, L_ws=L_ws, offset_ws=offset_ws,
-                            datafit=datafit, penalty=penalty)
-    return XbSolver(cfg).solve(ctx, beta0, eps, aux0=Xb0)
 
 
 def make_engine(penalty, datafit, *, M=5, max_epochs=1000, accel=True,
@@ -109,30 +99,80 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           beta0=None, n_tasks=None, accel=True, use_ws=True,
           use_kernels=False, mesh=None, data_axis="data", model_axis="model",
           engine=None, bucket_policy=None):
-    """Solve Problem (1): argmin_beta F(X beta) + sum_j g_j(beta_j).
+    """Solve Problem (1): ``argmin_beta F(X beta) + sum_j g_j(beta_j)``.
 
-    Returns a SolveResult. `use_gram="auto"` picks the Gram inner solver for
-    quadratic datafits. `use_fp_score` forces the fixed-point score (default:
-    automatic, True for penalties without informative subdifferentials).
-    `accel=False` disables Anderson extrapolation and `use_ws=False` runs the
-    inner solver on all p features (the Figure 6 ablation axes).
-    `use_kernels=True` runs CD epochs through the Pallas kernels
-    (VMEM-resident state on TPU; interpret mode on CPU). Pass `engine` (from
-    `make_engine`) to share compiled fused steps across many solves — e.g. a
-    regularization path — and to read back retrace/dispatch telemetry.
+    The thin host driver over the device-resident fused engine: one jitted
+    dispatch and one blocking scalar readback per outer iteration of
+    Algorithm 1, compiled once per power-of-two working-set bucket.
 
-    `mesh` (a jax Mesh holding `data_axis` and `model_axis`) runs the SAME
-    fused outer step sharded over the mesh — X samples x features, beta over
-    features, residual over samples (DESIGN.md §6). The dispatch/sync budget
-    is unchanged: one launch, one blocking readback per outer iteration.
-    Unsupported sharded configurations (multitask/block penalties, the
-    Pallas backend) raise NotImplementedError here, before any trace.
+    Parameters
+    ----------
+    X : array_like, scipy sparse matrix, or Design
+        Design matrix ``[n, p]``. Scipy sparse input is converted to a
+        CSC-native :class:`repro.sparse.CSCDesign` (DESIGN.md §7) and solved
+        without ever materializing the dense X — the score pass is a
+        segment-sum over the nnz entries and only the K working-set columns
+        are densified for the inner solve.
+    y : array_like
+        Targets ``[n]``, or ``[n, T]`` for multitask datafits (the
+        coefficients are then row blocks ``[p, T]``, DESIGN.md §8).
+    datafit : object
+        Smooth term F — see :mod:`repro.core.datafits`.
+    penalty : object
+        Separable penalty g — see :mod:`repro.core.penalties`. Penalties are
+        pytrees with hyper-parameters as leaves: changing ``lam`` never
+        retraces the compiled step.
+    tol : float, optional
+        Outer-loop KKT tolerance (max violation score, paper Eq. 2).
+    max_outer, max_epochs, M : int, optional
+        Outer-iteration cap, inner-epoch cap, and epochs per Anderson block.
+    p0 : int, optional
+        First working-set bucket (paper Algorithm 1 line 2).
+    use_gram : {"auto", True, False}, optional
+        "auto" picks the Gram inner solver for quadratic datafits (K-sized
+        VMEM-resident state), the Xb form otherwise.
+    use_fp_score : bool, optional
+        Force the fixed-point violation score (default: automatic — True
+        exactly for penalties without informative subdifferentials).
+    eps_inner_frac : float, optional
+        Inner tolerance as a fraction of the current outer KKT violation.
+    beta0 : array_like, optional
+        Warm start; its generalized support sizes the first bucket (one
+        extra probe launch + sync per solve).
+    n_tasks : int, optional
+        Number of tasks T (inferred from ``y.ndim == 2`` when omitted).
+    accel, use_ws : bool, optional
+        Disable Anderson extrapolation / working sets (Figure 6 ablations).
+    use_kernels : bool, optional
+        Run CD epochs through the Pallas kernels (VMEM-resident on TPU,
+        interpret mode on CPU). Scalar coordinates only: multitask solves
+        raise NotImplementedError at entry.
+    mesh : jax.sharding.Mesh, optional
+        Run the SAME fused outer step under shard_map — X sharded samples x
+        features over (``data_axis``, ``model_axis``), beta over features,
+        residual over samples (DESIGN.md §6). The dispatch/sync budget is
+        unchanged. Multitask/block penalties shard too (block top-k over the
+        model axis, replicated block Gram inner solve, DESIGN.md §8); the
+        combinations the engine cannot run — the Pallas backend under
+        shard_map, per-coordinate penalty arrays, sample-sharded sparse
+        designs, non-dividing shapes — raise here, before any trace.
+    engine : SolveEngine, optional
+        Share compiled fused steps across many solves (see
+        :func:`make_engine`) and read back retrace/dispatch telemetry.
+    bucket_policy : BucketPolicy, optional
+        Override the working-set bucket ladder.
 
-    `X` may be a dense array, a scipy sparse matrix (converted to a
-    CSC-native `repro.sparse.CSCDesign`, DESIGN.md §7), or any `Design`
-    instance: the sparse path never materializes a dense X — the score pass
-    is a segment-sum over the nnz entries and only the K working-set columns
-    are densified for the inner solve.
+    Returns
+    -------
+    SolveResult
+        Final coefficients, convergence state, and per-iteration telemetry
+        (kkt/objective/time histories, host-sync count).
+
+    Examples
+    --------
+    >>> res = solve(X, y, Quadratic(), L1(0.1 * lambda_max(X, y)))
+    >>> res.converged, res.beta.shape
+    (True, (p,))
     """
     design = as_design(X)
     n_rows, p = design.shape
@@ -166,8 +206,10 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     beta = jnp.zeros(bshape, design.dtype) if beta0 is None \
         else jnp.asarray(beta0)
     if engine.mesh is not None:
+        from repro.launch.shardings import task_spec
         _, _, bs = engine._specs()
-        beta = jax.device_put(beta, NamedSharding(engine.mesh, bs))
+        beta = jax.device_put(
+            beta, NamedSharding(engine.mesh, task_spec(bs, n_tasks)))
     Xb = design.matvec(beta)
 
     res = SolveResult(beta=beta, kkt=float("inf"), converged=False,

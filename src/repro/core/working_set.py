@@ -45,6 +45,7 @@ def violation_scores(penalty, beta, grad, L, use_fixed_point=None):
 
 
 def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (working-set bucket rounding)."""
     return 1 << max(0, int(x - 1)).bit_length()
 
 
@@ -142,10 +143,17 @@ def shard_ws_mask(ws, width: int, model_axis):
 
 
 def gather_ws_vec(vec_loc, mine, loc_idx, model_axis):
-    """vec[ws] replicated over the model axis (masked gather + psum)."""
+    """vec[ws] replicated over the model axis (masked gather + psum).
+
+    Works on scalar coordinates (vec [width] -> [K]) and multitask blocks
+    (vec [width, T] -> [K, T]): the ownership mask broadcasts over the
+    trailing task dimension.
+    """
     if mine is None:
         return vec_loc[loc_idx]
-    return jax.lax.psum(jnp.where(mine, vec_loc[loc_idx], 0), model_axis)
+    rows = vec_loc[loc_idx]
+    mask = mine if rows.ndim == 1 else mine[:, None]
+    return jax.lax.psum(jnp.where(mask, rows, 0), model_axis)
 
 
 def gather_ws_cols(X_loc, mine, loc_idx, model_axis):

@@ -1,1 +1,2 @@
-from .synth import make_correlated_design, make_classification, make_multitask
+from .synth import (make_classification, make_correlated_design,
+                    make_leadfield, make_multitask)

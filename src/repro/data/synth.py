@@ -110,3 +110,33 @@ def make_multitask(n=300, p=600, n_tasks=10, n_nonzero=20, snr=3.0, seed=0,
     noise *= np.linalg.norm(signal) / (snr * np.linalg.norm(noise))
     Y = signal + noise
     return X.astype(dtype), Y.astype(dtype), W.astype(dtype)
+
+
+def make_leadfield(n=60, p_per_hemi=150, T=20, *, coherence=0.98, snr=1.5,
+                   seed=0):
+    """The Figure 4 M/EEG-analog forward problem: two "hemisphere" blocks of
+    highly column-coherent leadfield-like features hide one true source row
+    each (the second 4x weaker). Returns (X [n, 2*p_per_hemi], Y [n, T],
+    W_true, true_rows) — shared by benchmarks/fig4_meeg.py,
+    benchmarks/bench_engine.py's ``fig4_meeg`` entry, and
+    examples/multitask_meg.py, so they all measure the same workload."""
+    rng = np.random.default_rng(seed)
+    cols = []
+    true_rows = []
+    for h in range(2):
+        base = rng.standard_normal((n, 1))
+        block = (coherence * base
+                 + np.sqrt(1 - coherence ** 2)
+                 * rng.standard_normal((n, p_per_hemi)))
+        cols.append(block)
+        true_rows.append(int(h * p_per_hemi + rng.integers(0, p_per_hemi)))
+    X = np.concatenate(cols, axis=1)
+    X /= np.linalg.norm(X, axis=0) / np.sqrt(n)
+    W = np.zeros((2 * p_per_hemi, T))
+    t = np.linspace(0, 1, T)
+    W[true_rows[0]] = np.sin(2 * np.pi * 5 * t)
+    W[true_rows[1]] = np.cos(2 * np.pi * 3 * t) * 0.25
+    signal = X @ W
+    noise = rng.standard_normal((n, T))
+    noise *= np.linalg.norm(signal) / (snr * np.linalg.norm(noise))
+    return X, signal + noise, W, true_rows

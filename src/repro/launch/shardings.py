@@ -162,6 +162,18 @@ def design_specs(data_axis="data", model_axis="model"):
     return (P(data_axis, model_axis), P(data_axis), P(model_axis))
 
 
+def task_spec(spec: P, n_tasks: int) -> P:
+    """Append an explicitly replicated task dimension to a 1-D solve spec.
+
+    Multitask solves (DESIGN.md §8) carry coefficients as row blocks
+    ``[p, T]`` and residuals as ``[n, T]``: the feature/sample dimension
+    keeps its scalar-path placement and the trailing task dimension is
+    replicated on every device. ``n_tasks == 0`` (scalar coordinates)
+    returns the spec unchanged, so one call site serves both forms.
+    """
+    return P(*spec, None) if n_tasks else spec
+
+
 def sparse_design_spec(model_axis="model"):
     """Leading-axis spec of the stacked per-shard CSC design leaves
     (ShardedCSCDesign, DESIGN.md §7): every leaf is [n_shards, ...] and

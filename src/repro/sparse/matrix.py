@@ -160,12 +160,15 @@ class CSCDesign(Design):
         return self
 
     def score(self, raw, backend: str = "jax"):
-        """X.T @ raw for this feature block (O(nnz), no dense X)."""
-        if raw.ndim != 1:
-            raise NotImplementedError(
-                "sparse designs do not support multitask (2-D) datafits; "
-                "densify or fit per task")
+        """X.T @ raw for this feature block (O(nnz), no dense X). `raw` may
+        be [n] or [n, T] (multitask); the Pallas ELL kernel is scalar-only
+        (``SolveEngine.validate`` rejects pallas + multitask at entry)."""
         if backend == "pallas":
+            if raw.ndim != 1:
+                raise NotImplementedError(
+                    "backend='pallas' supports scalar coordinates only "
+                    "(n_tasks=0); use backend='jax' (use_kernels=False) "
+                    "for multitask solves")
             return csc_score_pallas(self.ell_rows, self.ell_vals, raw)
         return csc_score(self.data, self.indices, self.col_ids, raw,
                          self.width)
@@ -185,10 +188,7 @@ class CSCDesign(Design):
         return csc_incremental_xb(Xb, rows, vals, delta, model_axis)
 
     def matvec(self, beta):
-        if beta.ndim != 1:
-            raise NotImplementedError(
-                "sparse designs do not support multitask (2-D) "
-                "coefficients; densify or fit per task")
+        """X @ beta for [p] or multitask [p, T] coefficients."""
         return csc_matvec(self.data, self.indices, self.col_ids, beta,
                           self.n_rows)
 
@@ -339,14 +339,19 @@ class ShardedCSCDesign(Design):
 
     def matvec(self, beta):
         """X @ beta, eagerly, from the stacked shard blocks (global ids =
-        shard * width + local)."""
+        shard * width + local). `beta` may be [p] or multitask [p, T]."""
         w = self.shape[1] // self.n_shards
         gids = (self.col_ids
                 + (jnp.arange(self.n_shards, dtype=self.col_ids.dtype)
                    * w)[:, None])
-        contrib = (self.data * beta[gids]).reshape(-1)
-        return jnp.zeros((self.n_rows,), self.dtype).at[
-            self.indices.reshape(-1)].add(contrib)
+        gathered = beta[gids]                       # [S, L(, T)]
+        idx = self.indices.reshape(-1)
+        if gathered.ndim == 2:
+            contrib = (self.data * gathered).reshape(-1)
+            return jnp.zeros((self.n_rows,), self.dtype).at[idx].add(contrib)
+        contrib = (self.data[..., None] * gathered).reshape(-1, beta.shape[1])
+        return jnp.zeros((self.n_rows, beta.shape[1]),
+                         self.dtype).at[idx].add(contrib)
 
     def lipschitz(self, datafit):
         return datafit.lipschitz_cols(self.col_sq.reshape(-1), self.n_rows)

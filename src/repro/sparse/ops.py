@@ -37,12 +37,16 @@ def _psum_if(x, axis):
 
 # ---------------------------------------------------------------- score pass
 def csc_score(data, indices, col_ids, raw, p: int):
-    """X.T @ raw over flat CSC arrays: [nnz_pad] -> [p].
+    """X.T @ raw over flat CSC arrays: [nnz_pad] -> [p] (or [p, T] for a
+    multitask raw gradient [n, T] — the segment-sum reduces the leading nnz
+    axis and carries the task axis through).
 
     Padding entries have data == 0.0 and col_ids == p - 1, so they add an
     exact 0.0 to the last segment.
     """
-    contrib = data * raw[indices]
+    gathered = raw[indices]
+    contrib = (data * gathered if gathered.ndim == 1
+               else data[:, None] * gathered)
     return jax.ops.segment_sum(contrib, col_ids, num_segments=p,
                                indices_are_sorted=True)
 
@@ -90,18 +94,30 @@ def csc_gather_columns(rows, vals, n_rows: int, model_axis=None):
 
 def csc_incremental_xb(Xb, rows, vals, delta, model_axis=None):
     """Xb += X_ws @ delta via scatter-add on the gathered windows (exact:
-    padding vals are 0.0)."""
+    padding vals are 0.0). `delta` may be [K] (scalar coordinates, Xb [n])
+    or [K, T] (multitask blocks, Xb [n, T])."""
     inc = jnp.zeros_like(Xb)
-    inc = inc.at[rows.reshape(-1)].add((vals * delta[:, None]).reshape(-1))
+    if delta.ndim == 1:
+        inc = inc.at[rows.reshape(-1)].add((vals * delta[:, None]).reshape(-1))
+    else:
+        T = delta.shape[1]
+        contrib = vals[:, :, None] * delta[:, None, :]      # [K, m, T]
+        inc = inc.at[rows.reshape(-1)].add(contrib.reshape(-1, T))
     return Xb + _psum_if(inc, model_axis)
 
 
 # ----------------------------------------------------------------- full ops
 def csc_matvec(data, indices, col_ids, beta, n_rows: int):
-    """X @ beta over flat CSC arrays -> [n]. Padding cols point at p - 1
-    with data 0.0, so the gathered beta contributes exact zeros."""
-    contrib = data * beta[col_ids]
-    return jnp.zeros((n_rows,), data.dtype).at[indices].add(contrib)
+    """X @ beta over flat CSC arrays -> [n] (or [n, T] for multitask beta
+    [p, T]). Padding cols point at p - 1 with data 0.0, so the gathered
+    beta contributes exact zeros."""
+    gathered = beta[col_ids]
+    if gathered.ndim == 1:
+        contrib = data * gathered
+        return jnp.zeros((n_rows,), data.dtype).at[indices].add(contrib)
+    contrib = data[:, None] * gathered
+    return jnp.zeros((n_rows, beta.shape[1]),
+                     data.dtype).at[indices].add(contrib)
 
 
 # ------------------------------------------------------------- pallas kernel

@@ -11,9 +11,12 @@ Covers the PR-2 acceptance criteria:
     warm-started path, sequential and chunked (vmap lanes x shard_map).
   * a Logistic datafit converges through the sharded Xb path (previously
     NotImplementedError in the seed distributed loop).
-  * unsupported sharded configs (multitask, block penalties, per-coordinate
-    penalty params, pallas backend) raise NotImplementedError at solve()
-    entry, not mid-trace.
+  * multitask (block-coordinate) solves run through the same fused step:
+    1x1 bit-identical to dense, 2x4 parity at 1e-8, 1-dispatch/1-sync
+    budget (DESIGN.md §8).
+  * the remaining unsupported sharded configs (per-coordinate penalty
+    params, pallas backend) raise NotImplementedError at solve() entry,
+    not mid-trace.
   * the distributed top-k retains generalized support concentrated on one
     shard (min(k, shard_width) local candidates + engine coverage flag).
 
@@ -33,9 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (MCP, L1, BlockL1, Box, Logistic, MultitaskQuadratic,
-                        Quadratic, QuadraticSVC, lambda_max, make_engine,
-                        reg_path, solve)
+from repro.core import (MCP, L1, BlockL1, BlockMCP, Box, Logistic,
+                        MultitaskQuadratic, Quadratic, QuadraticSVC,
+                        lambda_max, make_engine, reg_path, solve)
 from repro.core.distributed import solve_distributed
 from repro.core.engine import EngineConfig, get_engine
 from repro.core.estimators import Lasso
@@ -161,12 +164,54 @@ def test_estimator_mesh_kwarg(mesh11, quad_data):
     np.testing.assert_array_equal(est_m.coef_, est_d.coef_)
 
 
+# ----------------------------------------------- multitask (block) solves
+@pytest.fixture(scope="module")
+def mt_data():
+    # n, p divide every 8-device (data, model) split (8x1 / 2x4 / 1x8)
+    X, Y, W = make_multitask(n=64, p=128, n_tasks=4, n_nonzero=8, seed=0)
+    return jnp.asarray(X), jnp.asarray(Y), W
+
+
+def test_mesh_1x1_multitask_bit_identical(mesh11, mt_data):
+    """Block coordinates through the fused mesh step: the 1x1 mesh is the
+    exact dense multitask program (DESIGN.md §8)."""
+    X, Y, _ = mt_data
+    lam = lambda_max(X, Y, MultitaskQuadratic()) / 10
+    for pen in (BlockL1(lam), BlockMCP(lam, 3.0)):
+        ref = solve(X, Y, MultitaskQuadratic(), pen, tol=1e-10)
+        res = solve(X, Y, MultitaskQuadratic(), pen, tol=1e-10, mesh=mesh11)
+        assert res.converged == ref.converged
+        assert np.array_equal(np.asarray(res.beta), np.asarray(ref.beta))
+
+
+def test_mesh_1x1_multitask_budget(mesh11, mt_data):
+    """Multitask keeps the engine contract: 1 fused dispatch + 1 blocking
+    host sync per outer iteration."""
+    X, Y, _ = mt_data
+    lam = lambda_max(X, Y, MultitaskQuadratic()) / 10
+    eng = make_engine(BlockL1(lam), MultitaskQuadratic(), mesh=mesh11)
+    res = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-9,
+                engine=eng)
+    assert res.converged
+    assert eng.n_dispatches == len(res.kkt_history) == res.n_host_syncs
+
+
+def test_mesh_multitask_chunked_path_matches_sequential(mesh11, mt_data):
+    """Multitask reg_path sweeps compose with the chunked vmap driver on a
+    mesh (lanes x devices), matching the sequential dense path."""
+    X, Y, _ = mt_data
+    seq = reg_path(X, Y, BlockL1(1.0), MultitaskQuadratic(), n_lambdas=6,
+                   lambda_min_ratio=0.05, tol=1e-9,
+                   engine=make_engine(BlockL1(1.0), MultitaskQuadratic()))
+    eng = make_engine(BlockL1(1.0), MultitaskQuadratic(), mesh=mesh11)
+    chk = reg_path(X, Y, BlockL1(1.0), MultitaskQuadratic(), n_lambdas=6,
+                   lambda_min_ratio=0.05, tol=1e-9, engine=eng, vmap_chunk=3)
+    assert np.all(chk.kkts <= 1e-9)
+    np.testing.assert_allclose(chk.betas, seq.betas, atol=1e-6)
+
+
 # --------------------------------------------------- validate() entry errors
 def test_mesh_rejects_unsupported_configs_at_entry(mesh11):
-    X, Y, _ = make_multitask(n=40, p=64, n_tasks=3, n_nonzero=4, seed=0)
-    X, Y = jnp.asarray(X), jnp.asarray(Y)
-    with pytest.raises(NotImplementedError, match="multitask"):
-        solve(X, Y, MultitaskQuadratic(), BlockL1(0.1), mesh=mesh11)
     Xq = jnp.asarray(np.random.default_rng(0).standard_normal((40, 64)))
     yq = jnp.asarray(np.random.default_rng(1).standard_normal(40))
     with pytest.raises(NotImplementedError, match="[Pp]allas"):
@@ -190,17 +235,16 @@ def test_mesh_engine_mismatch_raises(mesh11, quad_data):
 def test_reg_path_validates_at_entry(mesh11):
     """Unsupported mesh configs raise the designed entry errors from BOTH
     path drivers (the chunked one never reaches solve())."""
-    X, Y, _ = make_multitask(n=40, p=64, n_tasks=3, n_nonzero=4, seed=0)
-    X, Y = jnp.asarray(X), jnp.asarray(Y)
+    Xq = jnp.asarray(np.random.default_rng(0).standard_normal((40, 64)))
+    yq = jnp.asarray(np.random.default_rng(1).standard_normal(40))
     for chunk in (1, 2):
-        with pytest.raises(NotImplementedError, match="multitask"):
-            reg_path(X, Y, BlockL1(0.1), MultitaskQuadratic(), n_lambdas=2,
+        with pytest.raises(NotImplementedError, match="per-coordinate"):
+            reg_path(Xq, yq, L1(jnp.full(64, 0.1)), Quadratic(), n_lambdas=2,
                      mesh=mesh11, vmap_chunk=chunk)
+
     class NoFlag:                       # custom datafit without SAMPLE_MEAN
         HAS_GRAM = True
 
-    Xq = jnp.asarray(np.random.default_rng(0).standard_normal((40, 64)))
-    yq = jnp.asarray(np.random.default_rng(1).standard_normal(40))
     with pytest.raises(NotImplementedError, match="SAMPLE_MEAN"):
         solve(Xq, yq, NoFlag(), L1(0.1), mesh=mesh11)
 
@@ -297,6 +341,41 @@ def test_sharded_chunked_path_2x4(quad_data):
 
 
 @requires8
+@pytest.mark.parametrize("shape", MESH_SHAPES, ids=lambda s: f"{s[0]}x{s[1]}")
+def test_sharded_multitask_matches_single_device(shape, mt_data):
+    """Acceptance (DESIGN.md §8): multitask L2,1 on every (data, model)
+    split of 8 devices matches the dense engine to 1e-8."""
+    X, Y, _ = mt_data
+    lam = lambda_max(X, Y, MultitaskQuadratic()) / 10
+    mesh = make_test_mesh(shape)
+    res = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10,
+                mesh=mesh, max_outer=100)
+    ref = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10,
+                max_outer=100)
+    assert res.converged and ref.converged
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-8)
+
+
+@requires8
+def test_sharded_multitask_block_mcp_and_xb_form_2x4(mt_data):
+    """Block MCP (non-convex) and the Xb-form inner solver both shard."""
+    X, Y, _ = mt_data
+    lam = lambda_max(X, Y, MultitaskQuadratic()) / 10
+    mesh = make_test_mesh((2, 4))
+    ref = solve(X, Y, MultitaskQuadratic(), BlockMCP(lam, 3.0), tol=1e-10)
+    res = solve(X, Y, MultitaskQuadratic(), BlockMCP(lam, 3.0), tol=1e-10,
+                mesh=mesh, max_outer=100)
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-8)
+    refx = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10)
+    resx = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10,
+                 mesh=mesh, use_gram=False, max_outer=100)
+    np.testing.assert_allclose(np.asarray(resx.beta), np.asarray(refx.beta),
+                               atol=1e-8)
+
+
+@requires8
 def test_mesh_rejects_non_dividing_shapes_at_entry():
     mesh = make_test_mesh((1, 8))
     X = jnp.asarray(np.random.default_rng(0).standard_normal((40, 100)))
@@ -343,10 +422,11 @@ _SUBPROCESS_TEST = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     jax.config.update("jax_enable_x64", True)
-    from repro.core import L1, Logistic, Quadratic, lambda_max, make_engine, \\
-        reg_path, solve
+    from repro.core import BlockL1, L1, Logistic, MultitaskQuadratic, \\
+        Quadratic, lambda_max, make_engine, reg_path, solve
     from repro.launch.mesh import make_test_mesh
-    from repro.data.synth import make_classification, make_correlated_design
+    from repro.data.synth import (make_classification,
+                                  make_correlated_design, make_multitask)
 
     mesh = make_test_mesh((2, 4))
     X, y, _ = make_correlated_design(n=128, p=512, n_nonzero=16, seed=3)
@@ -376,6 +456,18 @@ _SUBPROCESS_TEST = textwrap.dedent("""
     rl = solve(Xc, yc, Logistic(), L1(lambda_max(Xc, yc, Logistic()) / 3),
                tol=1e-7, mesh=mesh)
     assert rl.converged, rl.kkt
+
+    # multitask L2,1 parity on the feature-split (1, 8) mesh (DESIGN.md §8)
+    Xm, Ym, _ = make_multitask(n=64, p=128, n_tasks=4, n_nonzero=8, seed=0)
+    Xm, Ym = jnp.asarray(Xm), jnp.asarray(Ym)
+    lmt = lambda_max(Xm, Ym, MultitaskQuadratic()) / 10
+    rmt = solve(Xm, Ym, MultitaskQuadratic(), BlockL1(lmt), tol=1e-10,
+                mesh=make_test_mesh((1, 8)), max_outer=100)
+    rmd = solve(Xm, Ym, MultitaskQuadratic(), BlockL1(lmt), tol=1e-10,
+                max_outer=100)
+    assert rmt.converged, rmt.kkt
+    np.testing.assert_allclose(np.asarray(rmt.beta), np.asarray(rmd.beta),
+                               atol=1e-8)
     print("OK 8-device mesh engine")
 """)
 

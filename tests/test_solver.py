@@ -146,6 +146,40 @@ def test_multitask_block_support(multitask_data):
     assert got2 == true_rows                       # MCP exact recovery (Fig. 4)
 
 
+def ista_multitask_reference(X, Y, lam, n_iter=30_000):
+    """Plain proximal-gradient multitask L2,1 to high precision (oracle)."""
+    X = np.asarray(X)
+    Y = np.asarray(Y)
+    n = X.shape[0]
+    L = np.linalg.norm(X, 2) ** 2 / n
+    W = np.zeros((X.shape[1], Y.shape[1]))
+    for _ in range(n_iter):
+        G = X.T @ (X @ W - Y) / n
+        Z = W - G / L
+        nrm = np.linalg.norm(Z, axis=1, keepdims=True)
+        W = Z * np.maximum(1.0 - (lam / L) / np.maximum(nrm, 1e-30), 0.0)
+    return W
+
+
+def test_multitask_engine_matches_ista_reference():
+    """Acceptance (DESIGN.md §8): the block-coordinate fused engine solves
+    multitask L2,1 to the same solution as a long-run proximal-gradient
+    oracle, along a warm-started path, to 1e-8."""
+    from repro.data.synth import make_multitask
+    X, Y, _ = make_multitask(n=60, p=120, n_tasks=4, n_nonzero=8, seed=1)
+    X, Y = jnp.asarray(X), jnp.asarray(Y)
+    lmax = lambda_max(X, Y, MultitaskQuadratic())
+    beta = None
+    for frac in (5.0, 10.0, 20.0):
+        lam = lmax / frac
+        res = solve(X, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-12,
+                    beta0=beta, max_outer=100)
+        beta = res.beta
+        assert res.converged
+        ref = ista_multitask_reference(X, Y, lam)
+        np.testing.assert_allclose(np.asarray(res.beta), ref, atol=1e-8)
+
+
 def test_warm_start_reduces_epochs(lasso_data):
     X, y, _ = lasso_data
     lam = lambda_max(X, y) / 30

@@ -189,21 +189,35 @@ def test_sparse_pallas_backend_agrees(sparse_data):
                                atol=1e-8)
 
 
-def test_sparse_entry_errors(sparse_data, multitask_data):
+def test_sparse_entry_errors(sparse_data):
     X, y, _ = sparse_data
     lam = lambda_max(X, y) / 10
     # pallas backend needs the ELL layout
     with pytest.raises(NotImplementedError, match="ell=True"):
         solve(X, y, Quadratic(), L1(lam), use_kernels=True)
-    # multitask datafits are dense-only
-    _, Y, _ = multitask_data
-    Xs = sp.random(Y.shape[0], 64, density=0.05, random_state=0,
-                   format="csc")
-    with pytest.raises(NotImplementedError, match="multitask"):
-        solve(Xs, Y, MultitaskQuadratic(), BlockL1(0.1))
-    # ... including through lambda_max's score pass (2-D raw gradient)
-    with pytest.raises(NotImplementedError, match="multitask"):
-        lambda_max(Xs, Y, MultitaskQuadratic())
+
+
+def test_sparse_multitask_matches_dense(multitask_data):
+    """Block coordinates on the CSC design (DESIGN.md §8): the sparse
+    multitask solve matches the dense engine to 1e-8, for both inner
+    solver forms, and lambda_max's 2-D score pass agrees."""
+    X, Y, _ = multitask_data
+    Xs = sp.csc_matrix(np.where(np.abs(np.asarray(X)) > 0.8,
+                                np.asarray(X), 0.0))
+    Xd = jnp.asarray(Xs.toarray())
+    Y = jnp.asarray(Y)
+    assert np.isclose(lambda_max(Xs, Y, MultitaskQuadratic()),
+                      lambda_max(Xd, Y, MultitaskQuadratic()))
+    lam = lambda_max(Xd, Y, MultitaskQuadratic()) / 10
+    ref = solve(Xd, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10)
+    res = solve(Xs, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10)
+    assert res.converged
+    np.testing.assert_allclose(np.asarray(res.beta), np.asarray(ref.beta),
+                               atol=1e-8)
+    res_xb = solve(Xs, Y, MultitaskQuadratic(), BlockL1(lam), tol=1e-10,
+                   use_gram=False)
+    np.testing.assert_allclose(np.asarray(res_xb.beta),
+                               np.asarray(ref.beta), atol=1e-8)
 
 
 # ---------------------------------------------------------------- reg paths
@@ -249,7 +263,10 @@ def test_gap_safe_mask_design_matches_reference(sparse_data):
     r = np.sqrt(2.0 * max(primal - dual, 0.0) / n) / lam
     stat = np.abs(Xn.T @ theta) + r * np.sqrt((Xn * Xn).sum(0))
     disagree = got_sparse != ref
-    assert np.all(np.abs(stat[disagree] - 1.0) < 1e-8), \
+    # boundary tolerance: the float64 test statistic itself moves by a few
+    # 1e-8 with XLA reduction tiling (e.g. under forced multi-device host
+    # platforms), so "at the boundary" must absorb that jitter
+    assert np.all(np.abs(stat[disagree] - 1.0) < 1e-6), \
         f"{disagree.sum()} non-boundary disagreements"
 
 
