@@ -26,6 +26,7 @@ ROWS = [
     ("fig5_mcp", "MCP (fig. 5)", "dense n=400 p=2000"),
     ("fig4_meeg", "Multitask L2,1 (fig. 4)", None),
     ("sparse_fig2", "Sparse Lasso (news20-like)", None),
+    ("cv_fig", "Lasso CV grid (simultaneous)", None),
 ]
 
 
@@ -45,6 +46,8 @@ def _problem_text(m, fallback):
         return f"dense {desc} T={m['n_tasks']}"
     if "nnz" in m:
         return f"CSC {desc} nnz~{_fmt_count(m['nnz'])}"
+    if "grid" in m:
+        return f"dense {desc}, {m['grid']} fold×λ grid"
     return f"dense {desc}"
 
 BEGIN, END = "<!-- bench-table:begin -->", "<!-- bench-table:end -->"

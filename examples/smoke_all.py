@@ -23,6 +23,7 @@ EXAMPLES = {
     "quickstart.py": ([], "done quickstart"),
     "mcp_regression.py": ([], "done mcp_regression"),
     "multitask_meg.py": ([], "done multitask_meg"),
+    "lasso_cv.py": ([], "done lasso_cv"),
     "distributed_lasso.py": ([], "done distributed_lasso"),
     "serve_lm.py": ([], "second call:"),
     "sparse_probe_lm.py": ([], "[mcp probe]"),

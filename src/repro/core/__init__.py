@@ -4,7 +4,7 @@ separable penalties (skglm, NeurIPS 2022)."""
 from .datafits import Logistic, MultitaskQuadratic, Quadratic, QuadraticSVC
 from .penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1, BlockMCP,
                         Box, soft_threshold)
-from .solver import SolveResult, make_engine, solve
+from .solver import SolveResult, make_engine, normalize_weights, solve
 from .engine import (Design, DenseDesign, EngineConfig, GramSolver,
                      SolveEngine, SubproblemSolver, XbSolver, as_design,
                      get_engine)
@@ -14,12 +14,14 @@ from .working_set import (BucketPolicy, fixed_point_score, grow_ws_size,
 from .api import (elastic_net, enet_gap, lambda_max, lasso, lasso_gap,
                   logreg_gap, mcp_regression, multitask_lasso, multitask_mcp,
                   scad_regression, sparse_logreg, svc_dual)
-from .path import PathResult, reg_path, support_metrics
+from .path import (GridResult, PathResult, cross_val_path, reg_path,
+                   support_metrics)
 from .distributed import make_distributed_ops, shard_design, solve_distributed
 from .estimators import (ElasticNet, GeneralizedLinearEstimator, Lasso,
-                         LinearSVC, MCPRegression, MultiTaskLasso,
-                         MultiTaskMCP, SCADRegression,
-                         SparseLogisticRegression)
+                         LassoCV, LinearSVC, MCPRegression, MCPRegressionCV,
+                         MultiTaskLasso, MultiTaskMCP, SCADRegression,
+                         SparseLogisticRegression,
+                         SparseLogisticRegressionCV, information_criterion)
 
 __all__ = [
     "Quadratic", "Logistic", "QuadraticSVC", "MultitaskQuadratic",
@@ -33,8 +35,11 @@ __all__ = [
     "mcp_regression", "scad_regression", "sparse_logreg", "svc_dual",
     "multitask_lasso", "multitask_mcp", "lasso_gap", "enet_gap", "logreg_gap",
     "reg_path", "PathResult", "support_metrics",
+    "cross_val_path", "GridResult", "normalize_weights",
     "shard_design", "solve_distributed", "make_distributed_ops",
     "GeneralizedLinearEstimator", "Lasso", "ElasticNet", "MCPRegression",
     "SCADRegression", "SparseLogisticRegression", "LinearSVC",
     "MultiTaskLasso", "MultiTaskMCP",
+    "LassoCV", "MCPRegressionCV", "SparseLogisticRegressionCV",
+    "information_criterion",
 ]

@@ -21,17 +21,24 @@ __all__ = ["lambda_max", "lasso_gap", "enet_gap", "logreg_gap",
            "multitask_lasso", "multitask_mcp"]
 
 
-def lambda_max(X, y, datafit=None):
+def lambda_max(X, y, datafit=None, sample_weight=None):
     """Smallest lambda with solution 0: ||X^T F'(X 0)||_inf (paper §3.1).
 
     `X` may be dense, a scipy sparse matrix, or a `Design` — the sparse
-    score pass never materializes X."""
+    score pass never materializes X. `sample_weight` (validated and
+    rescaled to sum to n, like :func:`repro.core.solve`) weights the raw
+    gradient, so the returned lambda matches the weighted problem."""
     from .engine import as_design
+    from .solver import normalize_weights
     datafit = Quadratic() if datafit is None else datafit
     design = as_design(X)
     Xb0 = jnp.zeros((design.shape[0],)
                     + (y.shape[1:] if y.ndim > 1 else ()), design.dtype)
-    grad0 = design.score(datafit.raw_grad(Xb0, y))
+    if sample_weight is None:
+        grad0 = design.score(datafit.raw_grad(Xb0, y))
+    else:
+        w = normalize_weights(sample_weight, design.shape[0], design.dtype)
+        grad0 = design.score(datafit.raw_grad(Xb0, y, w))
     if grad0.ndim == 2:
         return float(jnp.max(jnp.sqrt(jnp.sum(grad0 ** 2, axis=-1))))
     return float(jnp.max(jnp.abs(grad0)))

@@ -33,19 +33,21 @@ def _prox_coord(penalty, x, step, j):
 
 
 def cd_epoch_xb(Xt_ws, y, beta_ws, Xb, L_ws, offset_ws, datafit, penalty,
-                axis=None):
+                axis=None, w=None):
     """One cyclic CD epoch over the working set; X stored transposed [K, n].
 
     `axis` names a mesh axis the samples are sharded over (mesh-native
     engine, DESIGN.md §6): Xt_ws/y/Xb then hold the local rows and each
     coordinate gradient is completed with one scalar psum. beta stays
-    replicated."""
+    replicated. `w` is the optional per-sample weight vector forwarded to
+    the datafit's raw gradient (None statically elides it, DESIGN.md §9)."""
     K = Xt_ws.shape[0]
 
     def body(i, state):
         beta, Xb = state
         xj = Xt_ws[i]
-        raw = datafit.raw_grad(Xb, y)
+        raw = datafit.raw_grad(Xb, y) if w is None \
+            else datafit.raw_grad(Xb, y, w)
         gj = xj @ raw
         if axis is not None:
             gj = jax.lax.psum(gj, axis)

@@ -1,23 +1,36 @@
 """Datafit terms F(X beta) for Problem (1).
 
 Each datafit implements:
-  value(Xb, y)        -> scalar F(Xb)
-  raw_grad(Xb, y)     -> F'(Xb) per-sample gradient, shape like Xb
-  lipschitz(X)        -> per-coordinate L_j of nabla_j f (Assumption 1)
+  value(Xb, y, w)     -> scalar F(Xb)
+  raw_grad(Xb, y, w)  -> F'(Xb) per-sample gradient, shape like Xb
+  lipschitz(X, w)     -> per-coordinate L_j of nabla_j f (Assumption 1)
   lipschitz_cols(s, n)-> the same L_j from per-column squared norms
                          s_j = ||x_j||^2 and the sample count n (what sparse
                          CSCDesigns precompute; every datafit's L_j is a
-                         closed form of s_j and n)
+                         closed form of s_j and n — weighted solves feed the
+                         w-weighted column norms sum_i w_i x_ij^2 instead)
   grad_offset(p)      -> constant linear term added to X^T raw_grad (0 for most;
                          -1 for the dual SVM whose objective has a -sum(alpha) term)
   HAS_GRAM            -> True when f is quadratic so the Gram fast path
                          G = X_ws^T X_ws (TPU/MXU-friendly inner solver) applies.
-  make_gram(X_ws, y)  -> (G, c) with grad_ws(beta) = G beta - c  (HAS_GRAM only)
+  make_gram(X_ws, y, w)-> (G, c) with grad_ws(beta) = G beta - c  (HAS_GRAM only)
   SAMPLE_MEAN         -> True when value/raw_grad/make_gram normalize by the
                          number of samples n (sample-mean losses). The
                          mesh-native engine uses it to rescale per-shard
                          quantities to the GLOBAL n before psum
                          (DESIGN.md §6); the dual SVM is an un-normalized sum.
+  SUPPORTS_WEIGHTS    -> True when the datafit accepts a sample-weight leaf
+                         (DESIGN.md §9). ``SolveEngine.validate`` rejects
+                         weighted solves for datafits that do not.
+
+Sample weights (DESIGN.md §9): ``w`` is a per-sample multiplier on the loss
+terms — ``None`` statically elides every weight op, so the unweighted program
+is bit-identical to the pre-weight one. SAMPLE_MEAN datafits keep normalizing
+by the *sample count* n, and the solver normalizes user weights to
+``sum(w) = n`` at entry; 0/1 fold-membership weights therefore reproduce the
+row-subset problem exactly (``sum(w * l_i) / n = sum_subset(l_i) / n_subset``
+after the rescale), which is what lets one compiled fused step serve every
+CV/bootstrap replicate of a grid solve.
 """
 from __future__ import annotations
 
@@ -44,24 +57,34 @@ def _register(cls):
     return cls
 
 
+def _wmul(x, w):
+    """w (x) x with w broadcasting over a trailing task axis; identity for
+    w=None (the unweighted program stays bit-identical)."""
+    if w is None:
+        return x
+    return x * w if x.ndim == 1 else x * w[:, None]
+
+
 @_register
 @dataclass(frozen=True)
 class Quadratic:
-    """F(Xb) = ||y - Xb||^2 / (2 n)  (Lasso / elastic-net / MCP regression)."""
+    """F(Xb) = sum_i w_i (y_i - Xb_i)^2 / (2 n)  (Lasso / elastic-net / MCP
+    regression; w=None means unit weights)."""
     HAS_GRAM = True
     SAMPLE_MEAN = True
+    SUPPORTS_WEIGHTS = True
 
-    def value(self, Xb, y):
+    def value(self, Xb, y, w=None):
         n = y.shape[0]
-        return jnp.sum((y - Xb) ** 2) / (2.0 * n)
+        return jnp.sum(_wmul((y - Xb) ** 2, w)) / (2.0 * n)
 
-    def raw_grad(self, Xb, y):
+    def raw_grad(self, Xb, y, w=None):
         n = y.shape[0]
-        return (Xb - y) / n
+        return _wmul(Xb - y, w) / n
 
-    def lipschitz(self, X):
+    def lipschitz(self, X, w=None):
         n = X.shape[0]
-        return jnp.sum(X ** 2, axis=0) / n
+        return jnp.sum(_wmul(X ** 2, w), axis=0) / n
 
     def lipschitz_cols(self, col_sq, n):
         return col_sq / n
@@ -69,31 +92,32 @@ class Quadratic:
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)
 
-    def make_gram(self, X_ws, y):
+    def make_gram(self, X_ws, y, w=None):
         n = y.shape[0]
-        G = X_ws.T @ X_ws / n
-        c = X_ws.T @ y / n
+        G = X_ws.T @ _wmul(X_ws, w) / n
+        c = X_ws.T @ _wmul(y, w) / n
         return G, c
 
 
 @_register
 @dataclass(frozen=True)
 class Logistic:
-    """F(Xb) = (1/n) sum log(1 + exp(-y * Xb)), y in {-1, +1}."""
+    """F(Xb) = (1/n) sum w_i log(1 + exp(-y_i * Xb_i)), y in {-1, +1}."""
     HAS_GRAM = False
     SAMPLE_MEAN = True
+    SUPPORTS_WEIGHTS = True
 
-    def value(self, Xb, y):
+    def value(self, Xb, y, w=None):
         n = y.shape[0]
-        return jnp.sum(jnp.logaddexp(0.0, -y * Xb)) / n
+        return jnp.sum(_wmul(jnp.logaddexp(0.0, -y * Xb), w)) / n
 
-    def raw_grad(self, Xb, y):
+    def raw_grad(self, Xb, y, w=None):
         n = y.shape[0]
-        return -y * jax.nn.sigmoid(-y * Xb) / n
+        return _wmul(-y * jax.nn.sigmoid(-y * Xb), w) / n
 
-    def lipschitz(self, X):
+    def lipschitz(self, X, w=None):
         n = X.shape[0]
-        return jnp.sum(X ** 2, axis=0) / (4.0 * n)
+        return jnp.sum(_wmul(X ** 2, w), axis=0) / (4.0 * n)
 
     def lipschitz_cols(self, col_sq, n):
         return col_sq / (4.0 * n)
@@ -101,7 +125,7 @@ class Logistic:
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)
 
-    def make_gram(self, X_ws, y):
+    def make_gram(self, X_ws, y, w=None):
         raise NotImplementedError("Logistic has no Gram fast path.")
 
 
@@ -113,24 +137,31 @@ class QuadraticSVC:
     Variables alpha in R^n; f(alpha) = 0.5 ||Z^T alpha||^2 - sum(alpha) with
     Z = y[:, None] * X_feat. In Problem (1) form the 'design' is X = Z^T
     (shape d x n) plus a constant linear term -1 (grad_offset).
+
+    Sample weights are rejected at solve() entry (SUPPORTS_WEIGHTS=False):
+    the dual variables are per-*sample* coordinates, so per-sample weighting
+    rescales the box constraint (C_i = w_i C), not the smooth term — weight
+    the penalty, not this datafit.
     """
     HAS_GRAM = True
     SAMPLE_MEAN = False
+    SUPPORTS_WEIGHTS = False
 
-    def value(self, Xb, y):
+    def value(self, Xb, y, w=None):
         # Xb = Z^T alpha (shape d). The -sum(alpha) part is added by the solver
         # through grad_offset bookkeeping; value() here is only the smooth
         # quadratic part used for Anderson acceptance *differences*, where the
         # linear term is handled explicitly by the caller.
-        del y
+        del y, w
         return 0.5 * jnp.sum(Xb ** 2)
 
-    def raw_grad(self, Xb, y):
-        del y
+    def raw_grad(self, Xb, y, w=None):
+        del y, w
         return Xb
 
-    def lipschitz(self, X):
+    def lipschitz(self, X, w=None):
         # X = Z^T (d x n): L_j = ||Z_j||^2 = ||X_:j||^2
+        del w
         return jnp.sum(X ** 2, axis=0)
 
     def lipschitz_cols(self, col_sq, n):
@@ -140,8 +171,8 @@ class QuadraticSVC:
     def grad_offset(self, p, dtype):
         return -jnp.ones((p,), dtype=dtype)
 
-    def make_gram(self, X_ws, y):
-        del y
+    def make_gram(self, X_ws, y, w=None):
+        del y, w
         G = X_ws.T @ X_ws
         c = jnp.ones((X_ws.shape[1],), dtype=X_ws.dtype)
         return G, c
@@ -150,28 +181,31 @@ class QuadraticSVC:
 @_register
 @dataclass(frozen=True)
 class MultitaskQuadratic:
-    """F(XW) = ||Y - XW||_F^2 / (2 n); blocks = rows of W (paper Appendix D).
+    """F(XW) = sum_i w_i ||Y_i - (XW)_i||^2 / (2 n); blocks = rows of W
+    (paper Appendix D).
 
     Y is [n, T] and the coefficients W are [p, T]: every engine stage treats
     the rows W_j: as block coordinates (DESIGN.md §8) — pair with the block
     penalties (BlockL1 / BlockMCP) for shared row support across tasks.
     Runs on dense, CSC-sparse, and mesh-sharded designs; the Pallas backend
-    is scalar-only and rejects it at entry.
+    is scalar-only and rejects it at entry. Sample weights ``w`` stay [n]
+    (one weight per sample, shared across tasks).
     """
     HAS_GRAM = True
     SAMPLE_MEAN = True
+    SUPPORTS_WEIGHTS = True
 
-    def value(self, Xb, y):
+    def value(self, Xb, y, w=None):
         n = y.shape[0]
-        return jnp.sum((y - Xb) ** 2) / (2.0 * n)
+        return jnp.sum(_wmul((y - Xb) ** 2, w)) / (2.0 * n)
 
-    def raw_grad(self, Xb, y):
+    def raw_grad(self, Xb, y, w=None):
         n = y.shape[0]
-        return (Xb - y) / n
+        return _wmul(Xb - y, w) / n
 
-    def lipschitz(self, X):
+    def lipschitz(self, X, w=None):
         n = X.shape[0]
-        return jnp.sum(X ** 2, axis=0) / n
+        return jnp.sum(_wmul(X ** 2, w), axis=0) / n
 
     def lipschitz_cols(self, col_sq, n):
         return col_sq / n
@@ -179,8 +213,8 @@ class MultitaskQuadratic:
     def grad_offset(self, p, dtype):
         return jnp.zeros((p,), dtype=dtype)
 
-    def make_gram(self, X_ws, y):
+    def make_gram(self, X_ws, y, w=None):
         n = y.shape[0]
-        G = X_ws.T @ X_ws / n
-        c = X_ws.T @ y / n          # [K, T]
+        G = X_ws.T @ _wmul(X_ws, w) / n
+        c = X_ws.T @ _wmul(y, w) / n          # [K, T]
         return G, c

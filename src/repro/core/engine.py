@@ -44,6 +44,17 @@ and scatters move [K, T] blocks; the Gram inner solve is the K x K Gram
 against a [K, T] right-hand side; the task dimension is replicated on every
 mesh. The only scalar-only backend is Pallas (rejected at entry by
 ``SolveEngine.validate``).
+
+Sample weights (DESIGN.md §9): every step takes an optional per-sample
+weight vector ``w`` [n], sharded with the data mesh axis exactly like y/Xb
+and forwarded to the datafit's value/raw_grad/make_gram — the design
+primitives (score / gather / incremental Xb) are untouched because the
+weights enter through the raw gradient. ``w=None`` statically elides every
+weight op, so the unweighted trace is the bit-identical pre-weight program.
+The chunked driver additionally accepts *per-lane* weights [C, n] (and the
+matching per-lane Lipschitz constants [C, p]): fold-membership 0/1 weights
+make every CV/bootstrap replicate of a grid solve share one static shape,
+so one compiled step per bucket serves the whole (fold x lambda) grid.
 """
 from __future__ import annotations
 
@@ -118,8 +129,9 @@ class Design:
         """X @ beta on the global design ([p] or multitask [p, T])."""
         raise NotImplementedError
 
-    def lipschitz(self, datafit):
-        """Per-coordinate Lipschitz constants L_j of nabla_j f."""
+    def lipschitz(self, datafit, w=None):
+        """Per-coordinate Lipschitz constants L_j of nabla_j f (`w`:
+        optional per-sample weights, DESIGN.md §9)."""
         raise NotImplementedError
 
     def in_spec(self, data_axis, model_axis):
@@ -173,8 +185,10 @@ class DenseDesign(Design):
     def matvec(self, beta):
         return self.X @ beta
 
-    def lipschitz(self, datafit):
-        return datafit.lipschitz(self.X)
+    def lipschitz(self, datafit, w=None):
+        if w is None:
+            return datafit.lipschitz(self.X)
+        return datafit.lipschitz(self.X, w)
 
     def col_sq_norms(self):
         return jnp.sum(self.X * self.X, axis=0)
@@ -225,6 +239,18 @@ def _lin(offset, beta):
     return jnp.vdot(offset, beta)
 
 
+# Defensive dispatch of the optional sample-weight argument: w=None calls the
+# two-argument form, so pre-weight custom datafits keep working and the
+# unweighted trace is the bit-identical pre-weight program (DESIGN.md §9).
+def _df_value(datafit, Xb, y, w):
+    return datafit.value(Xb, y) if w is None else datafit.value(Xb, y, w)
+
+
+def _df_raw(datafit, Xb, y, w):
+    return datafit.raw_grad(Xb, y) if w is None \
+        else datafit.raw_grad(Xb, y, w)
+
+
 def _apply_T(Xt_ws, beta):
     """X_ws @ beta given X stored transposed [K, n]."""
     if beta.ndim == 2:
@@ -265,6 +291,8 @@ class WorkingSetContext:
     G: jax.Array = None              # [K, K] (Gram solvers only)
     c: jax.Array = None              # [K(, T)] (Gram solvers only)
     axis: str = None                 # data-shard mesh axis (sharded Xb form)
+    w: jax.Array = None              # per-sample weights (Xb solvers only;
+                                     # the Gram form bakes w into G/c)
     Xb_base: jax.Array = None        # Xb0 - X_ws beta_ws0: residual of the
                                      # nonzero coordinates OUTSIDE ws (Xb
                                      # solvers; Box pins coords at C with
@@ -301,12 +329,15 @@ class _ShardedDatafit:
     def sample_mean(self):
         return self.base.SAMPLE_MEAN
 
-    def raw_grad(self, Xb, y):
-        raw = self.base.raw_grad(Xb, y)
+    def raw_grad(self, Xb, y, w=None):
+        # w multiplies per-sample terms, so the static 1/n_shards rescale is
+        # unchanged: the solver pre-normalizes weights to sum(w) = n_glob and
+        # the datafit keeps normalizing by the (local) sample count
+        raw = _df_raw(self.base, Xb, y, w)
         return raw * self.corr if self.corr != 1.0 else raw
 
-    def value(self, Xb, y):
-        v = self.base.value(Xb, y)
+    def value(self, Xb, y, w=None):
+        v = _df_value(self.base, Xb, y, w)
         return _psum_if(v * self.corr if self.corr != 1.0 else v, self.axis)
 
 
@@ -438,16 +469,16 @@ class XbSolver(SubproblemSolver):
                                     epochs=1)
         return cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
                            ctx.offset_ws, ctx.datafit, ctx.penalty,
-                           axis=ctx.axis)
+                           axis=ctx.axis, w=ctx.w)
 
     def objective(self, ctx, beta, aux):
         # ctx.datafit.value is globally reduced already in sharded contexts
         # (_ShardedDatafit psums internally); the K-sized terms are replicated
-        return (ctx.datafit.value(aux, ctx.y) + _lin(ctx.offset_ws, beta)
-                + ctx.penalty.value(beta))
+        return (_df_value(ctx.datafit, aux, ctx.y, ctx.w)
+                + _lin(ctx.offset_ws, beta) + ctx.penalty.value(beta))
 
     def gradient(self, ctx, beta, aux):
-        grad = ctx.Xt_ws @ ctx.datafit.raw_grad(aux, ctx.y)
+        grad = ctx.Xt_ws @ _df_raw(ctx.datafit, aux, ctx.y, ctx.w)
         if ctx.axis is not None:
             grad = jax.lax.psum(grad, ctx.axis)
         return grad + (ctx.offset_ws[:, None] if grad.ndim == 2
@@ -516,17 +547,19 @@ class SolveEngine:
     # (all collectives/masks statically elided via _live_axes -> None, None).
     # `design` is already the LOCAL block (local_block() stripped any stacked
     # shard axis in the caller).
-    def _score_pass(self, design, y, beta, Xb, L, offset, datafit, penalty):
+    def _score_pass(self, design, y, w, beta, Xb, L, offset, datafit,
+                    penalty):
         """Shared head of the fused step and the probe.
 
         Returns (sdf, grad, scores, kkt, gsupp, gcount, obj): grad/scores are
         this shard's feature block with the data-axis reduction done; kkt,
-        gcount and obj are replicated scalars.
+        gcount and obj are replicated scalars. `w` is the optional
+        per-sample weight vector (local rows on a mesh, like y/Xb).
         """
         cfg = self.config
         da, ma = self._live_axes()
         sdf = _ShardedDatafit(datafit, self._n_data_shards(), da)
-        raw = sdf.raw_grad(Xb, y)
+        raw = sdf.raw_grad(Xb, y, w)
         grad = design.score(raw, backend=cfg.backend)
         grad = _psum_if(grad, da) + (offset[:, None] if grad.ndim == 2
                                      else offset)
@@ -538,18 +571,18 @@ class SolveEngine:
         gsupp = penalty.generalized_support(beta)
         gcount = _psum_if(jnp.sum(gsupp, dtype=jnp.int32), ma)
         if ma is None:
-            obj = sdf.value(Xb, y) + _lin(offset, beta) + \
+            obj = sdf.value(Xb, y, w) + _lin(offset, beta) + \
                 penalty.value(beta)
         else:
-            obj = sdf.value(Xb, y) + \
+            obj = sdf.value(Xb, y, w) + \
                 jax.lax.psum(_lin(offset, beta) + penalty.value(beta), ma)
         return sdf, grad, scores, kkt, gsupp, gcount, obj
 
-    def _step_body(self, design, y, beta, Xb, L, offset, datafit, penalty,
+    def _step_body(self, design, y, w, beta, Xb, L, offset, datafit, penalty,
                    tol, eps_frac, bucket):
         """Fused: score -> select -> gather -> inner solve -> scatter.
 
-        On a mesh: local views design [n_loc, width], y/Xb [n_loc],
+        On a mesh: local views design [n_loc, width], y/w/Xb [n_loc],
         beta/L/offset [width]; working-set indices are global; the K-sized
         subproblem runs replicated over the whole mesh (Gram form) or keeps
         its rows data-sharded with per-coordinate psums (Xb form).
@@ -568,7 +601,7 @@ class SolveEngine:
         width = design.width
         n_glob = design.n_rows * self._n_data_shards()
         sdf, grad, scores, kkt, gsupp, gcount0, obj = self._score_pass(
-            design, y, beta, Xb, L, offset, datafit, penalty)
+            design, y, w, beta, Xb, L, offset, datafit, penalty)
 
         ws = select_working_set_local(scores, gsupp, bucket, ma)
         mine, loc = shard_ws_mask(ws, width, ma)
@@ -595,11 +628,14 @@ class SolveEngine:
             if da is None:
                 # samples unsplit: honor the datafit's own make_gram (c is
                 # discarded — it assumes support ⊆ ws; see linearization)
-                G, _ = datafit.make_gram(X_ws, y)
+                G, _ = datafit.make_gram(X_ws, y) if w is None \
+                    else datafit.make_gram(X_ws, y, w)
             else:
                 # exact distributed Gram: one sharded MXU matmul + psum; the
                 # K x K subproblem and its Anderson-CD run replicated
-                G = jax.lax.psum(X_ws.T @ X_ws, da)
+                # (weights enter as X_ws^T diag(w) X_ws on the local rows)
+                Xw = X_ws if w is None else w[:, None] * X_ws
+                G = jax.lax.psum(X_ws.T @ Xw, da)
                 if sdf.sample_mean:
                     G = G / n_glob
             # linearize at the incoming iterate: grad_ws(b) = G (b - b0) +
@@ -630,7 +666,7 @@ class SolveEngine:
             # Xb_base carries the residual of nonzero coordinates OUTSIDE
             # ws so Anderson refresh cannot drop them
             ctx = WorkingSetContext(X_ws.T, y, L_ws, offset_ws, ctx_df,
-                                    pen_ws, axis=da,
+                                    pen_ws, axis=da, w=w,
                                     Xb_base=Xb - _apply_T(X_ws.T, beta_ws0))
 
             def run(_):
@@ -650,46 +686,49 @@ class SolveEngine:
             ma)
         return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov
 
-    def _sharded_step(self, design, y, beta, Xb, L, offset, datafit, penalty,
-                      tol, eps_frac, bucket):
+    def _sharded_step(self, design, y, w, beta, Xb, L, offset, datafit,
+                      penalty, tol, eps_frac, bucket):
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
         # multitask: y/Xb are [n, T], beta is [p, T] — the task dimension is
-        # explicitly replicated; L/offset stay 1-D feature vectors
+        # explicitly replicated; L/offset stay 1-D feature vectors and the
+        # sample weights w stay a 1-D sample vector (spec = ys)
         T = y.ndim - 1
         yt, bt = task_spec(ys, T), task_spec(bs, T)
 
-        def body(design, y, beta, Xb, L, offset, datafit, penalty, tol,
+        def body(design, y, w, beta, Xb, L, offset, datafit, penalty, tol,
                  eps_frac):
-            return self._step_body(design, y, beta, Xb, L, offset, datafit,
-                                   penalty, tol, eps_frac, bucket)
+            return self._step_body(design, y, w, beta, Xb, L, offset,
+                                   datafit, penalty, tol, eps_frac, bucket)
 
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(xs, yt, bt, yt, bs, bs, P(), P(), P(), P()),
+            in_specs=(xs, yt, ys, bt, yt, bs, bs, P(), P(), P(), P()),
             out_specs=(bt, yt, P(), P(), P(), P(), P()),
-            check_vma=False)(design, y, beta, Xb, L, offset, datafit,
+            check_vma=False)(design, y, w, beta, Xb, L, offset, datafit,
                              penalty, tol, eps_frac)
 
-    def _outer_step(self, design, y, beta, Xb, L, offset, datafit, penalty,
-                    tol, eps_frac, *, bucket):
+    def _outer_step(self, design, y, w, beta, Xb, L, offset, datafit,
+                    penalty, tol, eps_frac, *, bucket):
         # executes once per (bucket, arg-structure) compilation: the counter
         # is the proof behind "one compile per ws bucket across a path"
-        # (sparse designs and multitask solves get their own key spaces so
-        # mixed use of a shared engine stays observable — [p] and [p, T]
-        # traces are distinct compilations)
+        # (sparse designs, multitask and weighted solves get their own key
+        # spaces so mixed use of a shared engine stays observable — [p] and
+        # [p, T] traces are distinct compilations, as are weighted ones)
         key = bucket if design.KIND == "dense" else (design.KIND, bucket)
         if beta.ndim == 2:
             key = ("mt", key)
+        if w is not None:
+            key = ("wtd", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         if self.mesh is not None:
-            return self._sharded_step(design, y, beta, Xb, L, offset,
+            return self._sharded_step(design, y, w, beta, Xb, L, offset,
                                       datafit, penalty, tol, eps_frac,
                                       bucket)
-        return self._step_body(design, y, beta, Xb, L, offset, datafit,
+        return self._step_body(design, y, w, beta, Xb, L, offset, datafit,
                                penalty, tol, eps_frac, bucket)
 
-    def _probe(self, design, y, beta, Xb, L, offset, datafit, penalty):
+    def _probe(self, design, y, w, beta, Xb, L, offset, datafit, penalty):
         """Pre-loop probe: kkt/|gsupp|/obj of the initial iterate (sizes the
         first bucket under warm starts). One launch per solve, not per iter."""
         if self.mesh is not None:
@@ -698,37 +737,45 @@ class SolveEngine:
             T = y.ndim - 1
             yt, bt = task_spec(ys, T), task_spec(bs, T)
 
-            def body(design, y, beta, Xb, L, offset, datafit, penalty):
+            def body(design, y, w, beta, Xb, L, offset, datafit, penalty):
                 _, _, _, kkt, _, gcount, obj = self._score_pass(
-                    design.local_block(), y, beta, Xb, L, offset, datafit,
+                    design.local_block(), y, w, beta, Xb, L, offset, datafit,
                     penalty)
                 return kkt, gcount, obj
 
             return shard_map(
                 body, mesh=self.mesh,
-                in_specs=(xs, yt, bt, yt, bs, bs, P(), P()),
+                in_specs=(xs, yt, ys, bt, yt, bs, bs, P(), P()),
                 out_specs=(P(), P(), P()),
-                check_vma=False)(design, y, beta, Xb, L, offset, datafit,
+                check_vma=False)(design, y, w, beta, Xb, L, offset, datafit,
                                  penalty)
         _, _, _, kkt, _, gcount, obj = self._score_pass(
-            design.local_block(), y, beta, Xb, L, offset, datafit, penalty)
+            design.local_block(), y, w, beta, Xb, L, offset, datafit,
+            penalty)
         return kkt, gcount, obj
 
     # ---------------------------------------------------- multi-lambda chunk
-    def _chunk_loop(self, step_fn, p, lams, betas, Xbs, tol, max_outer,
+    def _chunk_loop(self, step_fn, p, lams, betas, Xbs, w, L, tol, max_outer,
                     growth, bucket):
         """The device-resident chunk outer loop, shared by the dense and the
-        sharded drivers. `step_fn(lam, beta, Xb)` is one fused outer step for
-        one lane; `p` is the GLOBAL feature count (bucket-escalation test)."""
+        sharded drivers. `step_fn(lam, beta, Xb, w, L)` is one fused outer
+        step for one lane; `p` is the GLOBAL feature count
+        (bucket-escalation test). `w` may be None (unweighted), [n] (one
+        weight vector shared by every lane) or [C, n] (per-lane weights —
+        the CV/bootstrap grid, DESIGN.md §9); `L` is the matching [p] shared
+        or [C, p] per-lane Lipschitz constants."""
+        w_ax = 0 if (w is not None and w.ndim == 2) else None
+        L_ax = 0 if L.ndim == 2 else None
 
-        def lane(lam, beta, Xb):
-            return step_fn(lam, beta, Xb)[:6]     # drop the covered flag
+        def lane(lam, beta, Xb, w_l, L_l):
+            return step_fn(lam, beta, Xb, w_l, L_l)[:6]  # drop covered flag
 
-        vstep = jax.vmap(lane, in_axes=(0, 0, 0))
+        vstep = jax.vmap(lane, in_axes=(0, 0, 0, w_ax, L_ax))
 
         def body(state):
             betas, Xbs, kkts, objs, gcounts, n_eps, it = state
-            betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas, Xbs)
+            betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas, Xbs,
+                                                          w, L)
             return betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1
 
         def cond(state):
@@ -750,7 +797,8 @@ class SolveEngine:
         return jax.lax.while_loop(cond, body, init)
 
     def _chunk_solve(self, design, y, lams, betas, Xbs, L, offset, datafit,
-                     penalty, tol, eps_frac, max_outer, growth, *, bucket):
+                     penalty, tol, eps_frac, max_outer, growth, w, *,
+                     bucket):
         """Device-resident path chunk: vmap the fused step over a chunk of
         lambdas and drive the *outer* loop with lax.while_loop, so the host
         syncs once per chunk instead of once per (lambda, outer iteration).
@@ -760,7 +808,10 @@ class SolveEngine:
         host can escalate the bucket and resume from the partial state.
         On a mesh the lanes are vmapped INSIDE shard_map (lanes x devices:
         lambda is a penalty leaf, the collectives batch through vmap), so
-        the whole sharded sweep is still one program per bucket."""
+        the whole sharded sweep is still one program per bucket. Per-lane
+        weights [C, n] (with per-lane L [C, p]) turn the lambda sweep into a
+        (fold x lambda) grid sweep: the weight and Lipschitz leaves ride the
+        same vmap as lambda (DESIGN.md §9)."""
         # sparse designs get their own key space, like _outer_step, so mixed
         # dense/sparse use of a shared engine stays observable
         key = ("chunk", bucket, int(lams.shape[0])) \
@@ -768,74 +819,86 @@ class SolveEngine:
             else ("chunk", design.KIND, bucket, int(lams.shape[0]))
         if betas.ndim == 3:               # [C, p, T] multitask lanes
             key = ("mt", key)
+        if w is not None:
+            key = ("wtd", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         p_glob = design.shape[1]
 
         if self.mesh is None:
-            def step(lam, beta, Xb):
+            def step(lam, beta, Xb, w_l, L_l):
                 pen = dataclasses.replace(penalty, lam=lam)
-                return self._step_body(design, y, beta, Xb, L, offset,
+                return self._step_body(design, y, w_l, beta, Xb, L_l, offset,
                                        datafit, pen, tol, eps_frac, bucket)
 
-            return self._chunk_loop(step, p_glob, lams, betas, Xbs, tol,
-                                    max_outer, growth, bucket)
+            return self._chunk_loop(step, p_glob, lams, betas, Xbs, w, L,
+                                    tol, max_outer, growth, bucket)
 
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
         T = y.ndim - 1
         # [C, p(, T)] lanes x features and [C, n(, T)] lanes x samples, the
         # task dimension (multitask sweeps) explicitly replicated — on the
-        # shared y [n, T] too
+        # shared y [n, T] too; weights are [n] (shared) or [C, n] lanes over
+        # data-sharded samples, L is [p] shared or [C, p] lanes x features
         yt = task_spec(ys, T)
         lane_b = P(None, *task_spec(bs, T))
         lane_x = P(None, *yt)
+        w_spec = P() if w is None else (ys if w.ndim == 1 else P(None, *ys))
+        L_spec = bs if L.ndim == 1 else P(None, *bs)
 
         def body(design, y, lams, betas, Xbs, L, offset, datafit, penalty,
-                 tol, eps_frac, max_outer, growth):
-            def step(lam, beta, Xb):
+                 tol, eps_frac, max_outer, growth, w):
+            def step(lam, beta, Xb, w_l, L_l):
                 pen = dataclasses.replace(penalty, lam=lam)
-                return self._step_body(design, y, beta, Xb, L, offset,
+                return self._step_body(design, y, w_l, beta, Xb, L_l, offset,
                                        datafit, pen, tol, eps_frac, bucket)
 
-            return self._chunk_loop(step, p_glob, lams, betas, Xbs, tol,
-                                    max_outer, growth, bucket)
+            return self._chunk_loop(step, p_glob, lams, betas, Xbs, w, L,
+                                    tol, max_outer, growth, bucket)
 
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(xs, yt, P(), lane_b, lane_x, bs, bs, P(), P(), P(),
-                      P(), P(), P()),
+            in_specs=(xs, yt, P(), lane_b, lane_x, L_spec, bs, P(), P(),
+                      P(), P(), P(), P(), w_spec),
             out_specs=(lane_b, lane_x, P(), P(), P(), P(), P()),
             check_vma=False)(design, y, lams, betas, Xbs, L, offset, datafit,
-                             penalty, tol, eps_frac, max_outer, growth)
+                             penalty, tol, eps_frac, max_outer, growth, w)
 
     # ------------------------------------------------------------- host API
     def step(self, bucket, design, y, beta, Xb, L, offset, datafit, penalty,
-             tol, eps_frac):
+             tol, eps_frac, w=None):
         """One fused outer iteration. Single device dispatch; the caller does
-        the (single) scalar readback."""
+        the (single) scalar readback. ``w`` is the optional normalized
+        per-sample weight vector (DESIGN.md §9)."""
         self.n_dispatches += 1
-        return self._jstep(design, y, beta, Xb, L, offset, datafit, penalty,
-                           tol, eps_frac, bucket=bucket)
+        return self._jstep(design, y, w, beta, Xb, L, offset, datafit,
+                           penalty, tol, eps_frac, bucket=bucket)
 
-    def probe(self, design, y, beta, Xb, L, offset, datafit, penalty):
+    def probe(self, design, y, beta, Xb, L, offset, datafit, penalty,
+              w=None):
         """One pre-loop launch returning (kkt, |gsupp|, obj) of the
         initial iterate (sizes the first bucket under warm starts)."""
-        return self._jprobe(design, y, beta, Xb, L, offset, datafit, penalty)
+        return self._jprobe(design, y, w, beta, Xb, L, offset, datafit,
+                            penalty)
 
     def chunk(self, bucket, design, y, lams, betas, Xbs, L, offset, datafit,
-              penalty, tol, eps_frac, max_outer, growth=2):
+              penalty, tol, eps_frac, max_outer, growth=2, w=None):
         """One device-resident multi-lambda chunk solve. Returns the final
-        (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state."""
+        (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state. ``w`` may
+        be None, a shared [n] weight vector, or per-lane [C, n] weights
+        (with ``L`` then the per-lane [C, p] Lipschitz constants) — the
+        grid-driver form (DESIGN.md §9)."""
         if self.config.backend == "pallas":
             raise ValueError(
                 "chunked (vmapped) path solving requires backend='jax'; the "
                 "Pallas kernels are not batchable under vmap")
         self.n_dispatches += 1
         return self._jchunk(design, y, lams, betas, Xbs, L, offset, datafit,
-                            penalty, tol, eps_frac, max_outer, growth,
+                            penalty, tol, eps_frac, max_outer, growth, w,
                             bucket=bucket)
 
-    def validate(self, datafit, penalty, n_tasks, shape=None, design=None):
+    def validate(self, datafit, penalty, n_tasks, shape=None, design=None,
+                 weighted=False):
         """Static feasibility checks, raised eagerly at ``solve()`` entry.
 
         Every combination the engine cannot run raises here — before any
@@ -843,7 +906,22 @@ class SolveEngine:
         supported matrix (datafit x penalty x dense/sparse/mesh/pallas) is
         in README.md; since the block-coordinate generalization, multitask
         datafits (2-D coefficients) run on every backend except Pallas.
+        ``weighted=True`` additionally checks the sample-weight leaf is
+        runnable (the datafit declares SUPPORTS_WEIGHTS; the Pallas epoch
+        kernels hard-code unweighted raw gradients and reject it).
         """
+        if weighted:
+            if not getattr(datafit, "SUPPORTS_WEIGHTS", False):
+                raise NotImplementedError(
+                    f"sample_weight=...: datafit {type(datafit).__name__} "
+                    f"does not support sample weights (declare "
+                    f"SUPPORTS_WEIGHTS=True and accept w in "
+                    f"value/raw_grad/lipschitz/make_gram)")
+            if self.config.backend == "pallas":
+                raise NotImplementedError(
+                    "sample_weight=...: the Pallas epoch kernels hard-code "
+                    "unweighted raw gradients; use backend='jax' "
+                    "(use_kernels=False) for weighted solves")
         if design is not None and design.KIND == "csc":
             if self.mesh is not None and \
                     self.mesh.shape[self.data_axis] > 1:

@@ -5,9 +5,17 @@ any datafit from `repro.core.datafits` pairs with any penalty from
 `repro.core.penalties`. Estimators hold hyper-parameters, `fit(X, y)` runs
 Algorithm 1, and the fitted state lives in sklearn-style trailing-underscore
 attributes (`coef_`, `n_iter_`, ...). No sklearn dependency — duck-typed API.
+
+``fit(X, y, sample_weight=...)`` threads per-sample weights through the
+weighted datafits (DESIGN.md §9; negative weights rejected at entry), and
+the CV estimators (``LassoCV`` / ``MCPRegressionCV`` /
+``SparseLogisticRegressionCV``) tune lambda by solving the whole
+(fold x lambda) grid simultaneously through ``cross_val_path`` — or by
+AIC/BIC/EBIC on a single full-data path (``criterion=``).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -21,7 +29,9 @@ from .solver import solve
 
 __all__ = ["GeneralizedLinearEstimator", "Lasso", "ElasticNet",
            "MCPRegression", "SCADRegression", "SparseLogisticRegression",
-           "LinearSVC", "MultiTaskLasso", "MultiTaskMCP"]
+           "LinearSVC", "MultiTaskLasso", "MultiTaskMCP",
+           "LassoCV", "MCPRegressionCV", "SparseLogisticRegressionCV",
+           "information_criterion"]
 
 # datafits whose fit(X, y) supports fit_intercept=True via X/y centering
 # (quadratic losses: the centered problem's solution is the un-centered
@@ -34,6 +44,32 @@ def _is_sparse_input(X):
     if isinstance(X, Design):
         return X.KIND != "dense"
     return is_scipy_sparse(X)
+
+
+def _weighted_means(Xd, yd, sample_weight):
+    """(column means of X, mean of y), weighted when sample_weight is given
+    (the correct centering for weighted intercept fits)."""
+    if sample_weight is None:
+        return Xd.mean(axis=0), yd.mean(axis=0)
+    w = np.asarray(sample_weight, np.float64)
+    s = w.sum()
+    return (w @ Xd) / s, (w @ yd) / s
+
+
+def _center_data(X, y, sample_weight):
+    """fit_intercept centering shared by the base and CV fit paths:
+    returns (X - X_mean, y - y_mean, X_mean, y_mean) with weighted means
+    when sample_weight is given; sparse inputs reject (centering would
+    densify the design)."""
+    if _is_sparse_input(X):
+        raise NotImplementedError(
+            "fit_intercept=True would densify a sparse design "
+            "(column centering); pre-center or add a constant "
+            "feature instead")
+    Xd = np.asarray(X.X if isinstance(X, Design) else X)
+    X_mean, y_mean = _weighted_means(Xd, np.asarray(y), sample_weight)
+    return (jnp.asarray(Xd - X_mean), jnp.asarray(np.asarray(y) - y_mean),
+            X_mean, y_mean)
 
 
 def _design_matmul(X, coef):
@@ -86,30 +122,26 @@ class GeneralizedLinearEstimator:
                 f"datafits (X/y centering), not "
                 f"{type(self.datafit).__name__}; center the data beforehand")
 
-    def fit(self, X, y):
+    def fit(self, X, y, sample_weight=None):
         """Run Algorithm 1 on (X, y); fitted state lands on ``coef_``,
         ``intercept_``, ``kkt_``, ``converged_``, ``n_iter_``,
         ``n_epochs_``, ``result_``. ``y`` may be ``[n]`` or ``[n, T]``
-        (multitask datafits; ``coef_`` is then ``[p, T]``)."""
+        (multitask datafits; ``coef_`` is then ``[p, T]``).
+        ``sample_weight`` (non-negative ``[n]``, rejected at entry
+        otherwise) weights the datafit per sample — the sklearn-compatible
+        hook over the solver's weight leaf (DESIGN.md §9); with
+        ``fit_intercept=True`` the centering uses the weighted means."""
         y = jnp.asarray(y)
         self.intercept_ = 0.0
         X_mean = y_mean = None
         if self.fit_intercept:
-            if _is_sparse_input(X):
-                raise NotImplementedError(
-                    "fit_intercept=True would densify a sparse design "
-                    "(column centering); pre-center or add a constant "
-                    "feature instead")
-            Xd = np.asarray(X.X if isinstance(X, Design) else X)
-            X_mean = Xd.mean(axis=0)
-            y_mean = np.asarray(y).mean(axis=0)
-            X = jnp.asarray(Xd - X_mean)
-            y = jnp.asarray(np.asarray(y) - y_mean)
+            X, y, X_mean, y_mean = _center_data(X, y, sample_weight)
         X = as_design(X)
         res = solve(X, y, self.datafit, self.penalty, tol=self.tol,
                     max_outer=self.max_outer, max_epochs=self.max_epochs,
                     M=self.M, p0=self.p0, use_kernels=self.use_kernels,
-                    engine=self.engine, **self.solve_kw)
+                    engine=self.engine, sample_weight=sample_weight,
+                    **self.solve_kw)
         self.coef_ = np.asarray(res.beta)
         if self.fit_intercept:
             self.intercept_ = y_mean - X_mean @ self.coef_
@@ -196,7 +228,15 @@ class LinearSVC(GeneralizedLinearEstimator):
         super().__init__(QuadraticSVC(), Box(C), **kw)
         self.C = C
 
-    def fit(self, X, y):
+    def fit(self, X, y, sample_weight=None):
+        """Fit the dual SVM. ``sample_weight`` is rejected: per-sample
+        weights rescale the box constraint (C_i = w_i C), not the smooth
+        dual datafit (see ``QuadraticSVC``)."""
+        if sample_weight is not None:
+            raise NotImplementedError(
+                "sample_weight=...: the dual SVM weights its box "
+                "constraint, not the smooth datafit; pass a weighted Box "
+                "penalty instead")
         y = jnp.asarray(y)
         if is_scipy_sparse(X):
             yn = np.asarray(y)
@@ -246,3 +286,235 @@ class MultiTaskMCP(GeneralizedLinearEstimator):
     def __init__(self, alpha=1.0, gamma=3.0, **kw):
         super().__init__(MultitaskQuadratic(), BlockMCP(alpha, gamma), **kw)
         self.alpha, self.gamma = alpha, gamma
+
+
+# --------------------------------------------------------- model selection
+def information_criterion(criterion, datafit, loss, n, p, df, *,
+                          ebic_gamma=0.5):
+    """AIC / BIC / EBIC value(s) of fitted model(s) (yaglm-style selection).
+
+    Parameters
+    ----------
+    criterion : {"aic", "bic", "ebic"}
+        Penalty on the model dimension: 2 (AIC), log n (BIC), or
+        log n + 2 * ebic_gamma * log p (EBIC — the high-dimensional
+        correction of Chen & Chen).
+    datafit : object
+        Decides the goodness-of-fit transform: quadratic datafits use the
+        Gaussian profile ``n log(MSE)``; other losses use the deviance
+        ``2 n * loss``.
+    loss : array_like
+        Mean datafit loss per model (the datafit's ``value`` semantics:
+        half-MSE for quadratic, mean log-loss for logistic).
+    n, p : int
+        Sample and feature counts.
+    df : array_like
+        Degrees of freedom per model (nonzero count — exact for the Lasso,
+        the standard surrogate for the non-convex penalties).
+    ebic_gamma : float, optional
+        EBIC feature-dimension exponent in [0, 1].
+
+    Returns
+    -------
+    np.ndarray
+        The criterion values (lower is better), shaped like ``loss``.
+    """
+    loss = np.asarray(loss, np.float64)
+    df = np.asarray(df, np.float64)
+    pens = {"aic": 2.0, "bic": np.log(n),
+            "ebic": np.log(n) + 2.0 * ebic_gamma * np.log(max(p, 1))}
+    if criterion not in pens:
+        raise ValueError(f"unknown criterion {criterion!r}; supported: "
+                         f"'aic' | 'bic' | 'ebic' (or 'cv')")
+    if isinstance(datafit, (Quadratic, MultitaskQuadratic)):
+        # value() is half the MSE: Gaussian profile likelihood n log(MSE)
+        fit = n * np.log(np.maximum(2.0 * loss, 1e-300))
+    else:
+        fit = 2.0 * n * loss                      # deviance
+    return fit + pens[criterion] * df
+
+
+class _CVEstimatorMixin:
+    """Shared fit logic of the CV estimators: sweep a lambda grid — the
+    whole (fold x lambda) grid simultaneously for ``criterion='cv'``
+    (``cross_val_path``), or one full-data chunked path scored by
+    AIC/BIC/EBIC — then expose the winning model sklearn-style
+    (``alpha_``, ``alphas_``, ``coef_``, ...)."""
+
+    _ENGINE_KEYS = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
+                    "use_kernels")
+
+    def _init_grid(self, alphas, n_alphas, eps, cv, criterion, ebic_gamma,
+                   vmap_chunk, seed):
+        if criterion not in ("cv", "aic", "bic", "ebic"):
+            raise ValueError(f"unknown criterion {criterion!r}; supported: "
+                             f"'cv' | 'aic' | 'bic' | 'ebic'")
+        # kwargs the grid drivers cannot honor must not silently fork the
+        # tuning sweep's solver away from the refit's (use_ws, beta0, ...)
+        extra = set(self.solve_kw) \
+            - {"mesh", "data_axis", "model_axis"} - set(self._ENGINE_KEYS)
+        if extra:
+            raise ValueError(
+                f"CV estimators do not support solve kwargs "
+                f"{sorted(extra)}: the grid drivers cannot honor them, so "
+                f"the tuning sweep would run a different solver than the "
+                f"refit")
+        self.alphas = alphas
+        self.n_alphas = n_alphas
+        self.eps = eps
+        self.cv = cv
+        self.criterion = criterion
+        self.ebic_gamma = ebic_gamma
+        self.vmap_chunk = vmap_chunk
+        self.seed = seed
+
+    def _grid_kw(self):
+        """Engine/mesh kwargs forwarded to the path drivers — the SAME
+        solver configuration the refit uses, so the tuning solves and the
+        final model never run different engines."""
+        kw = {k: v for k, v in self.solve_kw.items()
+              if k in ("mesh", "data_axis", "model_axis")
+              or k in self._ENGINE_KEYS}
+        kw.update(M=self.M, max_epochs=self.max_epochs,
+                  use_kernels=self.use_kernels, engine=self.engine)
+        return kw
+
+    def fit(self, X, y, sample_weight=None):
+        """Tune lambda on (X, y) and fit the winning model.
+
+        ``criterion='cv'`` solves the full (fold x lambda) grid through the
+        fused chunked step (every fold is a 0/1 weight leaf on the shared
+        data; one compiled step per bucket serves the grid), picks the
+        lambda minimizing the mean held-out loss, and refits on the full
+        data. ``criterion='aic'|'bic'|'ebic'`` solves one full-data chunked
+        path and selects by information criterion — no refit needed.
+        Fitted state: ``alpha_``, ``alphas_``, ``coef_``, ``intercept_``,
+        plus ``cv_loss_``/``grid_result_`` (CV) or ``criterion_path_``
+        (IC selection)."""
+        from .api import lambda_max
+        from .path import cross_val_path, reg_path
+
+        y = jnp.asarray(y)
+        X_mean = y_mean = None
+        if self.fit_intercept:
+            X, y, X_mean, y_mean = _center_data(X, y, sample_weight)
+        design = as_design(X)
+        if self.alphas is None:
+            lmax = lambda_max(design, y, self.datafit,
+                              sample_weight=sample_weight)
+            alphas = lmax * np.geomspace(1.0, self.eps, self.n_alphas)
+        else:
+            alphas = np.asarray(self.alphas, np.float64)
+
+        if self.criterion == "cv":
+            grid = cross_val_path(
+                design, y, self.datafit, self.penalty, lambdas=alphas,
+                cv=self.cv, sample_weight=sample_weight, seed=self.seed,
+                tol=self.tol, vmap_chunk=self.vmap_chunk, p0=self.p0,
+                max_outer=self.max_outer, **self._grid_kw())
+            self.grid_result_ = grid
+            self.alphas_ = grid.lambdas
+            self.cv_loss_ = grid.cv_loss
+            self.alpha_ = grid.best_lambda
+            self.penalty = dataclasses.replace(self.penalty,
+                                               lam=self.alpha_)
+            self.alpha = self.alpha_
+            # refit on the full data at the winner, warm-started from the
+            # fold-mean solution (same support ballpark, few iterations)
+            beta0 = jnp.asarray(grid.betas[:, grid.best_index].mean(axis=0))
+            res = solve(design, y, self.datafit, self.penalty, tol=self.tol,
+                        max_outer=self.max_outer,
+                        max_epochs=self.max_epochs, M=self.M, p0=self.p0,
+                        beta0=beta0, engine=self.engine,
+                        use_kernels=self.use_kernels,
+                        sample_weight=sample_weight, **self.solve_kw)
+            self.coef_ = np.asarray(res.beta)
+            self.kkt_ = res.kkt
+            self.converged_ = res.converged
+            self.n_iter_ = res.n_outer
+            self.n_epochs_ = res.n_epochs
+            self.result_ = res
+        else:
+            path = reg_path(
+                design, y, self.penalty, self.datafit, lambdas=alphas,
+                tol=self.tol, vmap_chunk=max(2, self.vmap_chunk),
+                sample_weight=sample_weight, p0=self.p0,
+                max_outer=self.max_outer, **self._grid_kw())
+            self.path_result_ = path
+            self.alphas_ = path.lambdas
+            from .solver import normalize_weights
+            n = design.shape[0]
+            w = None if sample_weight is None else \
+                normalize_weights(sample_weight, n, design.dtype)
+            losses = [float(self.datafit.value(design.matvec(
+                jnp.asarray(b)), y, w)) for b in path.betas]
+            self.criterion_path_ = information_criterion(
+                self.criterion, self.datafit, losses, n, design.shape[1],
+                path.nnzs, ebic_gamma=self.ebic_gamma)
+            i = int(np.argmin(self.criterion_path_))
+            self.alpha_ = float(path.lambdas[i])
+            self.penalty = dataclasses.replace(self.penalty,
+                                               lam=self.alpha_)
+            self.alpha = self.alpha_
+            self.coef_ = np.asarray(path.betas[i])
+            self.kkt_ = float(path.kkts[i])
+            self.converged_ = bool(path.kkts[i] <= self.tol)
+            self.n_iter_ = int(path.n_outer[i])
+            self.n_epochs_ = int(path.n_epochs[i])
+            self.result_ = path
+        self.intercept_ = 0.0 if not self.fit_intercept \
+            else y_mean - X_mean @ self.coef_
+        return self
+
+
+class LassoCV(_CVEstimatorMixin, Lasso):
+    """Lasso with lambda tuned on a grid: k-fold CV solved as one
+    simultaneous (fold x lambda) grid through the fused engine
+    (``criterion='cv'``, the default) or AIC/BIC/EBIC on a single
+    full-data path (DESIGN.md §9).
+
+    After ``fit``: ``alpha_`` (winner), ``alphas_`` (the grid),
+    ``cv_loss_`` ``[n_folds, n_alphas]`` held-out half-MSE (so
+    ``mse_path_ = 2 * cv_loss_``), ``coef_``/``intercept_`` refit on the
+    full data. Accepts dense, scipy-sparse/CSC, and ``mesh=`` inputs like
+    every other estimator.
+    """
+
+    def __init__(self, *, alphas=None, n_alphas=30, eps=1e-2, cv=5,
+                 criterion="cv", ebic_gamma=0.5, vmap_chunk=10, seed=0,
+                 **kw):
+        super().__init__(alpha=1.0, **kw)
+        self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
+                        vmap_chunk, seed)
+
+    @property
+    def mse_path_(self):
+        """Held-out MSE per (fold, alpha) — twice the stored half-MSE."""
+        return 2.0 * self.cv_loss_
+
+
+class MCPRegressionCV(_CVEstimatorMixin, MCPRegression):
+    """MCP regression with lambda tuned by simultaneous-grid CV or
+    AIC/BIC/EBIC (gamma fixed) — the low-bias non-convex path of paper
+    Fig. 1 with the tuning surface users actually need (DESIGN.md §9)."""
+
+    def __init__(self, *, gamma=3.0, alphas=None, n_alphas=30, eps=1e-2,
+                 cv=5, criterion="cv", ebic_gamma=0.5, vmap_chunk=10,
+                 seed=0, **kw):
+        super().__init__(alpha=1.0, gamma=gamma, **kw)
+        self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
+                        vmap_chunk, seed)
+
+
+class SparseLogisticRegressionCV(_CVEstimatorMixin,
+                                 SparseLogisticRegression):
+    """L1 logistic regression with lambda tuned by simultaneous-grid CV
+    (held-out mean log-loss) or AIC/BIC/EBIC on the deviance — fold
+    weights ride the weighted Xb inner solver (DESIGN.md §9)."""
+
+    def __init__(self, *, alphas=None, n_alphas=30, eps=1e-2, cv=5,
+                 criterion="cv", ebic_gamma=0.5, vmap_chunk=10, seed=0,
+                 **kw):
+        super().__init__(alpha=1.0, **kw)
+        self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
+                        vmap_chunk, seed)

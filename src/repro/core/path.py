@@ -18,6 +18,16 @@ Two drivers:
     multi-path batching); the host escalates the bucket and resumes the
     still-unconverged lanes when a chunk outgrows its working-set bucket.
 
+Grid driver (DESIGN.md §9): ``cross_val_path`` generalizes the chunked
+driver from a 1-D lambda sweep to a 2-D (fold x lambda) grid — every CV
+fold (or bootstrap replicate) is a 0/1 sample-weight leaf on the SAME
+(X, y), so all replicates share one static shape and the whole grid runs
+through one compiled fused step per working-set bucket: lanes are
+(fold, lambda) pairs, warm starts hand off per fold across lambda chunks,
+bucket escalation is shared, and held-out scores reduce device-side from
+the lanes' residuals (Xb is maintained on ALL rows — weights only enter
+the datafit — so held-out predictions are free).
+
 Per-lambda epoch/outer/time telemetry plus the engine's retrace/dispatch
 counters land on PathResult, so perf regressions in the path driver are
 observable, not vibes. Support/estimation metrics reproduce Figure 1's
@@ -26,6 +36,7 @@ support-recovery comparison (L1 vs MCP/SCAD bias).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -33,15 +44,17 @@ from typing import Callable, List, Optional
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from .api import lambda_max
 from .datafits import Quadratic
 from .engine import as_design
 from .penalties import L1
-from .solver import _place_design, make_engine, solve
+from .solver import _place_design, make_engine, normalize_weights, solve
 from .working_set import BucketPolicy, next_pow2
 
-__all__ = ["reg_path", "PathResult", "support_metrics"]
+__all__ = ["reg_path", "PathResult", "support_metrics", "cross_val_path",
+           "GridResult"]
 
 _ENGINE_KW = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
               "use_kernels")
@@ -89,11 +102,33 @@ def _with_lam(penalty, lam: float):
     return dataclasses.replace(penalty, lam=lam)
 
 
+def _check_grid(lambdas):
+    """Validate a lambda grid and return it sorted DECREASING.
+
+    Warm starts assume the grid runs from the sparsest problem (large
+    lambda) down — an increasing or shuffled grid would silently warm-start
+    each solve from a *denser* solution, wasting iterations and (with the
+    chunked driver's shared bucket) inflating working sets. The grid is
+    therefore canonicalized here; results are reported in the sorted order
+    recorded on ``PathResult.lambdas`` / ``GridResult.lambdas``.
+    """
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    if lambdas.ndim != 1 or lambdas.size == 0:
+        raise ValueError(
+            f"lambdas must be a non-empty 1-D grid, got shape "
+            f"{lambdas.shape}")
+    if not np.all(np.isfinite(lambdas)):
+        raise ValueError("lambdas must be finite")
+    if np.any(lambdas < 0):
+        raise ValueError("lambdas must be non-negative")
+    return np.sort(lambdas)[::-1].copy()
+
+
 def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
              lambda_min_ratio=1e-2, tol=1e-6,
              metric_fn: Optional[Callable] = None, engine=None, vmap_chunk=1,
              mesh=None, data_axis="data", model_axis="model", screen=None,
-             **solve_kw) -> PathResult:
+             sample_weight=None, **solve_kw) -> PathResult:
     """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
 
     Parameters
@@ -111,7 +146,10 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
         Defaults to ``Quadratic()``.
     lambdas : array_like, optional
         Explicit grid; otherwise ``n_lambdas`` points from ``lambda_max``
-        down to ``lambda_min_ratio * lambda_max``.
+        down to ``lambda_min_ratio * lambda_max``. The grid is validated
+        (finite, non-negative) and sorted decreasing — warm starts assume
+        sparse-to-dense order — and ``PathResult.lambdas`` records the
+        sorted grid the results follow.
     tol : float, optional
         Per-lambda outer KKT tolerance.
     metric_fn : callable, optional
@@ -135,6 +173,10 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
         pre-filter per lambda (solutions unchanged — the rule is safe —
         only the per-lambda problem width shrinks;
         ``PathResult.screened_fracs`` records the screened fraction).
+    sample_weight : array_like, optional
+        Non-negative per-sample weights ``[n]`` shared by every lambda
+        (DESIGN.md §9): validated and rescaled to sum to n once, then
+        threaded through both drivers as a pytree leaf (never retraces).
     **solve_kw
         Forwarded to :func:`repro.core.solver.solve` (sequential driver) or
         restricted to engine-level keys (chunked driver).
@@ -147,9 +189,9 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     datafit = Quadratic() if datafit is None else datafit
     design = as_design(X)
     if lambdas is None:
-        lmax = lambda_max(design, y, datafit)
+        lmax = lambda_max(design, y, datafit, sample_weight=sample_weight)
         lambdas = lmax * np.geomspace(1.0, lambda_min_ratio, n_lambdas)
-    lambdas = np.asarray(lambdas, dtype=np.float64)
+    lambdas = _check_grid(lambdas)
 
     if engine is None:
         eng_kw = {k: solve_kw[k] for k in _ENGINE_KW if k in solve_kw}
@@ -164,11 +206,15 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     # solve()): unsupported mesh configs must raise here, not mid-trace
     n_tasks = y.shape[1] if (hasattr(y, "ndim") and y.ndim == 2) else 0
     engine.validate(datafit, penalty, n_tasks, shape=design.shape,
-                    design=design)
+                    design=design, weighted=sample_weight is not None)
     if screen is not None:
         if screen != "gap_safe":
             raise ValueError(f"unknown screening rule {screen!r}; "
                              f"supported: 'gap_safe'")
+        if sample_weight is not None:
+            raise ValueError("screen='gap_safe' does not support "
+                             "sample_weight: the sphere-test certificate "
+                             "assumes the unweighted quadratic datafit")
         if vmap_chunk > 1:
             raise ValueError("screen='gap_safe' requires the sequential "
                              "driver (vmap_chunk=1): the per-lambda survivor "
@@ -182,22 +228,30 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
                 "convex L1 + Quadratic pair is supported (non-convex "
                 "penalties are exactly the case the paper's working sets "
                 "handle instead)")
+    # validate + normalize ONCE; the sequential driver hands solve() the
+    # host copy (its per-solve re-normalization is then a cheap host-side
+    # no-op — no per-lambda device readback of a placed weight array)
+    host_w = None if sample_weight is None \
+        else np.asarray(sample_weight, np.float64)
+    w = None if host_w is None \
+        else normalize_weights(host_w, design.shape[0], design.dtype)
     if engine.mesh is not None:
-        design, y = _place_design(engine, design, y)
+        design, y, w = _place_design(engine, design, y, w)
 
     if vmap_chunk > 1:
         res = _chunked_path(design, y, penalty, datafit, lambdas, tol,
-                            engine, vmap_chunk, metric_fn, **solve_kw)
+                            engine, vmap_chunk, metric_fn, w=w, **solve_kw)
     else:
         res = _sequential_path(design, y, penalty, datafit, lambdas, tol,
-                               engine, metric_fn, screen=screen, **solve_kw)
+                               engine, metric_fn, screen=screen, w=host_w,
+                               **solve_kw)
     res.retraces = dict(engine.retraces)
     res.n_dispatches = engine.n_dispatches
     return res
 
 
 def _sequential_path(design, y, penalty, datafit, lambdas, tol, engine,
-                     metric_fn, *, screen=None, **solve_kw):
+                     metric_fn, *, screen=None, w=None, **solve_kw):
     if screen is not None:
         return _screened_path(design, y, penalty, datafit, lambdas, tol,
                               engine, metric_fn, **solve_kw)
@@ -206,7 +260,8 @@ def _sequential_path(design, y, penalty, datafit, lambdas, tol, engine,
     betas, kkts, nnzs, eps, outers, times, metrics = [], [], [], [], [], [], []
     for lam in lambdas:
         res = solve(design, y, datafit, _with_lam(penalty, float(lam)),
-                    tol=tol, beta0=beta, engine=engine, **solve_kw)
+                    tol=tol, beta0=beta, engine=engine, sample_weight=w,
+                    **solve_kw)
         beta = res.beta
         betas.append(np.asarray(beta))
         kkts.append(res.kkt)
@@ -279,7 +334,7 @@ def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
 
 def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
                   metric_fn, *, p0=64, max_outer=50, eps_inner_frac=0.3,
-                  **solve_kw):
+                  w=None, **solve_kw):
     """Chunked vmap sweep with warm-start handoff between chunks."""
     # engine-level kwargs were consumed by make_engine; anything else the
     # sequential driver would honor (use_ws, beta0, ...) must not be
@@ -291,7 +346,8 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
             f"{sorted(unsupported)}; use the sequential driver (vmap_chunk=1)")
     p = design.shape[1]
     policy = BucketPolicy(p0=p0)
-    L = design.lipschitz(datafit)
+    L = design.lipschitz(datafit) if w is None \
+        else design.lipschitz(datafit, w)
     offset = datafit.grad_offset(p, design.dtype)
     bshape = (p,) if y.ndim == 1 else (p, y.shape[1])
     beta_prev = jnp.zeros(bshape, design.dtype)
@@ -313,7 +369,7 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
         while True:
             out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0, L,
                                offset, datafit, penalty, tol, eps_inner_frac,
-                               iters_left)
+                               iters_left, w=w)
             betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
             # one host sync per (chunk, bucket) attempt
             kkts_c, gcounts_c, neps_c, it = jax.device_get(
@@ -348,6 +404,297 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
                       nnzs=np.asarray([(b != 0).sum() for b in betas]),
                       n_epochs=np.asarray(n_eps), metrics=metrics,
                       n_outer=np.asarray(outers), times=np.asarray(times))
+
+
+# --------------------------------------------------------------- grid driver
+@dataclass
+class GridResult:
+    """Result of one :func:`cross_val_path` (fold x lambda) grid sweep.
+
+    Attributes
+    ----------
+    lambdas : np.ndarray
+        The decreasing regularization grid ``[n_lambdas]``.
+    betas : np.ndarray
+        Per-replicate solutions ``[n_folds, n_lambdas, p(, T)]``.
+    cv_loss : np.ndarray
+        Held-out mean datafit loss per (fold, lambda) — the datafit's
+        ``value`` semantics (half-MSE for quadratic losses, mean log-loss
+        for logistic). NaN for replicates with no held-out rows (a
+        bootstrap replicate that resampled every row).
+    cv_mean, cv_std : np.ndarray
+        Mean / standard deviation of ``cv_loss`` over valid folds,
+        ``[n_lambdas]``.
+    best_index, best_lambda : int, float
+        Argmin of ``cv_mean`` and the corresponding grid point.
+    kkts, n_epochs : np.ndarray
+        Final KKT violation and inner epochs per (fold, lambda).
+    fold_weights : np.ndarray
+        The raw (un-normalized) train-weight matrix ``[n_folds, n]`` the
+        grid solved — 0/1 rows for k-fold CV, counts for bootstrap.
+    n_outer : int
+        Total vmapped outer iterations driven across the sweep.
+    times : np.ndarray
+        Cumulative wall-clock seconds per lambda chunk.
+    retraces : dict
+        The engine's compile counter — the proof behind "one compile per
+        working-set bucket across the whole grid".
+    n_dispatches, n_host_syncs : int
+        Fused-step launches / blocking host readbacks of the sweep (the
+        contract is at most one of each per outer iteration — chunking
+        amortizes far below that).
+    """
+    lambdas: np.ndarray
+    betas: np.ndarray                 # [F, n_lambdas, p(, T)]
+    cv_loss: np.ndarray               # [F, n_lambdas]
+    cv_mean: np.ndarray
+    cv_std: np.ndarray
+    best_index: int
+    best_lambda: float
+    kkts: np.ndarray
+    n_epochs: np.ndarray
+    fold_weights: np.ndarray
+    n_outer: int = 0
+    times: Optional[np.ndarray] = None
+    retraces: dict = field(default_factory=dict)
+    n_dispatches: int = 0
+    n_host_syncs: int = 0
+
+
+@functools.lru_cache(maxsize=32)
+def _heldout_fn_cached(datafit):
+    def lane(Xb, y, h):
+        return datafit.value(Xb, y, h)
+
+    per_fold = jax.vmap(lane, in_axes=(0, None, None))     # lambda lanes
+    return jax.jit(jax.vmap(per_fold, in_axes=(0, None, 0)))
+
+
+def _heldout_fn(datafit):
+    """Jitted [F, C, n(, T)] x [F, n] -> [F, C] held-out mean-loss map,
+    cached per (hashable) datafit so repeated grids reuse the compilation;
+    datafits with unhashable leaves fall back to a per-call closure."""
+    try:
+        return _heldout_fn_cached(datafit)
+    except TypeError:
+        return _heldout_fn_cached.__wrapped__(datafit)
+
+
+def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
+                   n_lambdas=30, lambda_min_ratio=1e-2, cv=5,
+                   fold_weights=None, sample_weight=None, seed=0, tol=1e-6,
+                   vmap_chunk=10, p0=64, max_outer=50, eps_inner_frac=0.3,
+                   engine=None, mesh=None, data_axis="data",
+                   model_axis="model", **engine_kw) -> GridResult:
+    """Solve a (fold x lambda) grid simultaneously through the fused step.
+
+    Every fold (or bootstrap replicate) is a sample-weight leaf on the SAME
+    (X, y) — 0/1 train membership for k-fold CV, resample counts for the
+    bootstrap — so all replicates share one static shape and the whole grid
+    vmaps through the chunked fused step: lanes are (fold, lambda) pairs,
+    each fold warm-starts from its own previous chunk's densest solution,
+    bucket escalation is shared across lanes, and held-out scores reduce
+    device-side from the lanes' full-row residuals (DESIGN.md §9). One
+    compiled step per working-set bucket serves the entire grid; the host
+    syncs once per (chunk, bucket) attempt.
+
+    Parameters
+    ----------
+    X : array_like, scipy sparse matrix, or Design
+        Design matrix, shared by every replicate (dense, CSC-native sparse,
+        or mesh-sharded — weights shard with the data axis).
+    y : array_like
+        Targets ``[n]`` (or ``[n, T]`` multitask).
+    datafit : object, optional
+        Defaults to ``Quadratic()``; must declare ``SUPPORTS_WEIGHTS``.
+    penalty : object, optional
+        Penalty template with a ``lam`` hyper-parameter leaf; defaults to
+        ``L1(1.0)``.
+    lambdas : array_like, optional
+        Explicit grid (validated and sorted decreasing); otherwise
+        ``n_lambdas`` geometric points from the full-data ``lambda_max``.
+    cv : int, optional
+        Number of k-fold splits (ignored when ``fold_weights`` is given).
+    fold_weights : array_like, optional
+        Explicit replicate-weight matrix ``[n_replicates, n]`` — e.g.
+        ``repro.data.folds.bootstrap_weights`` resample counts. Held-out
+        rows of a replicate are its zero-weight rows.
+    sample_weight : array_like, optional
+        Base observation weights multiplied into every replicate's train
+        AND held-out weights.
+    seed : int, optional
+        Fold-assignment shuffle seed (k-fold mode).
+    tol, p0, max_outer, eps_inner_frac : optional
+        Per-lane outer KKT tolerance and chunk-driver knobs (as in
+        :func:`reg_path`).
+    vmap_chunk : int, optional
+        Lambdas swept per dispatch; lane count per dispatch is
+        ``n_folds * vmap_chunk``. The last chunk is padded (by repeating
+        its smallest lambda) so every dispatch shares one lane count — and
+        therefore one compiled program per bucket.
+    engine, mesh, data_axis, model_axis : optional
+        As in :func:`reg_path`; ``**engine_kw`` is restricted to engine
+        config keys (M, max_epochs, accel, use_fp_score, use_gram,
+        use_kernels).
+
+    Returns
+    -------
+    GridResult
+        Per-fold paths, the CV curve (mean/std held-out loss), the best
+        lambda, and engine telemetry.
+    """
+    datafit = Quadratic() if datafit is None else datafit
+    penalty = L1(1.0) if penalty is None else penalty
+    design = as_design(X)
+    y = jnp.asarray(y)
+    n, p = design.shape
+    unsupported = set(engine_kw) - set(_ENGINE_KW)
+    if unsupported:
+        raise ValueError(f"cross_val_path does not support kwargs "
+                         f"{sorted(unsupported)}")
+
+    # replicate weights: 0/1 k-fold membership or explicit bootstrap counts
+    if fold_weights is not None:
+        W = np.asarray(fold_weights, np.float64)
+        if W.ndim != 2 or W.shape[1] != n:
+            raise ValueError(
+                f"fold_weights must be [n_replicates, n={n}], got shape "
+                f"{W.shape}")
+        if not np.all(np.isfinite(W)) or np.any(W < 0):
+            raise ValueError("fold_weights must be finite and non-negative")
+    else:
+        from repro.data.folds import kfold_weights
+        W = kfold_weights(n, cv, seed=seed)
+    H = np.where(W == 0.0, 1.0, 0.0)          # held-out indicator per fold
+    if sample_weight is not None:
+        sw = np.asarray(
+            normalize_weights(sample_weight, n, jnp.float64))
+        W = W * sw[None, :]
+        H = H * sw[None, :]
+    train_sums = W.sum(axis=1)
+    if np.any(train_sums <= 0):
+        raise ValueError("every fold/replicate needs at least one training "
+                         "sample with positive weight")
+    held_sums = H.sum(axis=1)
+    valid_fold = held_sums > 0
+    if not valid_fold.any():
+        raise ValueError(
+            "no replicate has any held-out rows (every fold_weights row is "
+            "all-nonzero): there is nothing to cross-validate on — held-out "
+            "rows are a replicate's zero-weight rows")
+
+    if lambdas is None:
+        lmax = lambda_max(design, y, datafit, sample_weight=sample_weight)
+        lambdas = lmax * np.geomspace(1.0, lambda_min_ratio, n_lambdas)
+    lambdas = _check_grid(lambdas)
+    nlam = len(lambdas)
+
+    if engine is None:
+        engine = make_engine(penalty, datafit, shared=True, mesh=mesh,
+                             data_axis=data_axis, model_axis=model_axis,
+                             **engine_kw)
+    elif mesh is not None and engine.mesh is not mesh:
+        raise ValueError("cross_val_path(mesh=..., engine=...): the engine "
+                         "was built for a different mesh; pass mesh to "
+                         "make_engine instead")
+    n_tasks = y.shape[1] if y.ndim == 2 else 0
+    engine.validate(datafit, penalty, n_tasks, shape=design.shape,
+                    design=design, weighted=True)
+
+    if engine.mesh is not None:
+        design, y, _ = _place_design(engine, design, y)
+    # per-fold train weights normalized to sum n (the row-subset-equivalent
+    # scaling, DESIGN.md §9) and held-out weights normalized to mean weights
+    Wd = jnp.asarray(W * (n / train_sums)[:, None], design.dtype)
+    Hd = jnp.asarray(
+        H * np.where(valid_fold, n / np.maximum(held_sums, 1e-300),
+                     0.0)[:, None], design.dtype)
+    if engine.mesh is not None:
+        from repro.launch.shardings import weight_spec
+        sh = NamedSharding(engine.mesh,
+                           weight_spec(engine.data_axis, n_lanes=1))
+        Wd, Hd = jax.device_put(Wd, sh), jax.device_put(Hd, sh)
+    F = W.shape[0]
+    L_folds = jnp.stack([design.lipschitz(datafit, Wd[f]) for f in range(F)])
+    offset = datafit.grad_offset(p, design.dtype)
+    heldout = _heldout_fn(datafit)
+
+    bshape = (p,) if n_tasks == 0 else (p, n_tasks)
+    xshape = (n,) if n_tasks == 0 else (n, n_tasks)
+    policy = BucketPolicy(p0=p0)
+    chunk = max(1, min(int(vmap_chunk), nlam))
+    betas_prev = jnp.zeros((F,) + bshape, design.dtype)
+    Xbs_prev = jnp.zeros((F,) + xshape, design.dtype)
+    gcount_prev = 0
+
+    betas_out = np.zeros((F, nlam) + bshape)
+    kkts_out = np.zeros((F, nlam))
+    eps_out = np.zeros((F, nlam), np.int64)
+    loss_out = np.zeros((F, nlam))
+    dispatches0, total_outer, n_syncs, times = engine.n_dispatches, 0, 0, []
+    t0 = time.perf_counter()
+    rep = lambda a: jnp.repeat(a, chunk, axis=0)      # fold -> lane axis
+    # loop-invariant lane expansions: the fold weights and per-fold L are
+    # the same [F * chunk, ...] tensors for every lambda chunk
+    w_lanes, L_lanes = rep(Wd), rep(L_folds)
+
+    for lo in range(0, nlam, chunk):
+        blk = lambdas[lo:lo + chunk]
+        C_real = len(blk)
+        # pad short tails by repeating the smallest lambda: every dispatch
+        # keeps the SAME lane count, so one compiled step per bucket serves
+        # the whole grid (padded lanes are discarded below)
+        blk = np.concatenate([blk, np.full(chunk - C_real, blk[-1])])
+        lams_c = jnp.asarray(np.tile(blk, F), design.dtype)     # [F * chunk]
+        betas0, Xbs0 = rep(betas_prev), rep(Xbs_prev)
+        bucket = policy.first_bucket(gcount_prev, p)
+        iters_left = max_outer
+        chunk_eps = np.zeros(F * chunk, np.int64)
+        while True:
+            out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0,
+                               L_lanes, offset, datafit, penalty, tol,
+                               eps_inner_frac, iters_left, w=w_lanes)
+            betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
+            # one blocking host sync per (chunk, bucket) attempt
+            kkts_c, gcounts_c, neps_c, it = jax.device_get(
+                (kkts_d, gcounts_d, neps_d, it_d))
+            n_syncs += 1
+            iters_left -= int(it)
+            total_outer += int(it)
+            chunk_eps += np.asarray(neps_c, np.int64)
+            if bool(np.all(kkts_c <= tol)) or bucket >= p or iters_left <= 0:
+                break
+            bucket = max(policy.escalate(bucket, p),
+                         policy.next_bucket(bucket, int(np.max(gcounts_c)),
+                                            p))
+            betas0, Xbs0 = betas_c, Xbs_c
+        betas_f = betas_c.reshape((F, chunk) + bshape)
+        Xbs_f = Xbs_c.reshape((F, chunk) + xshape)
+        loss_f = heldout(Xbs_f, y, Hd)                # device-side reduction
+        betas_out[:, lo:lo + C_real] = np.asarray(betas_f[:, :C_real])
+        kkts_out[:, lo:lo + C_real] = \
+            np.asarray(kkts_c).reshape(F, chunk)[:, :C_real]
+        eps_out[:, lo:lo + C_real] = \
+            chunk_eps.reshape(F, chunk)[:, :C_real]
+        loss_out[:, lo:lo + C_real] = np.asarray(loss_f)[:, :C_real]
+        betas_prev = betas_f[:, C_real - 1]
+        Xbs_prev = Xbs_f[:, C_real - 1]
+        gcount_prev = int(np.max(gcounts_c))
+        times.append(time.perf_counter() - t0)
+
+    loss_out[~valid_fold] = np.nan
+    cv_mean = np.mean(loss_out[valid_fold], axis=0) if valid_fold.any() \
+        else np.full(nlam, np.nan)
+    cv_std = np.std(loss_out[valid_fold], axis=0) if valid_fold.any() \
+        else np.full(nlam, np.nan)
+    best = int(np.argmin(cv_mean)) if np.isfinite(cv_mean).any() else 0
+    return GridResult(lambdas=lambdas, betas=betas_out, cv_loss=loss_out,
+                      cv_mean=cv_mean, cv_std=cv_std, best_index=best,
+                      best_lambda=float(lambdas[best]), kkts=kkts_out,
+                      n_epochs=eps_out, fold_weights=W, n_outer=total_outer,
+                      times=np.asarray(times), retraces=dict(engine.retraces),
+                      n_dispatches=engine.n_dispatches - dispatches0,
+                      n_host_syncs=n_syncs)
 
 
 def support_metrics(beta, beta_true, X=None, y=None):

@@ -16,6 +16,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
@@ -23,19 +24,48 @@ from jax.sharding import NamedSharding
 from .engine import EngineConfig, SolveEngine, as_design, get_engine
 from .working_set import BucketPolicy
 
-__all__ = ["solve", "SolveResult"]
+__all__ = ["solve", "SolveResult", "normalize_weights"]
 
 
-def _place_design(engine, design, y):
-    """Shard (design, y) on the engine's mesh (idempotent for pre-sharded
-    input; sparse designs convert to their stacked per-shard form here).
-    Multitask targets [n, T] keep the task dimension replicated."""
-    from repro.launch.shardings import task_spec
+def _place_design(engine, design, y, w=None):
+    """Shard (design, y[, w]) on the engine's mesh (idempotent for
+    pre-sharded input; sparse designs convert to their stacked per-shard
+    form here). Multitask targets [n, T] keep the task dimension
+    replicated; sample weights shard with the data axis like y."""
+    from repro.launch.shardings import task_spec, weight_spec
     _, ys, _ = engine._specs()
     design = design.place(engine.mesh, engine.data_axis, engine.model_axis)
     spec = task_spec(ys, y.ndim - 1)
     y = jax.device_put(y, NamedSharding(engine.mesh, spec))
-    return design, y
+    if w is not None:
+        w = jax.device_put(
+            w, NamedSharding(engine.mesh, weight_spec(engine.data_axis)))
+    return design, y, w
+
+
+def normalize_weights(sample_weight, n, dtype):
+    """Validate a user sample-weight vector and rescale it to sum to n.
+
+    The solve stack's weighted datafits keep normalizing by the sample
+    count (DESIGN.md §9), so rescaling to ``sum(w) = n`` makes the weighted
+    objective exactly the weighted-mean loss — 0/1 fold weights then
+    reproduce the row-subset problem at the same lambda. Raises
+    ``ValueError`` on wrong shape, negative entries, non-finite entries, or
+    an all-zero vector. Returns a device array of ``dtype``.
+    """
+    w = np.asarray(sample_weight, dtype=np.float64)
+    if w.ndim != 1 or w.shape[0] != n:
+        raise ValueError(
+            f"sample_weight must be a 1-D vector of length n={n}, got "
+            f"shape {w.shape}")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("sample_weight must be finite")
+    if np.any(w < 0):
+        raise ValueError("sample_weight must be non-negative")
+    s = float(w.sum())
+    if s <= 0.0:
+        raise ValueError("sample_weight sums to zero: no effective samples")
+    return jnp.asarray(w * (n / s), dtype)
 
 
 @dataclass
@@ -98,7 +128,7 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           M=5, p0=64, use_gram="auto", use_fp_score=None, eps_inner_frac=0.3,
           beta0=None, n_tasks=None, accel=True, use_ws=True,
           use_kernels=False, mesh=None, data_axis="data", model_axis="model",
-          engine=None, bucket_policy=None):
+          engine=None, bucket_policy=None, sample_weight=None):
     """Solve Problem (1): ``argmin_beta F(X beta) + sum_j g_j(beta_j)``.
 
     The thin host driver over the device-resident fused engine: one jitted
@@ -161,6 +191,14 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         :func:`make_engine`) and read back retrace/dispatch telemetry.
     bucket_policy : BucketPolicy, optional
         Override the working-set bucket ladder.
+    sample_weight : array_like, optional
+        Non-negative per-sample weights ``[n]`` (DESIGN.md §9). Validated
+        and rescaled to sum to n at entry (the weighted objective is the
+        weighted-mean loss, so 0/1 fold-membership weights reproduce the
+        row-subset problem exactly); flows as a pytree leaf through the
+        fused step, so changing weights never retraces. ``None`` keeps the
+        bit-identical unweighted program. Weighted solves require
+        ``use_kernels=False`` and a datafit with ``SUPPORTS_WEIGHTS``.
 
     Returns
     -------
@@ -195,12 +233,15 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
                          "for a different mesh; pass mesh to make_engine "
                          "instead")
     engine.validate(datafit, penalty, n_tasks, shape=design.shape,
-                    design=design)
+                    design=design, weighted=sample_weight is not None)
     policy = bucket_policy or BucketPolicy(p0=p0)
 
+    w = None if sample_weight is None \
+        else normalize_weights(sample_weight, n_rows, design.dtype)
     if engine.mesh is not None:
-        design, y = _place_design(engine, design, y)
-    L = design.lipschitz(datafit)
+        design, y, w = _place_design(engine, design, y, w)
+    L = design.lipschitz(datafit) if w is None \
+        else design.lipschitz(datafit, w)
     offset = datafit.grad_offset(p, design.dtype)
     bshape = (p, n_tasks) if n_tasks else (p,)
     beta = jnp.zeros(bshape, design.dtype) if beta0 is None \
@@ -222,7 +263,7 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         gcount = 0
     else:
         _, g0, _ = engine.probe(design, y, beta, Xb, L, offset, datafit,
-                                penalty)
+                                penalty, w=w)
         gcount = int(g0)
         res.n_host_syncs += 1
     bucket = policy.first_bucket(gcount, p)
@@ -230,7 +271,7 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     for t in range(max_outer):
         beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d = engine.step(
             bucket, design, y, beta, Xb, L, offset, datafit, penalty, tol,
-            eps_inner_frac)
+            eps_inner_frac, w=w)
         # the single blocking host sync of this outer iteration
         kkt, obj, gcount, n_ep, cov = jax.device_get(
             (kkt_d, obj_d, gcount_d, nep_d, cov_d))

@@ -1,2 +1,3 @@
+from .folds import bootstrap_weights, kfold_weights
 from .synth import (make_classification, make_correlated_design,
                     make_leadfield, make_multitask)

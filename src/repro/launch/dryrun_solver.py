@@ -88,8 +88,9 @@ def run(multi_pod: bool, n: int, p: int, ws: int, out_dir: str):
     from repro.core.engine import DenseDesign
     eng = make_engine(penalty, Quadratic(), mesh=mesh)
     t0 = time.time()
-    fused = eng._jstep.lower(DenseDesign(X), y, beta, r, L, L, Quadratic(),
-                             penalty, 1e-6, 0.3, bucket=ws).compile()
+    fused = eng._jstep.lower(DenseDesign(X), y, None, beta, r, L, L,
+                             Quadratic(), penalty, 1e-6, 0.3,
+                             bucket=ws).compile()
     record("fused_step", fused, t0)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

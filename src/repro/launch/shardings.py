@@ -174,6 +174,15 @@ def task_spec(spec: P, n_tasks: int) -> P:
     return P(*spec, None) if n_tasks else spec
 
 
+def weight_spec(data_axis="data", n_lanes: int = 0) -> P:
+    """Spec of the per-sample weight leaf (DESIGN.md §9): w [n] shards with
+    the data axis exactly like y/Xb (weights are per *sample*, shared
+    across tasks, so no task dimension ever applies). ``n_lanes > 0``
+    returns the grid-driver form [C, n] — a replicated lane axis in front,
+    samples still data-sharded."""
+    return P(None, data_axis) if n_lanes else P(data_axis)
+
+
 def sparse_design_spec(model_axis="model"):
     """Leading-axis spec of the stacked per-shard CSC design leaves
     (ShardedCSCDesign, DESIGN.md §7): every leaf is [n_shards, ...] and

@@ -34,7 +34,8 @@ from repro.core.engine import Design
 from repro.launch.shardings import sparse_design_spec
 
 from .ops import (csc_column_windows, csc_gather_columns, csc_incremental_xb,
-                  csc_matvec, csc_score, csc_score_ell, csc_score_pallas)
+                  csc_matvec, csc_score, csc_score_ell, csc_score_pallas,
+                  csc_weighted_col_sq)
 
 __all__ = ["CSCDesign", "ShardedCSCDesign"]
 
@@ -192,8 +193,13 @@ class CSCDesign(Design):
         return csc_matvec(self.data, self.indices, self.col_ids, beta,
                           self.n_rows)
 
-    def lipschitz(self, datafit):
-        return datafit.lipschitz_cols(self.col_sq, self.n_rows)
+    def lipschitz(self, datafit, w=None):
+        """Per-coordinate Lipschitz constants; weighted solves feed the
+        O(nnz) w-weighted column norms instead of the cached unweighted
+        ones (DESIGN.md §9)."""
+        col_sq = self.col_sq if w is None else csc_weighted_col_sq(
+            self.data, self.indices, self.col_ids, w, self.width)
+        return datafit.lipschitz_cols(col_sq, self.n_rows)
 
     def col_sq_norms(self):
         return self.col_sq
@@ -353,8 +359,17 @@ class ShardedCSCDesign(Design):
         return jnp.zeros((self.n_rows, beta.shape[1]),
                          self.dtype).at[idx].add(contrib)
 
-    def lipschitz(self, datafit):
-        return datafit.lipschitz_cols(self.col_sq.reshape(-1), self.n_rows)
+    def lipschitz(self, datafit, w=None):
+        """Per-coordinate Lipschitz constants from the stacked per-shard
+        column norms (w-weighted norms recomputed per shard, O(nnz))."""
+        if w is None:
+            col_sq = self.col_sq.reshape(-1)
+        else:
+            width = self.shape[1] // self.n_shards
+            col_sq = jax.vmap(
+                lambda d, i, c: csc_weighted_col_sq(d, i, c, w, width))(
+                    self.data, self.indices, self.col_ids).reshape(-1)
+        return datafit.lipschitz_cols(col_sq, self.n_rows)
 
     @property
     def has_ell(self) -> bool:

@@ -51,6 +51,16 @@ def csc_score(data, indices, col_ids, raw, p: int):
                                indices_are_sorted=True)
 
 
+def csc_weighted_col_sq(data, indices, col_ids, w, p: int):
+    """Per-column weighted squared norms sum_i w_i x_ij^2 over flat CSC
+    arrays -> [p] (the w-weighted Lipschitz statistic, DESIGN.md §9).
+    O(nnz), same segment-sum layout as the score pass; padding entries have
+    data == 0.0 so they contribute exact zeros."""
+    contrib = data * data * w[indices]
+    return jax.ops.segment_sum(contrib, col_ids, num_segments=p,
+                               indices_are_sorted=True)
+
+
 def csc_score_ell(rows, vals, raw):
     """Reference for the Pallas kernel: score pass over the ELL layout
     (rows/vals [p, m], padding vals 0.0). Returns [p]."""

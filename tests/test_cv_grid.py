@@ -1,0 +1,284 @@
+"""Grid-driver and model-selection tests (DESIGN.md §9).
+
+Covers the acceptance criteria of the weighted-grid refactor:
+  * a 5-fold x 30-lambda dense Lasso CV grid runs with <= 1 compile per
+    working-set bucket and at most 1 fused dispatch + 1 blocking host sync
+    per outer iteration (the chunked grid amortizes far below 1);
+  * every fold's grid path matches the row-subset sequential path (the
+    solves are the same problems, expressed as 0/1 weight leaves);
+  * the ``reg_path`` lambda-grid bugfix: increasing/shuffled grids are
+    validated and sorted decreasing, so they now produce the sorted solve
+    instead of silently warm-starting backwards;
+  * fold/bootstrap weight generators partition and resample correctly;
+  * the CV estimators (LassoCV / MCPRegressionCV /
+    SparseLogisticRegressionCV) tune lambda by simultaneous-grid CV and by
+    AIC/BIC/EBIC, on dense and CSC inputs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (MCP, L1, LassoCV, Logistic, MCPRegressionCV,
+                        Quadratic, SparseLogisticRegressionCV, cross_val_path,
+                        information_criterion, lambda_max, make_engine,
+                        reg_path)
+from repro.data.folds import bootstrap_weights, kfold_weights
+from repro.data.synth import make_classification, make_correlated_design
+from repro.sparse import CSCDesign
+
+
+@pytest.fixture(scope="module")
+def grid_data():
+    X, y, bt = make_correlated_design(n=200, p=400, n_nonzero=15, rho=0.5,
+                                      seed=0)
+    return jnp.asarray(X), jnp.asarray(y), bt
+
+
+# ------------------------------------------------------------- fold weights
+def test_kfold_weights_partition():
+    W = kfold_weights(23, 5, seed=0)
+    assert W.shape == (5, 23)
+    assert set(np.unique(W)) <= {0.0, 1.0}
+    # every sample held out exactly once across folds
+    np.testing.assert_array_equal((W == 0).sum(axis=0), np.ones(23))
+    sizes = (W == 0).sum(axis=1)
+    assert sizes.max() - sizes.min() <= 1
+    with pytest.raises(ValueError):
+        kfold_weights(10, 1)
+
+
+def test_bootstrap_weights_counts():
+    W = bootstrap_weights(50, 8, seed=1)
+    assert W.shape == (8, 50)
+    np.testing.assert_array_equal(W.sum(axis=1), np.full(8, 50.0))
+    assert np.all(W == np.round(W)) and np.all(W >= 0)
+    assert np.all((W == 0).sum(axis=1) > 0), "no out-of-bag rows?"
+
+
+# ------------------------------------------------- reg_path grid validation
+def test_reg_path_sorts_increasing_grid(grid_data):
+    """The warm-start bugfix: an increasing grid now produces exactly the
+    sorted (decreasing) solve instead of warm-starting backwards."""
+    X, y, _ = grid_data
+    lams = lambda_max(X, y) * np.geomspace(0.05, 1.0, 6)     # increasing
+    up = reg_path(X, y, L1(1.0), Quadratic(), lambdas=lams, tol=1e-10)
+    down = reg_path(X, y, L1(1.0), Quadratic(), lambdas=lams[::-1].copy(),
+                    tol=1e-10)
+    np.testing.assert_array_equal(up.lambdas, down.lambdas)
+    assert np.all(np.diff(up.lambdas) < 0), "grid not sorted decreasing"
+    np.testing.assert_array_equal(up.betas, down.betas)
+    # chunked driver canonicalizes identically
+    chk = reg_path(X, y, L1(1.0), Quadratic(), lambdas=lams, tol=1e-10,
+                   vmap_chunk=3)
+    np.testing.assert_array_equal(chk.lambdas, down.lambdas)
+    assert np.max(np.abs(chk.betas - down.betas)) < 1e-8
+
+
+def test_reg_path_rejects_bad_grids(grid_data):
+    X, y, _ = grid_data
+    for bad, msg in (([0.1, -0.2], "non-negative"),
+                     ([0.1, np.inf], "finite"),
+                     ([], "non-empty")):
+        with pytest.raises(ValueError, match=msg):
+            reg_path(X, y, L1(1.0), Quadratic(), lambdas=bad)
+
+
+# --------------------------------------------------------- grid correctness
+def test_grid_folds_match_row_subset_paths(grid_data):
+    """Each fold lane of the simultaneous grid == the sequential warm-started
+    path on that fold's row subset."""
+    X, y, _ = grid_data
+    lams = lambda_max(X, y) * np.geomspace(1.0, 0.05, 8)
+    g = cross_val_path(X, y, Quadratic(), L1(1.0), lambdas=lams, cv=3,
+                       tol=1e-11, vmap_chunk=4, seed=0)
+    assert g.betas.shape == (3, 8, X.shape[1])
+    for f in range(3):
+        keep = g.fold_weights[f] > 0
+        sub = reg_path(jnp.asarray(np.asarray(X)[keep]),
+                       jnp.asarray(np.asarray(y)[keep]),
+                       L1(1.0), Quadratic(), lambdas=lams, tol=1e-11)
+        assert np.max(np.abs(sub.betas - g.betas[f])) < 1e-8, f"fold {f}"
+
+
+def test_grid_csc_matches_dense(grid_data):
+    rng = np.random.default_rng(2)
+    Xs = sp.random(150, 256, density=0.08, random_state=2, format="csc")
+    beta = np.zeros(256)
+    beta[:10] = rng.standard_normal(10)
+    y = jnp.asarray(np.asarray(Xs @ beta) + 0.1 * rng.standard_normal(150))
+    lams = lambda_max(CSCDesign.from_scipy(Xs), y) * \
+        np.geomspace(1.0, 0.1, 5)
+    gs = cross_val_path(Xs, y, Quadratic(), L1(1.0), lambdas=lams, cv=3,
+                        tol=1e-11, vmap_chunk=5, seed=0)
+    gd = cross_val_path(jnp.asarray(Xs.toarray()), y, Quadratic(), L1(1.0),
+                        lambdas=lams, cv=3, tol=1e-11, vmap_chunk=5, seed=0)
+    assert np.max(np.abs(gs.betas - gd.betas)) < 1e-8
+    np.testing.assert_allclose(gs.cv_mean, gd.cv_mean, atol=1e-10)
+
+
+def test_grid_heldout_scores_device_match_host(grid_data):
+    """cv_loss == the host-computed weighted mean held-out loss."""
+    X, y, _ = grid_data
+    g = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=5, cv=3,
+                       tol=1e-9, vmap_chunk=5, seed=0)
+    Xn, yn = np.asarray(X), np.asarray(y)
+    for f in range(3):
+        held = g.fold_weights[f] == 0
+        for i in range(5):
+            resid = yn[held] - Xn[held] @ g.betas[f, i]
+            half_mse = 0.5 * np.mean(resid ** 2)
+            assert np.isclose(g.cv_loss[f, i], half_mse, atol=1e-10)
+
+
+def test_grid_bootstrap_replicates(grid_data):
+    """Bootstrap counts ride the same weight leaf; OOB rows score it."""
+    X, y, _ = grid_data
+    W = bootstrap_weights(X.shape[0], 4, seed=0)
+    g = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=4,
+                       fold_weights=W, tol=1e-9, vmap_chunk=4)
+    assert g.betas.shape[0] == 4
+    assert np.all(np.isfinite(g.cv_loss))
+    assert np.max(g.kkts) <= 1e-9
+    # replicate 0 == direct weighted solve at the densest lambda
+    from repro.core import solve
+    r = solve(X, y, Quadratic(), L1(float(g.lambdas[-1])), tol=1e-9,
+              sample_weight=W[0])
+    assert np.max(np.abs(np.asarray(r.beta) - g.betas[0, -1])) < 1e-7
+
+
+def test_grid_logistic(grid_data):
+    """The Xb (non-Gram) inner solver sweeps grids too."""
+    X, y, _ = make_classification(n=150, p=120, n_nonzero=10, seed=1)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    g = cross_val_path(X, y, Logistic(), L1(1.0), n_lambdas=5, cv=3,
+                       lambda_min_ratio=0.05, tol=1e-7, vmap_chunk=5)
+    assert np.max(g.kkts) <= 1e-7
+    assert np.all(np.isfinite(g.cv_mean))
+
+
+# ------------------------------------------------------- acceptance budgets
+def test_cv_grid_budget_5x30():
+    """THE acceptance case: 5-fold x 30-lambda dense Lasso grid — <= 1
+    compile per working-set bucket, and at most 1 dispatch + 1 host sync
+    per outer iteration (chunking amortizes both far below 1)."""
+    X, y, _ = make_correlated_design(n=200, p=400, n_nonzero=15, seed=1)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    eng = make_engine(L1(1.0), Quadratic(), shared=False)
+    g = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=30, cv=5,
+                       tol=1e-8, vmap_chunk=10, engine=eng)
+    assert g.betas.shape == (5, 30, 400)
+    assert np.max(g.kkts) <= 1e-8
+    # <= 1 compile per bucket: every retrace key traced exactly once, and
+    # all keys are weighted chunk keys sharing ONE lane count
+    assert g.retraces and all(v == 1 for v in g.retraces.values()), \
+        f"retraced within a bucket: {g.retraces}"
+    lane_counts = {k[1][2] for k in g.retraces}
+    assert lane_counts == {50}, f"lane count drifted: {g.retraces}"
+    # dispatch/sync budget per outer iteration
+    assert g.n_outer > 0
+    assert g.n_dispatches <= g.n_outer, \
+        f"{g.n_dispatches} dispatches for {g.n_outer} outers"
+    assert g.n_host_syncs == g.n_dispatches
+    # the CV curve is informative: interior minimum, not an endpoint
+    assert 0 < g.best_index < 29
+
+
+def test_grid_shares_engine_without_retrace(grid_data):
+    """A second grid on the same engine reuses every compiled step."""
+    X, y, _ = grid_data
+    eng = make_engine(L1(1.0), Quadratic(), shared=False)
+    g1 = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=6, cv=3,
+                        tol=1e-8, vmap_chunk=6, engine=eng)
+    before = dict(eng.retraces)
+    g2 = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=6, cv=3,
+                        tol=1e-8, vmap_chunk=6, engine=eng, seed=7)
+    assert dict(eng.retraces) == before, "second grid retraced"
+    assert g2.n_dispatches > 0
+
+
+def test_grid_entry_errors(grid_data):
+    X, y, _ = grid_data
+    with pytest.raises(ValueError, match="fold_weights"):
+        cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
+                       fold_weights=np.ones((2, 7)))
+    with pytest.raises(ValueError, match="training"):
+        cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
+                       fold_weights=np.vstack([np.ones(X.shape[0]),
+                                               np.zeros(X.shape[0])]))
+    with pytest.raises(NotImplementedError, match="Pallas"):
+        cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
+                       use_kernels=True)
+    with pytest.raises(ValueError, match="kwargs"):
+        cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
+                       beta0=jnp.zeros(400))
+
+
+# ------------------------------------------------------------ CV estimators
+def test_lasso_cv_selects_and_refits(grid_data):
+    X, y, bt = grid_data
+    est = LassoCV(n_alphas=12, cv=4, tol=1e-9, vmap_chunk=6).fit(X, y)
+    assert est.alpha_ in est.alphas_
+    assert est.mse_path_.shape == (4, 12)
+    assert est.score(X, y) > 0.9
+    # the winner is the argmin of the mean CV curve
+    assert est.alphas_[np.argmin(est.mse_path_.mean(axis=0))] == est.alpha_
+    # predict works through the refit coefficients
+    assert est.predict(X).shape == (X.shape[0],)
+
+
+def test_lasso_cv_criterion_selection(grid_data):
+    X, y, _ = grid_data
+    fits = {}
+    for crit in ("aic", "bic", "ebic"):
+        est = LassoCV(n_alphas=12, criterion=crit, tol=1e-9).fit(X, y)
+        assert np.all(np.isfinite(est.criterion_path_))
+        assert est.alpha_ in est.alphas_
+        fits[crit] = est
+    # EBIC penalizes dimension at least as hard as BIC, which beats AIC
+    assert (fits["ebic"].coef_ != 0).sum() <= (fits["aic"].coef_ != 0).sum()
+    with pytest.raises(ValueError, match="criterion"):
+        LassoCV(n_alphas=4, criterion="nope").fit(X, y)
+
+
+def test_information_criterion_values():
+    ics = information_criterion("bic", Quadratic(), [0.5, 0.25], 100, 50,
+                                [3, 10])
+    # n log(MSE) + log(n) df, MSE = 2 * loss
+    expect = 100 * np.log([1.0, 0.5]) + np.log(100) * np.array([3, 10])
+    np.testing.assert_allclose(ics, expect)
+    dev = information_criterion("aic", Logistic(), [0.3], 100, 50, [4])
+    np.testing.assert_allclose(dev, 2 * 100 * 0.3 + 2 * 4)
+
+
+def test_mcp_cv_recovers_support(grid_data):
+    X, y, bt = grid_data
+    est = MCPRegressionCV(n_alphas=10, cv=3, tol=1e-9, vmap_chunk=5).fit(
+        X, y)
+    supp = est.coef_ != 0
+    true = bt != 0
+    # MCP at the CV-chosen lambda keeps high-precision support (Fig. 1)
+    tp = np.sum(supp & true)
+    assert tp / max(supp.sum(), 1) > 0.8
+    assert est.score(X, y) > 0.9
+
+
+def test_logreg_cv_dense_and_sparse():
+    X, y, _ = make_classification(n=160, p=100, n_nonzero=10, seed=2)
+    est = SparseLogisticRegressionCV(n_alphas=8, cv=3, eps=0.05, tol=1e-7,
+                                     vmap_chunk=4).fit(X, y)
+    assert est.score(X, y) > 0.85
+    assert est.cv_loss_.shape == (3, 8)
+    Xs = sp.csc_matrix(X)
+    est_s = SparseLogisticRegressionCV(n_alphas=8, cv=3, eps=0.05, tol=1e-7,
+                                       vmap_chunk=4).fit(Xs, y)
+    np.testing.assert_allclose(est_s.coef_, est.coef_, atol=1e-6)
+
+
+def test_lasso_cv_sample_weight(grid_data):
+    """User observation weights compose with the fold weights."""
+    X, y, _ = grid_data
+    sw = np.random.default_rng(0).uniform(0.5, 2.0, X.shape[0])
+    est = LassoCV(n_alphas=8, cv=3, tol=1e-9, vmap_chunk=4).fit(
+        X, y, sample_weight=sw)
+    assert est.alpha_ in est.alphas_ and est.score(X, y) > 0.85

@@ -1,0 +1,336 @@
+"""Sample-weight leaf property tests (DESIGN.md §9).
+
+The acceptance contracts of the weighted-datafit refactor:
+  * ``w=1`` (explicit unit weights) solves BIT-IDENTICALLY to the
+    pre-weight program on dense and CSC designs — the weight ops are pure
+    multiplicative identities and ``w=None`` elides them statically;
+  * 0/1 fold-membership weights reproduce the row-subset solve to 1e-8 on
+    dense, CSC, and mesh backends (1x1 in-process; the 2x4 parity runs
+    in-process on 8 devices and via a tier-1 subprocess smoke otherwise);
+  * invalid weights (negative, wrong shape, all-zero, unsupported datafit,
+    Pallas backend) raise at entry, before any fused-step dispatch;
+  * weights are pytree leaves: changing them never retraces, and weighted
+    solves get their own ("wtd", ...) retrace-key space;
+  * the estimator facade exposes the hook as
+    ``fit(X, y, sample_weight=...)`` with weighted intercept centering.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (MCP, L1, Lasso, LinearSVC, Logistic, Quadratic,
+                        QuadraticSVC, Box, lambda_max, make_engine,
+                        normalize_weights, reg_path, solve)
+from repro.data.synth import make_classification, make_correlated_design
+from repro.launch.mesh import make_solver_mesh
+from repro.sparse import CSCDesign
+
+requires8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def wdata():
+    X, y, _ = make_correlated_design(n=160, p=320, n_nonzero=12, rho=0.5,
+                                     seed=0)
+    rng = np.random.default_rng(3)
+    mask = (rng.uniform(size=160) < 0.7).astype(np.float64)
+    return jnp.asarray(X), jnp.asarray(y), mask
+
+
+@pytest.fixture(scope="module")
+def sparse_wdata():
+    rng = np.random.default_rng(1)
+    Xs = sp.random(160, 320, density=0.06, random_state=1, format="csc")
+    beta = np.zeros(320)
+    beta[:12] = rng.standard_normal(12)
+    y = np.asarray(Xs @ beta) + 0.1 * rng.standard_normal(160)
+    mask = (rng.uniform(size=160) < 0.7).astype(np.float64)
+    return Xs, jnp.asarray(y), mask
+
+
+# ------------------------------------------------------------- bit identity
+def test_unit_weights_bit_identical_dense(wdata):
+    X, y, _ = wdata
+    lam = lambda_max(X, y) / 10
+    for datafit, pen in ((Quadratic(), L1(lam)), (Quadratic(),
+                                                  MCP(2 * lam, 3.0))):
+        r0 = solve(X, y, datafit, pen, tol=1e-10)
+        r1 = solve(X, y, datafit, pen, tol=1e-10,
+                   sample_weight=np.ones(X.shape[0]))
+        assert bool(jnp.all(r0.beta == r1.beta)), \
+            f"w=1 changed bits for {type(pen).__name__}"
+
+
+def test_unit_weights_bit_identical_logistic_xb(logreg_data):
+    X, y, _ = logreg_data
+    lam = lambda_max(X, y, Logistic()) / 4
+    r0 = solve(X, y, Logistic(), L1(lam), tol=1e-9)
+    r1 = solve(X, y, Logistic(), L1(lam), tol=1e-9,
+               sample_weight=np.ones(X.shape[0]))
+    assert bool(jnp.all(r0.beta == r1.beta))
+
+
+def test_unit_weights_bit_identical_csc(sparse_wdata):
+    Xs, y, _ = sparse_wdata
+    lam = lambda_max(CSCDesign.from_scipy(Xs), y) / 8
+    r0 = solve(Xs, y, Quadratic(), L1(lam), tol=1e-10)
+    r1 = solve(Xs, y, Quadratic(), L1(lam), tol=1e-10,
+               sample_weight=np.ones(Xs.shape[0]))
+    assert bool(jnp.all(r0.beta == r1.beta))
+
+
+# ------------------------------------------------- 0/1 weights == row subset
+def _subset(X, y, mask):
+    Xn, yn = np.asarray(X), np.asarray(y)
+    keep = mask > 0
+    return jnp.asarray(Xn[keep]), jnp.asarray(yn[keep])
+
+
+def test_01_weights_match_subset_dense_gram(wdata):
+    X, y, mask = wdata
+    Xs, ys = _subset(X, y, mask)
+    lam = lambda_max(Xs, ys) / 10
+    for pen in (L1(lam), MCP(2 * lam, 3.0)):
+        rw = solve(X, y, Quadratic(), pen, tol=1e-12, sample_weight=mask)
+        rs = solve(Xs, ys, Quadratic(), pen, tol=1e-12)
+        assert float(jnp.max(jnp.abs(rw.beta - rs.beta))) < 1e-8
+
+
+def test_01_weights_match_subset_dense_xb(logreg_data):
+    X, y, _ = logreg_data
+    rng = np.random.default_rng(5)
+    mask = (rng.uniform(size=X.shape[0]) < 0.7).astype(np.float64)
+    Xs, ys = _subset(X, y, mask)
+    lam = lambda_max(Xs, ys, Logistic()) / 4
+    rw = solve(X, y, Logistic(), L1(lam), tol=1e-10, sample_weight=mask)
+    rs = solve(Xs, ys, Logistic(), L1(lam), tol=1e-10)
+    assert float(jnp.max(jnp.abs(rw.beta - rs.beta))) < 1e-8
+
+
+def test_01_weights_match_subset_csc(sparse_wdata):
+    Xs, y, mask = sparse_wdata
+    keep = mask > 0
+    X_sub = Xs[keep.nonzero()[0], :].tocsc()
+    y_sub = jnp.asarray(np.asarray(y)[keep])
+    lam = lambda_max(CSCDesign.from_scipy(X_sub), y_sub) / 8
+    rw = solve(Xs, y, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask)
+    rs = solve(X_sub, y_sub, Quadratic(), L1(lam), tol=1e-12)
+    assert float(jnp.max(jnp.abs(rw.beta - rs.beta))) < 1e-8
+
+
+def test_01_weights_match_subset_mesh_1x1(wdata):
+    """The 1x1 mesh lowers to the dense program: weighted solves included."""
+    X, y, mask = wdata
+    Xs, ys = _subset(X, y, mask)
+    lam = lambda_max(Xs, ys) / 10
+    mesh = make_solver_mesh((1, 1))
+    rd = solve(X, y, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask)
+    rm = solve(X, y, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask,
+               mesh=mesh)
+    assert bool(jnp.all(rd.beta == rm.beta)), "1x1 weighted not bit-identical"
+    rs = solve(Xs, ys, Quadratic(), L1(lam), tol=1e-12)
+    assert float(jnp.max(jnp.abs(rm.beta - rs.beta))) < 1e-8
+
+
+@requires8
+def test_01_weights_match_subset_mesh_2x4(wdata):
+    X, y, mask = wdata
+    Xs, ys = _subset(X, y, mask)
+    lam = lambda_max(Xs, ys) / 10
+    mesh = make_solver_mesh((2, 4))
+    rm = solve(X, y, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask,
+               mesh=mesh)
+    rs = solve(Xs, ys, Quadratic(), L1(lam), tol=1e-12)
+    assert float(jnp.max(jnp.abs(rm.beta - rs.beta))) < 1e-8
+
+
+@requires8
+def test_01_weights_match_subset_mesh_feature_csc(sparse_wdata):
+    Xs, y, mask = sparse_wdata
+    keep = mask > 0
+    X_sub = Xs[keep.nonzero()[0], :].tocsc()
+    y_sub = jnp.asarray(np.asarray(y)[keep])
+    lam = lambda_max(CSCDesign.from_scipy(X_sub), y_sub) / 8
+    mesh = make_solver_mesh((1, 8))
+    rw = solve(Xs, y, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask,
+               mesh=mesh)
+    rs = solve(X_sub, y_sub, Quadratic(), L1(lam), tol=1e-12)
+    assert float(jnp.max(jnp.abs(rw.beta - rs.beta))) < 1e-8
+
+
+# ------------------------------------------------------------- entry errors
+def test_invalid_weights_raise_at_entry(wdata):
+    X, y, _ = wdata
+    n = X.shape[0]
+    eng = make_engine(L1(0.1), Quadratic())
+    cases = [
+        (-np.ones(n), "non-negative"),
+        (np.zeros(n), "sums to zero"),
+        (np.ones(n - 1), "length n"),
+        (np.full(n, np.nan), "finite"),
+    ]
+    for bad, msg in cases:
+        with pytest.raises(ValueError, match=msg):
+            solve(X, y, Quadratic(), L1(0.1), sample_weight=bad, engine=eng)
+    assert eng.n_dispatches == 0, "weight rejection happened mid-solve"
+
+
+def test_unsupported_weight_configs_raise_at_entry(wdata):
+    X, y, mask = wdata
+    n = X.shape[0]
+    # dual SVM datafit: weights rescale the box constraint, not the datafit
+    Z = (y[:, None] * X[:, :40]).T
+    with pytest.raises(NotImplementedError, match="SUPPORTS_WEIGHTS"):
+        solve(Z, y, QuadraticSVC(), Box(0.1), sample_weight=np.ones(40))
+    with pytest.raises(NotImplementedError):
+        LinearSVC(C=0.1).fit(X, y, sample_weight=np.ones(n))
+    # Pallas kernels hard-code unweighted raw gradients
+    with pytest.raises(NotImplementedError, match="Pallas"):
+        solve(X, y, Quadratic(), L1(0.1), use_kernels=True,
+              sample_weight=mask)
+
+
+def test_normalize_weights_rescales_to_n():
+    w = normalize_weights([2.0, 0.0, 2.0, 0.0], 4, jnp.float64)
+    np.testing.assert_allclose(np.asarray(w), [2.0, 0.0, 2.0, 0.0])
+    w2 = normalize_weights(np.full(10, 0.25), 10, jnp.float64)
+    np.testing.assert_allclose(np.asarray(w2), np.ones(10))
+
+
+# --------------------------------------------------------- leaf, not retrace
+def test_weight_changes_never_retrace(wdata):
+    """Weights are pytree leaves (one compile per bucket), and weighted
+    solves live in their own ("wtd", ...) retrace-key space."""
+    X, y, mask = wdata
+    lam = lambda_max(X, y) / 10
+    eng = make_engine(L1(lam), Quadratic(), shared=False)
+    solve(X, y, Quadratic(), L1(lam), tol=1e-10, engine=eng)
+    base_keys = set(eng.retraces)
+    assert all(not (isinstance(k, tuple) and k[0] == "wtd")
+               for k in base_keys)
+    rng = np.random.default_rng(0)
+    for seed in range(3):
+        w = rng.uniform(0.2, 2.0, X.shape[0])
+        solve(X, y, Quadratic(), L1(lam), tol=1e-10, engine=eng,
+              sample_weight=w)
+    wtd_keys = {k for k in eng.retraces if k not in base_keys}
+    assert wtd_keys and all(k[0] == "wtd" for k in wtd_keys)
+    assert all(eng.retraces[k] == 1 for k in wtd_keys), \
+        f"weight change retraced: {eng.retraces}"
+
+
+# ------------------------------------------------------------ estimator hook
+def test_estimator_sample_weight_hook(wdata):
+    X, y, mask = wdata
+    Xs, ys = _subset(X, y, mask)
+    lam = lambda_max(Xs, ys) / 10
+    est_w = Lasso(alpha=lam, tol=1e-12).fit(X, y, sample_weight=mask)
+    est_s = Lasso(alpha=lam, tol=1e-12).fit(Xs, ys)
+    np.testing.assert_allclose(est_w.coef_, est_s.coef_, atol=1e-8)
+    with pytest.raises(ValueError, match="non-negative"):
+        Lasso(alpha=lam).fit(X, y, sample_weight=-np.ones(X.shape[0]))
+
+
+def test_estimator_weighted_intercept(wdata):
+    """Weighted intercept fit == subset intercept fit (weighted centering)."""
+    X, y, mask = wdata
+    y_off = y + 2.5
+    Xs, ys = _subset(X, y_off, mask)
+    lam = lambda_max(Xs, ys - np.mean(np.asarray(ys))) / 10
+    ew = Lasso(alpha=lam, tol=1e-12, fit_intercept=True).fit(
+        X, y_off, sample_weight=mask)
+    es = Lasso(alpha=lam, tol=1e-12, fit_intercept=True).fit(Xs, ys)
+    np.testing.assert_allclose(ew.coef_, es.coef_, atol=1e-8)
+    np.testing.assert_allclose(ew.intercept_, es.intercept_, atol=1e-8)
+
+
+def test_weighted_lambda_max(wdata):
+    """Above the weighted lambda_max the weighted solution is exactly 0."""
+    X, y, mask = wdata
+    lmax_w = lambda_max(X, y, sample_weight=mask)
+    Xs, ys = _subset(X, y, mask)
+    assert np.isclose(lmax_w, lambda_max(Xs, ys))
+    res = solve(X, y, Quadratic(), L1(lmax_w * 1.001), tol=1e-10,
+                sample_weight=mask)
+    assert int(jnp.sum(res.beta != 0)) == 0
+
+
+# -------------------------------------------------------------- path weights
+def test_reg_path_sample_weight_both_drivers(wdata):
+    X, y, mask = wdata
+    Xs, ys = _subset(X, y, mask)
+    lams = lambda_max(Xs, ys) * np.geomspace(1.0, 0.05, 6)
+    seq = reg_path(X, y, L1(1.0), Quadratic(), lambdas=lams, tol=1e-10,
+                   sample_weight=mask)
+    chk = reg_path(X, y, L1(1.0), Quadratic(), lambdas=lams, tol=1e-10,
+                   sample_weight=mask, vmap_chunk=3)
+    sub = reg_path(Xs, ys, L1(1.0), Quadratic(), lambdas=lams, tol=1e-10)
+    assert np.max(np.abs(seq.betas - sub.betas)) < 1e-8
+    assert np.max(np.abs(chk.betas - sub.betas)) < 1e-8
+
+
+def test_screened_path_rejects_weights(wdata):
+    X, y, mask = wdata
+    with pytest.raises(ValueError, match="gap_safe"):
+        reg_path(X, y, L1(1.0), Quadratic(), n_lambdas=3, screen="gap_safe",
+                 sample_weight=mask)
+
+
+# ------------------------------------------------- tier-1 subprocess smoke
+_SUBPROCESS_TEST = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core import L1, Quadratic, lambda_max, solve
+from repro.core.path import cross_val_path
+from repro.data.synth import make_correlated_design
+from repro.launch.mesh import make_solver_mesh
+
+X, y, _ = make_correlated_design(n=120, p=256, n_nonzero=10, seed=0)
+Xj, yj = jnp.asarray(X), jnp.asarray(y)
+rng = np.random.default_rng(3)
+mask = (rng.uniform(size=120) < 0.7).astype(np.float64)
+keep = mask > 0
+Xs, ys = jnp.asarray(X[keep]), jnp.asarray(y[keep])
+lam = lambda_max(Xs, ys) / 10
+mesh = make_solver_mesh((2, 4))
+rm = solve(Xj, yj, Quadratic(), L1(lam), tol=1e-12, sample_weight=mask,
+           mesh=mesh)
+rs = solve(Xs, ys, Quadratic(), L1(lam), tol=1e-12)
+diff = float(jnp.max(jnp.abs(rm.beta - rs.beta)))
+assert diff < 1e-8, f"2x4 weighted vs subset diff {diff}"
+g = cross_val_path(Xj, yj, Quadratic(), L1(1.0), n_lambdas=4, cv=3,
+                   tol=1e-11, vmap_chunk=2, mesh=mesh)
+gd = cross_val_path(Xj, yj, Quadratic(), L1(1.0), n_lambdas=4, cv=3,
+                    tol=1e-11, vmap_chunk=2)
+gdiff = float(np.max(np.abs(g.betas - gd.betas)))
+assert gdiff < 1e-8, f"2x4 grid vs dense grid diff {gdiff}"
+print("WEIGHTED-MESH-SMOKE-OK", diff, gdiff)
+"""
+
+
+@pytest.mark.skipif(len(jax.devices()) >= 8,
+                    reason="runs in-process on 8 devices")
+def test_weighted_mesh_8_devices_subprocess():
+    """Tier-1 acceptance: 0/1-weighted solve and the CV grid match their
+    dense/subset references on a real 2x4 mesh (forced host devices must be
+    set before jax initializes, hence the subprocess)."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_TEST],
+                       capture_output=True, text=True, timeout=900, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    assert "WEIGHTED-MESH-SMOKE-OK" in r.stdout
