@@ -17,7 +17,13 @@ working-set bucket, well under 1 dispatch + 1 sync per outer iteration.
 ``--check-budget BENCH_engine.json`` turns the run into a CI perf guard:
 it fails when any benchmark's jit-dispatches-per-outer-iteration exceed the
 budget recorded in the committed baseline (the fused-engine contract is
-exactly 1).
+exactly 1), when the per-stage roofline table is missing or incomplete, or
+when the fused single-traversal head's score+select+gather bytes-per-outer
+exceeds ``budget_fused_bytes_ratio`` (0.6) of the two-pass baseline
+(DESIGN.md §10). The ``pallas_fused`` block records before (jax two-pass) /
+after (Pallas fused kernel) wall clocks at the smoke shapes plus the modeled
+bytes-per-outer; the ``roofline`` block is the full per-stage table printed
+by ``benchmarks/roofline_report.py``.
 
 The ``seed_before`` block is the measurement of the pre-engine host-driven
 solver (3-4 jitted dispatches + 3 blocking scalar syncs per outer iteration),
@@ -80,10 +86,19 @@ CONFIGS = {
         "fig5_mcp": dict(n=400, p=2000, n_nonzero=40),
     },
     "smoke": {
-        "fig2_lasso": dict(n=100, p=300, n_nonzero=10),
+        # 128 x 1024 keeps the smoke run fast while hitting a shape where
+        # the fused single-read head's byte budget (ratio <= 0.6, see
+        # repro/roofline/engine_stages.py) is meaningfully exercised
+        "fig2_lasso": dict(n=128, p=1024, n_nonzero=10),
         "fig5_mcp": dict(n=100, p=400, n_nonzero=12),
     },
 }
+
+# the fused single-traversal head (kernels/fused_ws.py) must beat the
+# two-pass score+select+gather HBM traffic by at least this factor per
+# outer iteration; enforced by --check-budget against the analytic byte
+# model (DESIGN.md §10)
+BUDGET_FUSED_BYTES_RATIO = 0.6
 
 # Figure 4's M/EEG analog (multitask regression, block penalty) through the
 # block-coordinate fused engine (DESIGN.md §8): leadfield-like column-coherent
@@ -136,12 +151,15 @@ CV_CONFIGS = {
 }
 
 
-def _timed_solve(X, y, datafit, penalty, mesh, tol):
+def _timed_solve(X, y, datafit, penalty, mesh, tol, use_kernels=False):
     """The shared measurement protocol: compile warm-up, best-of-3 timed
     solves, per-outer dispatch/sync telemetry. One protocol for every
-    benchmark (scalar, sparse, multitask) so budget semantics can't fork."""
+    benchmark (scalar, sparse, multitask) so budget semantics can't fork.
+    ``use_kernels=True`` routes through the Pallas backend (the fused
+    score/select/gather head on dense designs)."""
     kw = dict(tol=tol, max_outer=100)
-    engine = make_engine(penalty, datafit, mesh=mesh)
+    engine = make_engine(penalty, datafit, mesh=mesh,
+                         use_kernels=use_kernels)
     solve(X, y, datafit, penalty, engine=engine, **kw)       # compile
     wall = float("inf")
     for _ in range(3):                                       # best of 3
@@ -162,7 +180,7 @@ def _timed_solve(X, y, datafit, penalty, mesh, tol):
     }
 
 
-def _measure(bench, cfg, mesh=None, sparse=False):
+def _measure(bench, cfg, mesh=None, sparse=False, use_kernels=False):
     if sparse:
         from repro.sparse import CSCDesign
         Xsp, y, _ = make_sparse_design(seed=0, snr=5.0, **cfg)
@@ -170,7 +188,8 @@ def _measure(bench, cfg, mesh=None, sparse=False):
         nnz = int(Xsp.nnz)
         # convert outside the timed loop, like the dense jnp.asarray above:
         # wall_s must measure the CSC-native solve, not host conversion
-        X = CSCDesign.from_scipy(Xsp)
+        # (the Pallas score backend additionally needs the ELL layout)
+        X = CSCDesign.from_scipy(Xsp, ell=use_kernels)
     else:
         X, y, _ = make_correlated_design(seed=0, rho=0.5, snr=5.0, **cfg)
         X, y = jnp.asarray(X), jnp.asarray(y)
@@ -178,7 +197,8 @@ def _measure(bench, cfg, mesh=None, sparse=False):
     lam = lambda_max(X, y) / 10
     penalty = L1(lam) if bench.startswith(("fig2", "sparse")) \
         else MCP(lam, 3.0)
-    out = _timed_solve(X, y, Quadratic(), penalty, mesh, tol=1e-10)
+    out = _timed_solve(X, y, Quadratic(), penalty, mesh, tol=1e-10,
+                       use_kernels=use_kernels)
     if sparse:
         out["nnz"] = nnz
         out["shape"] = [cfg["n"], cfg["p"]]
@@ -295,10 +315,35 @@ def _check_budget(report, budget_path):
                     f"{section}/{bench}: "
                     f"{m['jit_dispatches_per_outer']:.3f} dispatches/outer "
                     f"exceeds the recorded budget {cap:.3f}")
+    # fused single-read byte budget (DESIGN.md §10): every roofline table in
+    # this run must be complete (the five stages + the fused kernel) and its
+    # deterministic fused/two-pass bytes-per-outer ratio must stay within
+    # the recorded budget
+    from repro.roofline.engine_stages import STAGES
+    ratio_cap = budget.get("budget_fused_bytes_ratio",
+                           BUDGET_FUSED_BYTES_RATIO)
+    tables = report.get("roofline", {})
+    if not tables:
+        failures.append("roofline: no per-stage table recorded")
+    for bench, table in tables.items():
+        missing = [s for s in (*STAGES, "fused_kernel")
+                   if s not in table.get("stages", {})]
+        if missing:
+            failures.append(f"roofline/{bench}: missing stages {missing}")
+        if table["fused_ratio"] > ratio_cap + 1e-9:
+            failures.append(
+                f"roofline/{bench}: fused bytes-per-outer ratio "
+                f"{table['fused_ratio']:.4f} exceeds the budget {ratio_cap}")
+    for bench, rec in report.get("pallas_fused", {}).items():
+        r = rec.get("fused_bytes_ratio")
+        if r is not None and r > ratio_cap + 1e-9:
+            failures.append(
+                f"pallas_fused/{bench}: fused bytes-per-outer ratio "
+                f"{r:.4f} exceeds the budget {ratio_cap}")
     if failures:
-        raise SystemExit("dispatch-budget regression:\n  "
+        raise SystemExit("perf-budget regression:\n  "
                          + "\n  ".join(failures))
-    print(f"dispatch budgets OK (vs {budget_path})")
+    print(f"dispatch + fused-byte budgets OK (vs {budget_path})")
 
 
 def main(argv=None):
@@ -377,6 +422,48 @@ def main(argv=None):
                 raise SystemExit(f"{bench} did not converge")
             if m["host_syncs_per_outer"] > 1.0 + 1e-9:
                 raise SystemExit(f"{bench} exceeded 1 host sync per outer")
+
+    # fused Pallas head, before/after: the same benchmark solved through the
+    # jax backend (two-pass score -> select -> gather) and the Pallas backend
+    # (single-traversal fused kernel). Always measured at the smoke shapes:
+    # Pallas runs in interpret mode on CPU, so the wall clocks are a
+    # correctness/trajectory record while the byte models carry the perf
+    # claim (their ratio is what --check-budget enforces).
+    from repro.roofline.engine_stages import (fused_bytes_model, stage_table,
+                                              two_pass_bytes_model)
+    report["budget_fused_bytes_ratio"] = BUDGET_FUSED_BYTES_RATIO
+    report["pallas_fused"] = {}
+    fused_benches = [("fig2_lasso", CONFIGS["smoke"]["fig2_lasso"], False)]
+    if not args.no_sparse:
+        fused_benches.append(
+            ("sparse_fig2", SPARSE_CONFIGS["smoke"]["sparse_fig2"], True))
+    for bench, cfg, sp in fused_benches:
+        before = _measure(bench, cfg, sparse=sp)
+        after = _measure(bench, cfg, sparse=sp, use_kernels=True)
+        rec = {"before_jax": before, "after_pallas": after,
+               "shape": [cfg["n"], cfg["p"]]}
+        if not sp:     # the dense fused head carries the byte-budget claim
+            two = two_pass_bytes_model(cfg["n"], cfg["p"], 64)
+            fus = fused_bytes_model(cfg["n"], cfg["p"], 64)
+            rec["two_pass_bytes_per_outer"] = two["total"]
+            rec["fused_bytes_per_outer"] = fus["total"]
+            rec["fused_bytes_ratio"] = fus["total"] / two["total"]
+        report["pallas_fused"][bench] = rec
+        extra = (f", bytes/outer ratio {rec['fused_bytes_ratio']:.4f}"
+                 if not sp else "")
+        print(f"{bench} [pallas fused]: jax {before['wall_s']:.3f}s -> "
+              f"pallas(interpret) {after['wall_s']:.3f}s{extra}")
+        if not after["converged"]:
+            raise SystemExit(f"{bench} [pallas fused] did not converge")
+
+    # the per-stage roofline table CI enforces (deterministic byte models +
+    # measured XLA costs at this scale's fig2_lasso shape, ws bucket 64)
+    rl = CONFIGS[scale]["fig2_lasso"]
+    report["roofline"] = {
+        "fig2_lasso": stage_table(rl["n"], rl["p"], 64)}
+    print(f"roofline fig2_lasso: fused/two-pass bytes-per-outer ratio "
+          f"{report['roofline']['fig2_lasso']['fused_ratio']:.4f} "
+          f"(budget {BUDGET_FUSED_BYTES_RATIO})")
 
     if not args.no_sharded:
         report["mesh_2x4"] = _measure_sharded(scale)

@@ -1,79 +1,58 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the recorded JSONs
-(experiments/dryrun/*.json + experiments/roofline/*.json)."""
+"""Print the engine's per-stage roofline table.
+
+Reads the ``roofline`` section recorded in BENCH_engine.json by
+``bench_engine.py`` (the record CI enforces via ``--check-budget``), or
+recomputes it live with ``--live``:
+
+    PYTHONPATH=src python -m benchmarks.roofline_report
+    PYTHONPATH=src python -m benchmarks.roofline_report --live --p 4096
+"""
 from __future__ import annotations
 
-import glob
+import argparse
 import json
 import os
-
-from repro.configs import ARCH_NAMES
-from repro.models.config import cells_for
+import sys
 
 
-def load_dir(d):
-    out = {}
-    for f in glob.glob(os.path.join(d, "*.json")):
-        with open(f) as fh:
-            rec = json.load(fh)
-        out[os.path.basename(f)[:-5]] = rec
-    return out
-
-
-def dryrun_table(d="experiments/dryrun"):
-    recs = load_dir(d)
-    lines = ["| arch | shape | mesh | compile s | args GiB/dev | temp GiB/dev "
-             "| HLO GFLOP/dev | coll MiB/dev |",
-             "|---|---|---|---|---|---|---|---|"]
-    for arch in ARCH_NAMES:
-        for shape in [s.name for s in cells_for(arch)]:
-            for mesh in ("16-16", "2-16-16"):
-                key = f"{arch}_{shape}_{mesh}"
-                r = recs.get(key)
-                if r is None:
-                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
-                    continue
-                m = r["memory"]
-                lines.append(
-                    f"| {arch} | {shape} | {mesh.replace('-', 'x')} "
-                    f"| {r['compile_s']:.1f} "
-                    f"| {m['argument_bytes'] / 2**30:.2f} "
-                    f"| {m['temp_bytes'] / 2**30:.2f} "
-                    f"| {r['flops_per_device_toplevel'] / 1e9:.1f} "
-                    f"| {r['collective_link_bytes_toplevel'] / 2**20:.0f} |")
-    return "\n".join(lines)
-
-
-def roofline_table(d="experiments/roofline", tag=""):
-    recs = load_dir(d)
-    lines = ["| arch | shape | compute s | memory s | collective s | dominant "
-             "| roofline frac | useful ratio |",
-             "|---|---|---|---|---|---|---|---|"]
-    for arch in ARCH_NAMES:
-        for shape in [s.name for s in cells_for(arch)]:
-            key = f"{arch}_{shape}" + (f"_{tag}" if tag else "")
-            r = recs.get(key)
-            if r is None:
-                lines.append(f"| {arch} | {shape} | MISSING | | | | | |")
-                continue
-            lines.append(
-                f"| {arch} | {shape} | {r['compute_s']:.4g} "
-                f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
-                f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
-                f"| {r['useful_ratio']:.3f} |")
-    return "\n".join(lines)
+def report_from_json(path: str) -> int:
+    """Print every per-stage table recorded under the file's "roofline" key;
+    returns the number of tables printed."""
+    with open(path) as fh:
+        rec = json.load(fh)
+    tables = rec.get("roofline") or {}
+    if not tables:
+        print(f"[roofline_report] {path} has no 'roofline' section; run "
+              f"bench_engine.py (or use --live)")
+        return 0
+    from repro.roofline.engine_stages import format_stage_table
+    for name, table in tables.items():
+        print(f"\n### {name}")
+        print(format_stage_table(table))
+    return len(tables)
 
 
 def main():
-    import os
-    dr = "experiments/dryrun_opt" if os.path.isdir("experiments/dryrun_opt") \
-        else "experiments/dryrun"
-    print("## Dry-run (optimized code)\n")
-    print(dryrun_table(dr))
-    print("\n## Roofline — paper-faithful baseline\n")
-    print(roofline_table("experiments/roofline"))
-    if os.path.isdir("experiments/roofline_v2"):
-        print("\n## Roofline — optimized (post-§Perf)\n")
-        print(roofline_table("experiments/roofline_v2"))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="bench record to read (default BENCH_engine.json)")
+    ap.add_argument("--live", action="store_true",
+                    help="recompute instead of reading the bench record")
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--p", type=int, default=1024)
+    ap.add_argument("--ws", type=int, default=64)
+    args = ap.parse_args()
+    if args.live:
+        import jax
+        jax.config.update("jax_enable_x64", True)
+        from repro.roofline.engine_stages import (format_stage_table,
+                                                  stage_table)
+        print(format_stage_table(stage_table(args.n, args.p, args.ws)))
+        return
+    if not os.path.exists(args.json):
+        sys.exit(f"[roofline_report] {args.json} not found (pass --live to "
+                 f"compute without a bench record)")
+    report_from_json(args.json)
 
 
 if __name__ == "__main__":

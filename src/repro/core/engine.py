@@ -42,8 +42,9 @@ blocks, e.g. MultitaskQuadratic + BlockL1/BlockMCP). Violation scores are
 per-row block norms, so selection/top-k/bucketing are unchanged; gathers
 and scatters move [K, T] blocks; the Gram inner solve is the K x K Gram
 against a [K, T] right-hand side; the task dimension is replicated on every
-mesh. The only scalar-only backend is Pallas (rejected at entry by
-``SolveEngine.validate``).
+mesh. The Pallas backend scores multitask blocks in-kernel too (the fused
+head handles [p, T]); only its CD *epoch* kernels are scalar-coordinate, so
+block-penalty inner solves fall back to the jax epochs per M-block.
 
 Sample weights (DESIGN.md §9): every step takes an optional per-sample
 weight vector ``w`` [n], sharded with the data mesh axis exactly like y/Xb
@@ -71,9 +72,10 @@ from repro.launch.shardings import design_specs, task_spec
 
 from .anderson import anderson_extrapolate
 from .cd import cd_epoch_gram, cd_epoch_xb
-from .working_set import (gather_ws_cols, gather_ws_vec, scatter_ws,
-                          select_working_set, select_working_set_local,
-                          shard_ws_mask, violation_scores)
+from .working_set import (candidate_columns, gather_ws_cols, gather_ws_vec,
+                          scatter_ws, select_working_set,
+                          select_working_set_local, shard_ws_mask,
+                          violation_scores)
 
 __all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
            "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS", "Design",
@@ -87,6 +89,21 @@ KERNEL_DATAFIT_KINDS = {
     "Logistic": "logistic",
     "QuadraticSVC": "svc",
 }
+
+# Unified Pallas rejection wording (DESIGN.md §8.4): after weighted,
+# multitask, and chunked solves gained Pallas support, exactly two
+# combinations still reject — each has ONE message text shared by every
+# raise site (engine.validate and the sparse design's defensive check), with
+# a pointer to the supported-path matrix.
+_PALLAS_MATRIX = ("see the supported-path matrix in README.md "
+                  "(Pallas column) and DESIGN.md §8.4")
+PALLAS_MESH_ERROR = (
+    "backend='pallas' does not run under mesh=...: the kernels own the "
+    "device grid that shard_map would partition; " + _PALLAS_MATRIX +
+    "; use backend='jax' (use_kernels=False) for sharded solves")
+PALLAS_SPARSE_ELL_ERROR = (
+    "backend='pallas' on a sparse design requires the ELL score layout: "
+    "build it with CSCDesign.from_scipy(X, ell=True); " + _PALLAS_MATRIX)
 
 
 # --------------------------------------------------------- design abstraction
@@ -129,9 +146,11 @@ class Design:
         """X @ beta on the global design ([p] or multitask [p, T])."""
         raise NotImplementedError
 
-    def lipschitz(self, datafit, w=None):
+    def lipschitz(self, datafit, w=None, backend="jax"):
         """Per-coordinate Lipschitz constants L_j of nabla_j f (`w`:
-        optional per-sample weights, DESIGN.md §9)."""
+        optional per-sample weights, DESIGN.md §9; `backend="pallas"` lets
+        sparse designs route the weighted column-square reduction through
+        the Pallas segment-sum kernel on their grid-driver hot path)."""
         raise NotImplementedError
 
     def in_spec(self, data_axis, model_axis):
@@ -185,7 +204,8 @@ class DenseDesign(Design):
     def matvec(self, beta):
         return self.X @ beta
 
-    def lipschitz(self, datafit, w=None):
+    def lipschitz(self, datafit, w=None, backend="jax"):
+        del backend                     # dense reduction is already one pass
         if w is None:
             return datafit.lipschitz(self.X)
         return datafit.lipschitz(self.X, w)
@@ -413,6 +433,15 @@ class SubproblemSolver:
         return beta, aux, k * M, kkt
 
 
+def _scalar_epoch_kernel_ok(penalty, beta) -> bool:
+    """The Pallas CD-epoch kernels update scalar coordinates; multitask /
+    block-penalty inner solves fall back to the jax epochs (the fused score
+    head still runs in Pallas, so block solves keep the single-traversal
+    outer step)."""
+    from repro.kernels.common import SCALAR_COORD_PENALTIES
+    return beta.ndim == 1 and type(penalty) in SCALAR_COORD_PENALTIES
+
+
 class GramSolver(SubproblemSolver):
     """Quadratic datafits: state q = G beta stays K-sized (VMEM-resident on
     TPU through the Pallas backend; see kernels/cd_epoch.py)."""
@@ -424,7 +453,8 @@ class GramSolver(SubproblemSolver):
         return ctx.G @ beta
 
     def epoch(self, ctx, beta, aux):
-        if self.config.backend == "pallas":
+        if self.config.backend == "pallas" and _scalar_epoch_kernel_ok(
+                ctx.penalty, beta):
             from repro.kernels import ops as kops
             from repro.kernels.common import penalty_params
             return kops.cd_epoch_gram(ctx.G, ctx.c, beta, aux, ctx.L_ws,
@@ -459,14 +489,15 @@ class XbSolver(SubproblemSolver):
         return self._rebuild(ctx, beta)
 
     def epoch(self, ctx, beta, aux):
-        if self.config.backend == "pallas":
+        if self.config.backend == "pallas" and _scalar_epoch_kernel_ok(
+                ctx.penalty, beta):
             from repro.kernels import ops as kops
             from repro.kernels.common import penalty_params
             kind = KERNEL_DATAFIT_KINDS[type(ctx.datafit).__name__]
             return kops.cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
                                     ctx.offset_ws, type(ctx.penalty),
                                     penalty_params(ctx.penalty), kind,
-                                    epochs=1)
+                                    w=ctx.w, epochs=1)
         return cd_epoch_xb(ctx.Xt_ws, ctx.y, beta, aux, ctx.L_ws,
                            ctx.offset_ws, ctx.datafit, ctx.penalty,
                            axis=ctx.axis, w=ctx.w)
@@ -600,11 +631,38 @@ class SolveEngine:
         design = design.local_block()
         width = design.width
         n_glob = design.n_rows * self._n_data_shards()
-        sdf, grad, scores, kkt, gsupp, gcount0, obj = self._score_pass(
-            design, y, w, beta, Xb, L, offset, datafit, penalty)
-
-        ws = select_working_set_local(scores, gsupp, bucket, ma)
-        mine, loc = shard_ws_mask(ws, width, ma)
+        if cfg.backend == "pallas" and design.KIND == "dense" \
+                and da is None and ma is None:
+            # fused head (kernels/fused_ws.py): ONE X traversal yields the
+            # scores, the offset-corrected gradient, AND the gathered
+            # candidate columns. The host-free merge is select_working_set
+            # on the kernel-emitted scores — bit-identical to the two-pass
+            # path by construction — plus a candidate-row lookup for X_ws.
+            from repro.kernels import ops as kops
+            from repro.kernels.common import penalty_params
+            fp = (not penalty.HAS_SUBDIFF) if cfg.use_fp_score is None \
+                else cfg.use_fp_score
+            raw = _df_raw(datafit, Xb, y, w)
+            gsupp = penalty.generalized_support(beta)
+            scores, grad, cand_idx, cand_cols = kops.fused_ws(
+                design.X, raw, beta, L, offset,
+                gsupp.astype(design.X.dtype), type(penalty),
+                penalty_params(penalty), bucket, use_fp=fp)
+            kkt = jnp.max(scores)
+            gcount0 = jnp.sum(gsupp, dtype=jnp.int32)
+            obj = _df_value(datafit, Xb, y, w) + _lin(offset, beta) + \
+                penalty.value(beta)
+            ws = select_working_set(scores, gsupp, bucket)
+            mine, loc = None, ws
+            X_ws = candidate_columns(cand_idx, cand_cols, ws, width)
+            sdf, ws_aux = None, None
+        else:
+            sdf, grad, scores, kkt, gsupp, gcount0, obj = self._score_pass(
+                design, y, w, beta, Xb, L, offset, datafit, penalty)
+            ws = select_working_set_local(scores, gsupp, bucket, ma)
+            mine, loc = shard_ws_mask(ws, width, ma)
+            # [n_loc, K] model-replicated ws columns (+ sparse windows)
+            X_ws, ws_aux = design.gather_ws(mine, loc, ma)
         L_ws = gather_ws_vec(L, mine, loc, ma)
         offset_ws = gather_ws_vec(offset, mine, loc, ma)
         beta_ws0 = gather_ws_vec(beta, mine, loc, ma)
@@ -612,8 +670,6 @@ class SolveEngine:
         in_ws = gsupp[loc] if mine is None else jnp.where(mine, gsupp[loc],
                                                           False)
         cov = _psum_if(jnp.sum(in_ws, dtype=jnp.int32), ma) == gcount0
-        # [n_loc, K] model-replicated ws columns (+ sparse scatter windows)
-        X_ws, ws_aux = design.gather_ws(mine, loc, ma)
         pen_ws = penalty.restricted(ws) if hasattr(penalty, "restricted") \
             else penalty
         eps_in = jnp.maximum(eps_frac * kkt, 0.1 * tol)
@@ -887,11 +943,9 @@ class SolveEngine:
         (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state. ``w`` may
         be None, a shared [n] weight vector, or per-lane [C, n] weights
         (with ``L`` then the per-lane [C, p] Lipschitz constants) — the
-        grid-driver form (DESIGN.md §9)."""
-        if self.config.backend == "pallas":
-            raise ValueError(
-                "chunked (vmapped) path solving requires backend='jax'; the "
-                "Pallas kernels are not batchable under vmap")
+        grid-driver form (DESIGN.md §9). The Pallas kernels batch cleanly
+        under vmap (pallas_call adds a leading grid dimension), so the
+        chunked driver runs on every backend."""
         self.n_dispatches += 1
         return self._jchunk(design, y, lams, betas, Xbs, L, offset, datafit,
                             penalty, tol, eps_frac, max_outer, growth, w,
@@ -904,24 +958,29 @@ class SolveEngine:
         Every combination the engine cannot run raises here — before any
         trace — with the exact messages documented in DESIGN.md §8.4. The
         supported matrix (datafit x penalty x dense/sparse/mesh/pallas) is
-        in README.md; since the block-coordinate generalization, multitask
-        datafits (2-D coefficients) run on every backend except Pallas.
+        in README.md. Since the fused-kernel generalization, the Pallas
+        backend runs weighted, multitask (block-penalty), and chunked
+        solves; the two remaining Pallas rejections (mesh, non-ELL sparse)
+        share one message text each — PALLAS_MESH_ERROR and
+        PALLAS_SPARSE_ELL_ERROR — with the sparse design's defensive check.
         ``weighted=True`` additionally checks the sample-weight leaf is
-        runnable (the datafit declares SUPPORTS_WEIGHTS; the Pallas epoch
-        kernels hard-code unweighted raw gradients and reject it).
+        runnable (the datafit declares SUPPORTS_WEIGHTS).
         """
-        if weighted:
-            if not getattr(datafit, "SUPPORTS_WEIGHTS", False):
+        if weighted and not getattr(datafit, "SUPPORTS_WEIGHTS", False):
+            raise NotImplementedError(
+                f"sample_weight=...: datafit {type(datafit).__name__} "
+                f"does not support sample weights (declare "
+                f"SUPPORTS_WEIGHTS=True and accept w in "
+                f"value/raw_grad/lipschitz/make_gram)")
+        if n_tasks:
+            from repro.kernels.common import SCALAR_COORD_PENALTIES
+            if type(penalty) in SCALAR_COORD_PENALTIES:
                 raise NotImplementedError(
-                    f"sample_weight=...: datafit {type(datafit).__name__} "
-                    f"does not support sample weights (declare "
-                    f"SUPPORTS_WEIGHTS=True and accept w in "
-                    f"value/raw_grad/lipschitz/make_gram)")
-            if self.config.backend == "pallas":
-                raise NotImplementedError(
-                    "sample_weight=...: the Pallas epoch kernels hard-code "
-                    "unweighted raw gradients; use backend='jax' "
-                    "(use_kernels=False) for weighted solves")
+                    f"multitask (2-D coefficients) solves need a block "
+                    f"penalty (BlockL1/BlockMCP): "
+                    f"{type(penalty).__name__} scores coordinates "
+                    f"elementwise and cannot rank feature rows; see the "
+                    f"supported-path matrix in README.md")
         if design is not None and design.KIND == "csc":
             if self.mesh is not None and \
                     self.mesh.shape[self.data_axis] > 1:
@@ -931,10 +990,7 @@ class SolveEngine:
                     f"features on the {self.model_axis} axis")
             if self.mesh is None and self.config.backend == "pallas" and \
                     not getattr(design, "has_ell", False):
-                raise NotImplementedError(
-                    "backend='pallas' on a sparse design needs the ELL "
-                    "score layout: build it with "
-                    "CSCDesign.from_scipy(X, ell=True)")
+                raise NotImplementedError(PALLAS_SPARSE_ELL_ERROR)
         if self.mesh is not None:
             if shape is not None:
                 nd = self.mesh.shape[self.data_axis]
@@ -946,9 +1002,7 @@ class SolveEngine:
                         f"({nd}, {nm}) evenly; pad the design or pick a "
                         f"dividing mesh")
             if self.config.backend == "pallas":
-                raise NotImplementedError(
-                    "mesh=...: the Pallas epoch kernels cannot run under "
-                    "shard_map; use backend='jax' (use_kernels=False)")
+                raise NotImplementedError(PALLAS_MESH_ERROR)
             if any(getattr(leaf, "ndim", 0) > 0
                    for leaf in jax.tree_util.tree_leaves(penalty)):
                 raise NotImplementedError(
@@ -961,16 +1015,14 @@ class SolveEngine:
                     f"normalize by n, False for un-normalized sums) so "
                     f"per-shard quantities can be rescaled to the global n")
         if self.config.backend == "pallas":
-            from repro.kernels.common import check_kernel_penalty, \
+            from repro.kernels.common import check_score_kernel_penalty, \
                 penalty_params
-            check_kernel_penalty(type(penalty))
+            # any codec-registered penalty (incl. Block*) runs in the fused
+            # score head; the scalar-epoch restriction is a runtime fallback
+            # (_scalar_epoch_kernel_ok), not an entry rejection
+            check_score_kernel_penalty(type(penalty))
             penalty_params(penalty)       # raises on per-coordinate params
-            if n_tasks:
-                raise NotImplementedError(
-                    "backend='pallas' supports scalar coordinates only "
-                    "(n_tasks=0); use backend='jax' (use_kernels=False) "
-                    "for multitask solves")
-            if not self.config.gram and \
+            if not self.config.gram and n_tasks == 0 and \
                     type(datafit).__name__ not in KERNEL_DATAFIT_KINDS:
                 raise ValueError(
                     f"backend='pallas' has no Xb kernel for datafit "

@@ -347,7 +347,7 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
     p = design.shape[1]
     policy = BucketPolicy(p0=p0)
     L = design.lipschitz(datafit) if w is None \
-        else design.lipschitz(datafit, w)
+        else design.lipschitz(datafit, w, backend=engine.config.backend)
     offset = datafit.grad_offset(p, design.dtype)
     bshape = (p,) if y.ndim == 1 else (p, y.shape[1])
     beta_prev = jnp.zeros(bshape, design.dtype)
@@ -615,7 +615,11 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
                            weight_spec(engine.data_axis, n_lanes=1))
         Wd, Hd = jax.device_put(Wd, sh), jax.device_put(Hd, sh)
     F = W.shape[0]
-    L_folds = jnp.stack([design.lipschitz(datafit, Wd[f]) for f in range(F)])
+    # the grid-driver Lipschitz hot path: one weighted column-square
+    # reduction per fold (Pallas segment-sum kernel on ELL sparse designs)
+    L_folds = jnp.stack(
+        [design.lipschitz(datafit, Wd[f], backend=engine.config.backend)
+         for f in range(F)])
     offset = datafit.grad_offset(p, design.dtype)
     heldout = _heldout_fn(datafit)
 

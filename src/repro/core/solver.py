@@ -174,9 +174,12 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     accel, use_ws : bool, optional
         Disable Anderson extrapolation / working sets (Figure 6 ablations).
     use_kernels : bool, optional
-        Run CD epochs through the Pallas kernels (VMEM-resident on TPU,
-        interpret mode on CPU). Scalar coordinates only: multitask solves
-        raise NotImplementedError at entry.
+        Run the outer step and CD epochs through the Pallas kernels
+        (VMEM-resident on TPU, interpret mode on CPU). Dense unsharded
+        solves use the fused score→select→gather kernel (one X traversal
+        per outer iteration, DESIGN.md §10); weighted and multitask solves
+        are supported (block-penalty inner epochs fall back to the jax
+        path). Only mesh=... and non-ELL sparse designs reject at entry.
     mesh : jax.sharding.Mesh, optional
         Run the SAME fused outer step under shard_map — X sharded samples x
         features over (``data_axis``, ``model_axis``), beta over features,
@@ -197,8 +200,9 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         weighted-mean loss, so 0/1 fold-membership weights reproduce the
         row-subset problem exactly); flows as a pytree leaf through the
         fused step, so changing weights never retraces. ``None`` keeps the
-        bit-identical unweighted program. Weighted solves require
-        ``use_kernels=False`` and a datafit with ``SUPPORTS_WEIGHTS``.
+        bit-identical unweighted program. Weighted solves require a datafit
+        with ``SUPPORTS_WEIGHTS`` and run on every backend (the Pallas
+        kernels fold w into the in-kernel raw gradient).
 
     Returns
     -------
@@ -241,7 +245,7 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
     if engine.mesh is not None:
         design, y, w = _place_design(engine, design, y, w)
     L = design.lipschitz(datafit) if w is None \
-        else design.lipschitz(datafit, w)
+        else design.lipschitz(datafit, w, backend=engine.config.backend)
     offset = datafit.grad_offset(p, design.dtype)
     bshape = (p, n_tasks) if n_tasks else (p,)
     beta = jnp.zeros(bshape, design.dtype) if beta0 is None \

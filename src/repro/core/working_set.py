@@ -170,3 +170,24 @@ def scatter_ws(vec_loc, mine, loc_idx, vals):
         return vec_loc.at[loc_idx].set(vals)
     idx = jnp.where(mine, loc_idx, vec_loc.shape[0])
     return vec_loc.at[idx].set(vals, mode="drop")
+
+
+def candidate_columns(cand_idx, cand_cols, ws, p: int):
+    """Recover ``X[:, ws]`` ([n, K]) from the fused kernel's candidate buffer.
+
+    The host-free merge for the fused score→select→gather kernel: cand_idx
+    [C] int32 (global feature indices, entries >= p are exhausted-tile
+    padding) and cand_cols [C, n] (the matching columns) come out of the
+    kernel; ``ws`` is the final working set from ``select_working_set`` on
+    the kernel-emitted scores. Every ws entry is guaranteed to appear in
+    cand_idx (each tile emits its own top-``kc`` under the same total order
+    as ``lax.top_k``, and kc >= the tile's share of any global top-K), so an
+    inverse index built with a dropped scatter maps ws rows to candidate
+    rows without touching X again. Duplicate cand_idx entries (exhausted
+    tiles re-emitting already-picked rows) are harmless: every duplicate
+    carries the same exact column copy.
+    """
+    C = cand_idx.shape[0]
+    pos = jnp.zeros((p,), jnp.int32).at[cand_idx].set(
+        jnp.arange(C, dtype=jnp.int32), mode="drop")
+    return cand_cols[pos[ws]].T

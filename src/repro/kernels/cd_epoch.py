@@ -80,8 +80,13 @@ def cd_epoch_gram_pallas(G, c, beta0, q0, L, penalty_cls, params, *, epochs=1,
     return beta[:, 0], q[:, 0]
 
 
-def _cd_xb_kernel(penalty_cls, datafit_kind, n_samples, x_row, y_ref, off_ref,
-                  L_ref, params, beta0, Xb0, beta_ref, Xb_ref):
+def _cd_xb_kernel(penalty_cls, datafit_kind, n_samples, has_w, *refs):
+    if has_w:
+        (x_row, y_ref, w_ref, off_ref, L_ref, params, beta0, Xb0, beta_ref,
+         Xb_ref) = refs
+    else:
+        (x_row, y_ref, off_ref, L_ref, params, beta0, Xb0, beta_ref,
+         Xb_ref) = refs
     e = pid(0)
     i = pid(1)
 
@@ -92,12 +97,20 @@ def _cd_xb_kernel(penalty_cls, datafit_kind, n_samples, x_row, y_ref, off_ref,
 
     pen = make_penalty(penalty_cls, params[0], beta_ref.dtype)
     Xb = Xb_ref[:, :]
+    # weighted raw-gradient formulas match repro.core.datafits (sum(w) = n
+    # normalization is the caller's contract)
     if datafit_kind == "quadratic":
         raw = (Xb - y_ref[:, :]) / n_samples
+        if has_w:
+            raw = w_ref[:, :] * raw
     elif datafit_kind == "logistic":
         y = y_ref[:, :]
         raw = -y * jax.nn.sigmoid(-y * Xb) / n_samples
+        if has_w:
+            raw = w_ref[:, :] * raw
     elif datafit_kind == "svc":
+        if has_w:
+            raise ValueError("QuadraticSVC does not support sample weights")
         raw = Xb
     else:
         raise ValueError(datafit_kind)
@@ -113,30 +126,47 @@ def _cd_xb_kernel(penalty_cls, datafit_kind, n_samples, x_row, y_ref, off_ref,
 
 
 def cd_epoch_xb_pallas(Xt_ws, y, beta0, Xb0, L, offset, penalty_cls, params,
-                       datafit_kind="quadratic", *, epochs=1, interpret=True):
-    """Run `epochs` CD epochs maintaining Xb. Xt_ws: [K, n]. Returns (beta, Xb)."""
+                       datafit_kind="quadratic", *, w=None, epochs=1,
+                       interpret=True):
+    """Run `epochs` CD epochs maintaining Xb. Xt_ws: [K, n]. Returns (beta, Xb).
+
+    `w` (optional, [n], sum(w) = n) folds sample weights into the in-kernel
+    raw gradient (quadratic / logistic only; QuadraticSVC has no weighted
+    form). `w=None` adds no kernel input — the unweighted trace is unchanged.
+    """
     check_kernel_penalty(penalty_cls)
     K, n = Xt_ws.shape
     W = params.shape[-1]                        # codec arity for penalty_cls
+    has_w = w is not None
     row = lambda e, i: (i, 0)
     const = lambda e, i: (0, 0)
-    kern = functools.partial(_cd_xb_kernel, penalty_cls, datafit_kind, n)
+    kern = functools.partial(_cd_xb_kernel, penalty_cls, datafit_kind, n,
+                             has_w)
+    in_specs = [
+        pl.BlockSpec((1, n), row),          # streamed X_ws column (as row)
+        pl.BlockSpec((1, n), const),        # y
+    ]
+    operands = [Xt_ws, y[None, :]]
+    if has_w:
+        in_specs.append(pl.BlockSpec((1, n), const))   # sample weights
+        operands.append(w[None, :])
+    in_specs += [
+        pl.BlockSpec((K, 1), const),        # grad offset
+        pl.BlockSpec((K, 1), const),        # L
+        pl.BlockSpec((1, W), const),        # penalty params
+        pl.BlockSpec((K, 1), const),        # beta0
+        pl.BlockSpec((1, n), const),        # Xb0
+    ]
+    operands += [offset[:, None], L[:, None],
+                 params[None, :].astype(Xt_ws.dtype), beta0[:, None],
+                 Xb0[None, :]]
     beta, Xb = pl.pallas_call(
         kern,
         grid=(epochs, K),
-        in_specs=[
-            pl.BlockSpec((1, n), row),          # streamed X_ws column (as row)
-            pl.BlockSpec((1, n), const),        # y
-            pl.BlockSpec((K, 1), const),        # grad offset
-            pl.BlockSpec((K, 1), const),        # L
-            pl.BlockSpec((1, W), const),        # penalty params
-            pl.BlockSpec((K, 1), const),        # beta0
-            pl.BlockSpec((1, n), const),        # Xb0
-        ],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((K, 1), const), pl.BlockSpec((1, n), const)],
         out_shape=[jax.ShapeDtypeStruct((K, 1), Xt_ws.dtype),
                    jax.ShapeDtypeStruct((1, n), Xt_ws.dtype)],
         interpret=interpret,
-    )(Xt_ws, y[None, :], offset[:, None], L[:, None],
-      params[None, :].astype(Xt_ws.dtype), beta0[:, None], Xb0[None, :])
+    )(*operands)
     return beta[:, 0], Xb[0]

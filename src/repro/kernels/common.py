@@ -72,6 +72,18 @@ def check_kernel_penalty(cls):
             "cannot run inside the scalar CD kernels")
 
 
+def check_score_kernel_penalty(cls):
+    """Raise unless `cls` can run inside the score/fused working-set kernels.
+
+    Looser than ``check_kernel_penalty``: the score arithmetic only needs
+    prox / subdiff_dist evaluated on a whole VMEM tile, which the Block*
+    penalties support (row-block norms broadcast over ``[bp, T]`` tiles), so
+    any codec-registered penalty qualifies. The scalar-coordinate
+    restriction only applies to the CD *epoch* kernels.
+    """
+    penalty_arity(cls)
+
+
 def penalty_params(penalty) -> jnp.ndarray:
     """Pack a penalty's hyper-parameters into an ``(arity,)`` vector.
 

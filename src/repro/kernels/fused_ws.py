@@ -1,0 +1,188 @@
+"""Fused Pallas kernel: score pass + top-k candidate selection + candidate
+column gather in ONE traversal of X (DESIGN.md §10).
+
+The two-pass engine head reads X twice per outer iteration: once for the
+score pass ``X.T @ raw`` and once to gather the selected working-set columns
+(a K-column gather from a row-major [n, p] array touches ``min(p, K * G)``
+elements per row at HBM transaction granularity G, i.e. the *whole* matrix
+again in the p >> ws regime the paper targets). This kernel reads each X
+tile exactly once and emits everything the outer step needs:
+
+  * the per-feature violation scores (and the offset-corrected gradient),
+  * a per-tile top-``kc`` candidate buffer (``kc = min(bp, ws_size)``), with
+    the candidate *columns* copied out of the VMEM-resident tile while it is
+    still loaded.
+
+Because every tile contributes its own top-``kc`` candidates under the same
+total order as ``lax.top_k`` (priority descending, index ascending on ties,
+generalized support pinned to +inf), the global top-``ws_size`` set is
+guaranteed to be a subset of the candidate union: the host-free merge is
+just ``select_working_set`` on the emitted scores, and ``X[:, ws]`` is
+recovered from the candidate buffer without touching X again
+(``working_set.candidate_columns``). The recovered columns are bit-exact
+copies of X (one-hot gather), and the selected indices match the two-pass
+reference exactly on ties (exact arithmetic is order-independent) and
+whenever the feature axis fits one tile; across multiple tiles the scores
+agree up to blocked-matmul reduction-order rounding (~1e-14 in f64), the
+same caveat any tiled ``X.T @ r`` carries. Proven in
+tests/test_fused_ws.py.
+
+In-kernel selection is ``kc`` rounds of (max, lowest-index argmax, one-hot
+accumulate); the candidate columns come out of a single one-hot matmul
+``H @ X_tile.T`` (rows are exact column copies — one-hot weights incur no
+rounding), which is the MXU-friendly gather form on TPU.
+
+Supports scalar coordinates (r [n], beta [p]) and multitask row blocks
+(r [n, T], beta [p, T], Block* penalties: per-row block norms), and any
+codec-registered penalty — the score arithmetic only needs prox /
+subdiff_dist on the VMEM tile (``check_score_kernel_penalty``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (SCALAR_COORD_PENALTIES, check_score_kernel_penalty,
+                     make_penalty, pid)
+
+
+def _pick_bp(p: int, cap: int = 1024) -> int:
+    """Feature-tile width: the whole axis when it fits, else the largest
+    divisor of p in (cap/2, cap] (no padding traffic), else `cap` with
+    padding. The cap bounds the VMEM block (n, bp) and the one-hot scratch
+    (kc, bp); 1024 keeps the smoke fig2 shape single-tile (DESIGN.md §10)."""
+    if p <= cap:
+        return p
+    for b in range(cap, cap // 2, -1):
+        if p % b == 0:
+            return b
+    return cap
+
+
+def _fused_kernel(penalty_cls, use_fp, p, bp, kc, X_blk, r_blk, beta_blk,
+                  L_blk, off_blk, gs_blk, params, sc_ref, grad_ref, ci_ref,
+                  cc_ref, H):
+    j = pid(0)
+    dtype = sc_ref.dtype
+    pen = make_penalty(penalty_cls, params[0], dtype)
+    block_pen = penalty_cls not in SCALAR_COORD_PENALTIES
+
+    # one MXU pass over the tile: grad = X_tile^T r + offset   [bp, R]
+    grad = jnp.dot(X_blk[:, :].T, r_blk[:, :],
+                   preferred_element_type=dtype) + off_blk[:, :]
+    beta = beta_blk[:, :]
+    L = L_blk[:, :]
+    if block_pen:
+        if use_fp:
+            step = 1.0 / jnp.maximum(L, 1e-30)
+            diff = beta - pen.prox(beta - grad * step, step)
+            sc = jnp.sqrt(jnp.sum(diff * diff, axis=1, keepdims=True))
+        else:
+            sc = pen.subdiff_dist(grad, beta)[:, None]
+    else:
+        if use_fp:
+            step = 1.0 / jnp.maximum(L, 1e-30)
+            sc = jnp.abs(beta - pen.prox(beta - grad * step, step))
+        else:
+            sc = pen.subdiff_dist(grad, beta)
+
+    # zero-mask the padded tail (its zero columns can still carry nonzero
+    # penalty scores, e.g. Box at beta=0) so kkt/selection never see it
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bp, 1), 0)[:, 0]
+    valid = ((j * bp + iota) < p)[:, None]
+    sc = jnp.where(valid, sc, jnp.zeros((), dtype))
+    sc_ref[:, :] = sc
+    grad_ref[:, :] = jnp.where(valid, grad, jnp.zeros((), dtype))
+
+    # iterative per-tile top-kc under the lax.top_k total order (priority
+    # descending, lowest index on ties); support rows pinned to +inf
+    inf = jnp.asarray(jnp.inf, dtype)
+    pri0 = jnp.where(gs_blk[:, :] > 0, inf, sc)
+    pri0 = jnp.where(valid, pri0, -inf)
+
+    def pick(k, pri):
+        m = jnp.max(pri)
+        sel = jnp.min(jnp.where(pri[:, 0] == m, iota, bp))
+        onehot = (iota == sel)
+        pl.store(H, (pl.ds(k, 1), slice(None)),
+                 onehot.astype(dtype)[None, :])
+        # exhausted tiles (everything already picked / padded) emit the
+        # out-of-range index p: the merge scatter drops it
+        gsel = jnp.where(sel < bp, j * bp + sel, p).astype(jnp.int32)
+        pl.store(ci_ref, (pl.ds(k, 1), slice(None)),
+                 jnp.full((1, 1), gsel, jnp.int32))
+        return jnp.where(onehot[:, None], -inf, pri)
+
+    jax.lax.fori_loop(0, kc, pick, pri0)
+    # one-hot matmul gather: row k of cc is the EXACT column X[:, sel_k]
+    cc_ref[:, :] = jnp.dot(H[:, :], X_blk[:, :].T,
+                           preferred_element_type=dtype)
+
+
+def fused_ws_pallas(X, r, beta, L, offset, gsupp, penalty_cls, params,
+                    ws_size, *, use_fp=False, bp=None, interpret=True):
+    """One-traversal score + candidate top-k + candidate-column gather.
+
+    X: [n, p]; r: [n] or [n, T]; beta: [p] or [p, T]; L/offset/gsupp: [p]
+    (gsupp as a 0/1 float mask). Returns ``(scores [p], grad [p] or [p, T],
+    cand_idx [C] int32, cand_cols [C, n])`` with ``C = p_tiles * kc``,
+    ``kc = min(bp, ws_size)``; entries of cand_idx >= p are exhausted-tile
+    padding. The final working set is ``select_working_set(scores, gsupp,
+    ws_size)`` and ``X[:, ws]`` is ``candidate_columns(cand_idx, cand_cols,
+    ws, p)`` — the columns bit-exact, the scores exact up to blocked-matmul
+    reduction order (bit-identical in the single-tile case).
+    """
+    check_score_kernel_penalty(penalty_cls)
+    n, p = X.shape
+    squeeze = r.ndim == 1
+    r2 = r[:, None] if squeeze else r
+    beta2 = beta[:, None] if squeeze else beta
+    R = r2.shape[1]
+    W = params.shape[-1]                        # codec arity for penalty_cls
+    bp = _pick_bp(p) if bp is None else min(bp, p)
+    tiles = -(-p // bp)
+    pp = tiles * bp - p
+    if pp:                                      # non-dividing fallback only
+        X = jnp.pad(X, ((0, 0), (0, pp)))
+        beta2 = jnp.pad(beta2, ((0, pp), (0, 0)))
+        L = jnp.pad(L, (0, pp))
+        offset = jnp.pad(offset, (0, pp))
+        gsupp = jnp.pad(gsupp, (0, pp))
+    kc = min(bp, ws_size)
+    from jax.experimental.pallas import tpu as pltpu
+    tile = lambda j: (j, 0)
+    const = lambda j: (0, 0)
+    scores, grad, cand_idx, cand_cols = pl.pallas_call(
+        functools.partial(_fused_kernel, penalty_cls, use_fp, p, bp, kc),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),   # X tile (read ONCE)
+            pl.BlockSpec((n, R), const),               # raw gradient
+            pl.BlockSpec((bp, R), tile),               # beta
+            pl.BlockSpec((bp, 1), tile),               # L
+            pl.BlockSpec((bp, 1), tile),               # grad offset
+            pl.BlockSpec((bp, 1), tile),               # gsupp 0/1 mask
+            pl.BlockSpec((1, W), const),               # penalty params
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, 1), tile),               # scores
+            pl.BlockSpec((bp, R), tile),               # grad (+offset)
+            pl.BlockSpec((kc, 1), tile),               # candidate indices
+            pl.BlockSpec((kc, n), tile),               # candidate columns
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles * bp, 1), X.dtype),
+            jax.ShapeDtypeStruct((tiles * bp, R), X.dtype),
+            jax.ShapeDtypeStruct((tiles * kc, 1), jnp.int32),
+            jax.ShapeDtypeStruct((tiles * kc, n), X.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((kc, bp), X.dtype)],
+        interpret=interpret,
+    )(X, r2, beta2, L[:, None], offset[:, None], gsupp[:, None],
+      params[None, :].astype(X.dtype))
+    scores = scores[:p, 0]
+    grad = grad[:p, 0] if squeeze else grad[:p]
+    return scores, grad, cand_idx[:, 0], cand_cols

@@ -21,16 +21,23 @@ from jax.experimental import pallas as pl
 from .common import check_kernel_penalty, make_penalty, pid
 
 
-def _score_kernel(penalty_cls, n_tiles, use_fp, X_blk, r_blk, beta_blk, L_blk,
-                  off_blk, params, out_blk, g_acc):
+def _score_kernel(penalty_cls, n_tiles, use_fp, has_w, *refs):
+    if has_w:
+        (X_blk, r_blk, w_blk, beta_blk, L_blk, off_blk, params, out_blk,
+         g_acc) = refs
+    else:
+        X_blk, r_blk, beta_blk, L_blk, off_blk, params, out_blk, g_acc = refs
     nt = pid(1)
 
     @pl.when(nt == 0)
     def _init():
         g_acc[:, :] = jnp.zeros_like(g_acc)
 
+    rb = r_blk[:, :]
+    if has_w:
+        rb = rb * w_blk[:, :]
     # (BP, n_blk) @ (n_blk, 1) on the MXU
-    g_acc[:, :] += jnp.dot(X_blk[:, :].T, r_blk[:, :],
+    g_acc[:, :] += jnp.dot(X_blk[:, :].T, rb,
                            preferred_element_type=g_acc.dtype)
 
     @pl.when(nt == n_tiles - 1)
@@ -47,9 +54,16 @@ def _score_kernel(penalty_cls, n_tiles, use_fp, X_blk, r_blk, beta_blk, L_blk,
         out_blk[:, :] = sc
 
 
-def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *,
+def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *, w=None,
                     use_fp=False, bp=256, bn=2048, interpret=True):
-    """Fused scores for all p features. X: [n, p]; r: [n]. Returns [p]."""
+    """Fused scores for all p features. X: [n, p]; r: [n]. Returns [p].
+
+    `w` (optional, [n]) applies sample weights to the residual *inside* the
+    kernel (`r * w` on the VMEM tile) — the weighted raw-gradient variant
+    that unlocks cross_val_path's per-fold weighted solves on the Pallas
+    backend. `w=None` adds no kernel input, so the unweighted trace is
+    bit-identical to the historical kernel.
+    """
     check_kernel_penalty(penalty_cls)
     n, p = X.shape
     W = params.shape[-1]                        # codec arity for penalty_cls
@@ -57,22 +71,31 @@ def ws_score_pallas(X, r, beta, L, offset, penalty_cls, params, *,
     bn = min(bn, n)
     assert p % bp == 0 and n % bn == 0, (n, p, bn, bp)
     n_tiles = n // bn
+    has_w = w is not None
     from jax.experimental.pallas import tpu as pltpu
+    in_specs = [
+        pl.BlockSpec((bn, bp), lambda j, i: (i, j)),   # X tile
+        pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),    # residual r
+    ]
+    operands = [X, r[:, None]]
+    if has_w:
+        in_specs.append(pl.BlockSpec((bn, 1), lambda j, i: (i, 0)))  # weights
+        operands.append(w[:, None])
+    in_specs += [
+        pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # beta
+        pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # L
+        pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # grad offset
+        pl.BlockSpec((1, W), lambda j, i: (0, 0)),     # penalty params
+    ]
+    operands += [beta[:, None], L[:, None], offset[:, None],
+                 params[None, :].astype(X.dtype)]
     out = pl.pallas_call(
-        functools.partial(_score_kernel, penalty_cls, n_tiles, use_fp),
+        functools.partial(_score_kernel, penalty_cls, n_tiles, use_fp, has_w),
         grid=(p // bp, n_tiles),
-        in_specs=[
-            pl.BlockSpec((bn, bp), lambda j, i: (i, j)),   # X tile
-            pl.BlockSpec((bn, 1), lambda j, i: (i, 0)),    # residual r
-            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # beta
-            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # L
-            pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),    # grad offset
-            pl.BlockSpec((1, W), lambda j, i: (0, 0)),     # penalty params
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),
         out_shape=jax.ShapeDtypeStruct((p, 1), X.dtype),
         scratch_shapes=[pltpu.VMEM((bp, 1), X.dtype)],
         interpret=interpret,
-    )(X, r[:, None], beta[:, None], L[:, None], offset[:, None],
-      params[None, :].astype(X.dtype))
+    )(*operands)
     return out[:, 0]

@@ -1,73 +1,63 @@
+"""Roofline analyzer CLI for the solver engine's lowered outer step.
+
+Attributes FLOPs and bytes per engine stage (score / select / gather /
+inner-solve / scatter, plus the fused single-traversal kernel) at a given
+(n, p, ws) shape, prints the per-stage table, and optionally writes the
+record as JSON and/or enforces the fused single-read byte budget
+(``--check-ratio``, the same model ``bench_engine.py --check-budget``
+enforces in CI — see DESIGN.md §10).
+
+    PYTHONPATH=src python -m repro.roofline.analyze --n 128 --p 1024 --ws 64
+    PYTHONPATH=src python -m repro.roofline.analyze --check-ratio 0.6
+"""
 import os
-if "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "JAX_PLATFORMS" not in os.environ:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import argparse      # noqa: E402
 import json          # noqa: E402
-import time          # noqa: E402
-import traceback     # noqa: E402
 
-from repro.configs import ARCH_NAMES, get_config            # noqa: E402
-from repro.launch.mesh import make_production_mesh           # noqa: E402
-from repro.launch.specs import merge_rules                   # noqa: E402
-from repro.models.config import SHAPES, cells_for            # noqa: E402
-from repro.roofline.units import analyze_cell                # noqa: E402
+import jax           # noqa: E402
 
-"""Roofline analyzer CLI: per (arch x shape) unit-level accounting on the
-single-pod production mesh (EXPERIMENTS.md §Roofline). Writes one JSON per
-cell to experiments/roofline/."""
+jax.config.update("jax_enable_x64", True)
+
+from repro.roofline.engine_stages import (format_stage_table,   # noqa: E402
+                                          stage_table)
 
 
-def run(arch, shape_name, out_dir, *, remat="full", chunk=512,
-        act_overrides=None, param_overrides=None, tag=""):
-    mesh = make_production_mesh(multi_pod=False)
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    act, par = merge_rules(cfg, shape, act_overrides, param_overrides)
-    t0 = time.time()
-    rec = analyze_cell(cfg, shape, mesh, act=act, par=par, remat=remat,
-                       chunk=chunk)
-    rec["analysis_s"] = round(time.time() - t0, 1)
-    rec["overrides"] = {"act": act_overrides, "param": param_overrides,
-                        "remat": remat, "chunk": chunk, "tag": tag}
-    print(f"[roofline] {arch} {shape_name}{('/' + tag) if tag else ''}: "
-          f"compute={rec['compute_s']*1e3:.2f}ms memory={rec['memory_s']*1e3:.2f}ms "
-          f"coll={rec['collective_s']*1e3:.2f}ms dominant={rec['dominant']} "
-          f"frac={rec['roofline_fraction']:.3f} useful={rec['useful_ratio']:.3f}")
-    if out_dir:
-        os.makedirs(out_dir, exist_ok=True)
-        name = f"{arch}_{shape_name}" + (f"_{tag}" if tag else "")
-        with open(os.path.join(out_dir, name + ".json"), "w") as f:
-            json.dump(rec, f, indent=1)
-    return rec
+def run(n, p, ws, out=None, check_ratio=None, measure=True, n_tasks=0):
+    """Build (and optionally persist / enforce) the per-stage table."""
+    table = stage_table(n, p, ws, n_tasks=n_tasks, measure=measure)
+    print(format_stage_table(table))
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(table, f, indent=1)
+        print(f"[roofline] wrote {out}")
+    if check_ratio is not None and table["fused_ratio"] > check_ratio:
+        raise SystemExit(
+            f"[roofline] FAIL: fused bytes-per-outer ratio "
+            f"{table['fused_ratio']:.4f} exceeds the budget {check_ratio} "
+            f"at n={n} p={p} ws={ws}")
+    return table
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="all")
-    ap.add_argument("--shape", default="all")
-    ap.add_argument("--out", default="experiments/roofline")
-    ap.add_argument("--remat", default="full")
-    ap.add_argument("--chunk", type=int, default=512)
-    ap.add_argument("--tag", default="")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=128,
+                    help="samples (default: the smoke fig2_lasso shape)")
+    ap.add_argument("--p", type=int, default=1024, help="features")
+    ap.add_argument("--ws", type=int, default=64, help="working-set bucket")
+    ap.add_argument("--n-tasks", type=int, default=0,
+                    help="multitask width T (0 = scalar coordinates)")
+    ap.add_argument("--out", default=None,
+                    help="write the table as JSON to this path")
+    ap.add_argument("--check-ratio", type=float, default=None,
+                    help="fail unless fused/two-pass bytes ratio <= this")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip XLA lowering; byte models only")
     args = ap.parse_args()
-    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
-    fails = []
-    for arch in archs:
-        shapes = [s.name for s in cells_for(arch)]
-        if args.shape != "all":
-            if args.shape not in shapes:
-                continue
-            shapes = [args.shape]
-        for shape in shapes:
-            try:
-                run(arch, shape, args.out, remat=args.remat, chunk=args.chunk,
-                    tag=args.tag)
-            except Exception as e:              # noqa: BLE001
-                traceback.print_exc()
-                fails.append((arch, shape, repr(e)))
-                print(f"[roofline] {arch} {shape} FAILED: {e}")
-    if fails:
-        raise SystemExit(f"{len(fails)} failures: {fails}")
+    run(args.n, args.p, args.ws, out=args.out, check_ratio=args.check_ratio,
+        measure=not args.no_measure, n_tasks=args.n_tasks)
 
 
 if __name__ == "__main__":

@@ -35,7 +35,7 @@ from repro.launch.shardings import sparse_design_spec
 
 from .ops import (csc_column_windows, csc_gather_columns, csc_incremental_xb,
                   csc_matvec, csc_score, csc_score_ell, csc_score_pallas,
-                  csc_weighted_col_sq)
+                  csc_weighted_col_sq, csc_weighted_col_sq_pallas)
 
 __all__ = ["CSCDesign", "ShardedCSCDesign"]
 
@@ -162,14 +162,14 @@ class CSCDesign(Design):
 
     def score(self, raw, backend: str = "jax"):
         """X.T @ raw for this feature block (O(nnz), no dense X). `raw` may
-        be [n] or [n, T] (multitask); the Pallas ELL kernel is scalar-only
-        (``SolveEngine.validate`` rejects pallas + multitask at entry)."""
+        be [n] or [n, T] (multitask — the Pallas ELL kernel carries the task
+        axis through VMEM)."""
         if backend == "pallas":
-            if raw.ndim != 1:
-                raise NotImplementedError(
-                    "backend='pallas' supports scalar coordinates only "
-                    "(n_tasks=0); use backend='jax' (use_kernels=False) "
-                    "for multitask solves")
+            if not self.has_ell:
+                # defensive twin of SolveEngine.validate's entry check, with
+                # the SAME unified message (DESIGN.md §8.4)
+                from repro.core.engine import PALLAS_SPARSE_ELL_ERROR
+                raise NotImplementedError(PALLAS_SPARSE_ELL_ERROR)
             return csc_score_pallas(self.ell_rows, self.ell_vals, raw)
         return csc_score(self.data, self.indices, self.col_ids, raw,
                          self.width)
@@ -193,12 +193,21 @@ class CSCDesign(Design):
         return csc_matvec(self.data, self.indices, self.col_ids, beta,
                           self.n_rows)
 
-    def lipschitz(self, datafit, w=None):
+    def lipschitz(self, datafit, w=None, backend="jax"):
         """Per-coordinate Lipschitz constants; weighted solves feed the
         O(nnz) w-weighted column norms instead of the cached unweighted
-        ones (DESIGN.md §9)."""
-        col_sq = self.col_sq if w is None else csc_weighted_col_sq(
-            self.data, self.indices, self.col_ids, w, self.width)
+        ones (DESIGN.md §9). With ``backend="pallas"`` and an ELL layout the
+        weighted reduction runs through the Pallas segment-sum kernel — the
+        grid-driver hot path that recomputes L per CV fold / bootstrap
+        replicate (``csc_weighted_col_sq_pallas``)."""
+        if w is None:
+            col_sq = self.col_sq
+        elif backend == "pallas" and self.has_ell:
+            col_sq = csc_weighted_col_sq_pallas(self.ell_rows, self.ell_vals,
+                                                w)
+        else:
+            col_sq = csc_weighted_col_sq(self.data, self.indices,
+                                         self.col_ids, w, self.width)
         return datafit.lipschitz_cols(col_sq, self.n_rows)
 
     def col_sq_norms(self):
@@ -359,9 +368,12 @@ class ShardedCSCDesign(Design):
         return jnp.zeros((self.n_rows, beta.shape[1]),
                          self.dtype).at[idx].add(contrib)
 
-    def lipschitz(self, datafit, w=None):
+    def lipschitz(self, datafit, w=None, backend="jax"):
         """Per-coordinate Lipschitz constants from the stacked per-shard
-        column norms (w-weighted norms recomputed per shard, O(nnz))."""
+        column norms (w-weighted norms recomputed per shard, O(nnz));
+        `backend` is accepted for protocol uniformity (sharded designs never
+        run Pallas — validate rejects mesh + pallas)."""
+        del backend
         if w is None:
             col_sq = self.col_sq.reshape(-1)
         else:

@@ -131,36 +131,48 @@ def csc_matvec(data, indices, col_ids, beta, n_rows: int):
 
 
 # ------------------------------------------------------------- pallas kernel
-def _score_kernel(m_tiles, rows_blk, vals_blk, raw_blk, out_blk, acc):
+def _score_kernel(m_tiles, square, rows_blk, vals_blk, raw_blk, out_blk, acc):
     """One (BP, BM) ELL tile: gather raw at the tile's row indices, multiply
-    by the stored values, accumulate into the per-feature VMEM scratch."""
+    by the stored values (squared in weighted-Lipschitz mode), accumulate
+    into the per-feature VMEM scratch. raw may carry a trailing task axis:
+    acc is [BP, R]."""
     mt = pl.program_id(1)
 
     @pl.when(mt == 0)
     def _init():
         acc[:, :] = jnp.zeros_like(acc)
 
-    raw = raw_blk[:, 0]
-    acc[:, :] += jnp.sum(vals_blk[:, :] * raw[rows_blk[:, :]], axis=1,
-                         keepdims=True)
+    vals = vals_blk[:, :]
+    if square:
+        vals = vals * vals
+    raw = raw_blk[:, :]                                     # [n, R]
+    acc[:, :] += jnp.sum(vals[:, :, None] * raw[rows_blk[:, :]], axis=1)
 
     @pl.when(mt == m_tiles - 1)
     def _emit():
         out_blk[:, :] = acc[:, :]
 
 
-def csc_score_pallas(rows, vals, raw, *, bp=256, bm=512, interpret=None):
-    """Pallas score pass over the ELL layout: rows/vals [p, m], raw [n].
+def csc_score_pallas(rows, vals, raw, *, bp=256, bm=512, interpret=None,
+                     square=False):
+    """Pallas score pass over the ELL layout: rows/vals [p, m], raw [n]
+    (scalar) or [n, T] (multitask — the task axis rides along in VMEM).
 
     Grid = (p_tiles, m_tiles); the raw gradient stays VMEM-resident across
     the whole grid and each feature tile accumulates its gathered
     contributions in a VMEM scratch, emitted on the last m-step. Returns the
-    [p] gradient (validated against ``csc_score_ell``).
+    [p] (or [p, T]) gradient (validated against ``csc_score_ell`` /
+    ``csc_score``). ``square=True`` squares the stored values in-kernel —
+    the weighted column-square reduction behind
+    ``csc_weighted_col_sq_pallas``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     p, m = rows.shape
     n = raw.shape[0]
+    squeeze = raw.ndim == 1
+    raw2 = raw[:, None] if squeeze else raw
+    R = raw2.shape[1]
     bp = min(bp, p)
     bm = min(bm, m)
     # pad to the tile grid (padding rows point at row 0 with value 0.0)
@@ -171,16 +183,27 @@ def csc_score_pallas(rows, vals, raw, *, bp=256, bm=512, interpret=None):
     m_tiles = (m + pm) // bm
     from jax.experimental.pallas import tpu as pltpu
     out = pl.pallas_call(
-        functools.partial(_score_kernel, m_tiles),
+        functools.partial(_score_kernel, m_tiles, square),
         grid=((p + pp) // bp, m_tiles),
         in_specs=[
             pl.BlockSpec((bp, bm), lambda j, i: (j, i)),   # row indices
             pl.BlockSpec((bp, bm), lambda j, i: (j, i)),   # values
-            pl.BlockSpec((n, 1), lambda j, i: (0, 0)),     # raw gradient
+            pl.BlockSpec((n, R), lambda j, i: (0, 0)),     # raw gradient
         ],
-        out_specs=pl.BlockSpec((bp, 1), lambda j, i: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((p + pp, 1), vals.dtype),
-        scratch_shapes=[pltpu.VMEM((bp, 1), vals.dtype)],
+        out_specs=pl.BlockSpec((bp, R), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p + pp, R), vals.dtype),
+        scratch_shapes=[pltpu.VMEM((bp, R), vals.dtype)],
         interpret=interpret,
-    )(rows, vals, raw[:, None])
-    return out[:p, 0]
+    )(rows, vals, raw2)
+    return out[:p, 0] if squeeze else out[:p]
+
+
+def csc_weighted_col_sq_pallas(rows, vals, w, *, bp=256, bm=512,
+                               interpret=None):
+    """Pallas weighted column-square reduction over the ELL layout:
+    sum_i w_i x_ij^2 -> [p], the grid-driver Lipschitz hot path (per-fold
+    weighted L in cross_val_path / reg_path_grid). Same kernel as the score
+    pass with in-kernel value squaring; validated against
+    ``csc_weighted_col_sq``."""
+    return csc_score_pallas(rows, vals, w, bp=bp, bm=bm, interpret=interpret,
+                            square=True)

@@ -206,9 +206,6 @@ def test_grid_entry_errors(grid_data):
         cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
                        fold_weights=np.vstack([np.ones(X.shape[0]),
                                                np.zeros(X.shape[0])]))
-    with pytest.raises(NotImplementedError, match="Pallas"):
-        cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
-                       use_kernels=True)
     with pytest.raises(ValueError, match="kwargs"):
         cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=3,
                        beta0=jnp.zeros(400))

@@ -94,44 +94,59 @@ def test_intra_repo_links_resolve(doc):
 # -------------------------------------------- entry errors, unified wording
 def test_remaining_rejections_raise_at_entry():
     """The DESIGN.md §8.4 rejections raise from validate at solve() entry:
-    zero fused-step dispatches happen before the error."""
+    zero fused-step dispatches happen before the error. Since the
+    fused-kernel generalization the Pallas backend runs weighted, multitask
+    (block-penalty) and chunked solves; only two Pallas rejections remain —
+    mesh and non-ELL sparse — each sharing one message text with the
+    sparse design's defensive check."""
+    import jax
     import scipy.sparse as sp
-    from repro.core import (BlockL1, L1, MultitaskQuadratic, Quadratic,
-                            make_engine, solve)
-    from repro.kernels.common import UnsupportedPenaltyError
+    from jax.sharding import Mesh
+    from repro.core import (L1, MultitaskQuadratic, Quadratic, make_engine,
+                            solve)
+    from repro.core.engine import PALLAS_MESH_ERROR, PALLAS_SPARSE_ELL_ERROR
 
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.standard_normal((20, 32)))
     Y = jnp.asarray(rng.standard_normal((20, 3)))
+    y = jnp.asarray(rng.standard_normal(20))
 
-    # pallas + multitask: NotImplementedError with the unified message
-    eng = make_engine(L1(0.1), MultitaskQuadratic(), use_kernels=True)
-    with pytest.raises(NotImplementedError,
-                       match="scalar coordinates only") as ei:
-        solve(X, Y, MultitaskQuadratic(), L1(0.1), use_kernels=True,
-              engine=eng)
-    assert eng.n_dispatches == 0, "rejection happened mid-solve, not entry"
+    # multitask + elementwise penalty: rejected on EVERY backend (scores
+    # cannot rank feature rows) — entry error, not a mid-trace shape crash
+    for kernels in (False, True):
+        eng = make_engine(L1(0.1), MultitaskQuadratic(),
+                          use_kernels=kernels)
+        with pytest.raises(NotImplementedError, match="block penalty"):
+            solve(X, Y, MultitaskQuadratic(), L1(0.1), engine=eng)
+        assert eng.n_dispatches == 0, "rejection happened mid-solve"
 
-    # ... and the sparse design's defensive check words it identically
+    # mesh + pallas: the unified PALLAS_MESH_ERROR text
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    eng = make_engine(L1(0.1), Quadratic(), use_kernels=True, mesh=mesh)
+    with pytest.raises(NotImplementedError) as em:
+        solve(X, y, Quadratic(), L1(0.1), engine=eng)
+    assert str(em.value) == PALLAS_MESH_ERROR
+    assert eng.n_dispatches == 0
+
+    # sparse + pallas without the ELL layout: solve() entry and the
+    # design's defensive score() check raise the IDENTICAL message
     from repro.sparse import CSCDesign
-    Xs = CSCDesign.from_scipy(sp.random(20, 32, density=0.2, random_state=0,
-                                        format="csc"), ell=True)
-    with pytest.raises(NotImplementedError, match="scalar coordinates only") \
-            as es:
-        Xs.score(jnp.ones((20, 3)), backend="pallas")
-    assert str(ei.value) == str(es.value), (
-        "engine.validate and CSCDesign.score word the pallas-multitask "
-        "rejection differently")
-
-    # pallas + block penalty: codec rejection
-    with pytest.raises(UnsupportedPenaltyError):
-        solve(X, Y, MultitaskQuadratic(), BlockL1(0.1), use_kernels=True)
-
-    # sparse + pallas without ELL layout
     Xs_no_ell = sp.random(20, 32, density=0.2, random_state=0, format="csc")
-    with pytest.raises(NotImplementedError, match="ell=True"):
-        solve(Xs_no_ell, jnp.asarray(rng.standard_normal(20)), Quadratic(),
-              L1(0.1), use_kernels=True)
+    eng = make_engine(L1(0.1), Quadratic(), use_kernels=True)
+    with pytest.raises(NotImplementedError, match="ell=True") as ei:
+        solve(Xs_no_ell, y, Quadratic(), L1(0.1), engine=eng)
+    assert str(ei.value) == PALLAS_SPARSE_ELL_ERROR
+    assert eng.n_dispatches == 0
+    D_no_ell = CSCDesign.from_scipy(Xs_no_ell)
+    with pytest.raises(NotImplementedError, match="ell=True") as es:
+        D_no_ell.score(y, backend="pallas")
+    assert str(ei.value) == str(es.value), (
+        "engine.validate and CSCDesign.score word the non-ELL rejection "
+        "differently")
+    # both messages point at the supported-path matrix
+    assert "supported-path matrix" in PALLAS_MESH_ERROR
+    assert "supported-path matrix" in PALLAS_SPARSE_ELL_ERROR
 
 
 def test_reg_path_rejects_at_entry_both_drivers():

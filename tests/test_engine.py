@@ -210,12 +210,14 @@ def test_codec_rejects_unregistered_and_per_coordinate():
         penalty_params(weighted)
 
 
-def test_kernel_solve_rejects_block_penalties(multitask_data):
+def test_kernel_solve_runs_block_penalties(multitask_data):
+    """Block penalties run on the Pallas backend since the fused-kernel
+    generalization (fused block scoring + jax block inner epochs)."""
     from repro.core.datafits import MultitaskQuadratic
     X, Y, _ = multitask_data
-    with pytest.raises(UnsupportedPenaltyError):
-        solve(X, Y, MultitaskQuadratic(), BlockL1(0.1), use_kernels=True,
-              max_outer=1)
+    res = solve(X, Y, MultitaskQuadratic(), BlockL1(0.1), use_kernels=True,
+                max_outer=2)
+    assert res.beta.shape == (X.shape[1], Y.shape[1])
 
 
 # --------------------------------------------------- review-found regressions

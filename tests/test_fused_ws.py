@@ -1,0 +1,318 @@
+"""Fused working-set kernel + Pallas capability-matrix parity tests.
+
+The fused single-traversal kernel (``kernels/fused_ws.py``) must reproduce
+the two-pass reference EXACTLY: bit-identical violation scores, the same
+working-set indices under ``lax.top_k``'s tie order, and bit-identical
+gathered columns (the kernel emits copies of the same X entries). The
+weighted / multitask kernel variants close the Pallas capability matrix and
+must match the jax backend to 1e-6 or better end to end. All kernels run in
+interpret mode on CPU (assignment contract).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MCP, BlockL1, L1, MultitaskQuadratic, Quadratic,
+                        lambda_max, make_engine, solve)
+from repro.core.penalties import Box
+from repro.core.working_set import (candidate_columns, select_working_set,
+                                    violation_scores)
+from repro.data.synth import make_correlated_design, make_leadfield
+from repro.kernels import ops
+from repro.kernels.common import penalty_params
+
+PENALTIES = [L1(0.11), MCP(0.11, 3.0), Box(0.8)]
+IDS = [type(p).__name__ for p in PENALTIES]
+
+
+def _dense_inputs(n, p, seed=0, sparsity=0.3, dtype="float64"):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((n, p)).astype(dtype))
+    r = jnp.asarray(rng.standard_normal(n).astype(dtype))
+    beta = jnp.asarray(
+        (rng.standard_normal(p) * (rng.random(p) < sparsity)).astype(dtype))
+    L = jnp.sum(X * X, axis=0) / n
+    offset = jnp.zeros(p, X.dtype)
+    return X, r, beta, L, offset
+
+
+def _two_pass(X, r, beta, L, offset, penalty, gsupp, ws_size, use_fp):
+    """The reference head the fused kernel replaces: score pass over X,
+    top-k select, then a separate ws-column gather re-reading X."""
+    grad = X.T @ r + offset
+    scores = violation_scores(penalty, beta, grad, L, use_fixed_point=use_fp)
+    ws = select_working_set(scores, gsupp, ws_size)
+    return scores, grad, ws, X[:, ws]
+
+
+# --------------------------------------------------- fused == two-pass exact
+@pytest.mark.parametrize("penalty", PENALTIES, ids=IDS)
+@pytest.mark.parametrize("n,p,ws,bp", [
+    (64, 256, 32, None),      # multiple even tiles
+    (48, 100, 16, 32),        # bp does not divide p: padded tail tile
+    (32, 40, 8, 8),           # tiny tiles, ws == kc
+    (128, 1024, 64, None),    # the smoke roofline shape
+])
+def test_fused_matches_two_pass(penalty, n, p, ws, bp):
+    """Working set identical to the two-pass reference (indices AND
+    columns); scores bit-identical in the single-tile case and within
+    blocked-matmul reduction-order rounding across tiles."""
+    X, r, beta, L, offset = _dense_inputs(n, p, seed=p + ws)
+    use_fp = not penalty.HAS_SUBDIFF
+    gsupp = penalty.generalized_support(beta)
+    sc_ref, gr_ref, ws_ref, Xws_ref = _two_pass(
+        X, r, beta, L, offset, penalty, gsupp, ws, use_fp)
+    sc, gr, ci, cc = ops.fused_ws(
+        X, r, beta, L, offset, gsupp.astype(X.dtype), type(penalty),
+        penalty_params(penalty), ws, use_fp=use_fp, bp=bp, interpret=True)
+    single_tile = (bp or min(p, 1024)) >= p
+    if single_tile:       # one tile == one dot: bit-identical to X.T @ r
+        np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc_ref))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               atol=1e-12, rtol=1e-11)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(gr_ref),
+                               atol=1e-12, rtol=1e-10)
+    ws_idx = select_working_set(sc, gsupp, ws)
+    np.testing.assert_array_equal(np.asarray(ws_idx), np.asarray(ws_ref))
+    Xws = candidate_columns(ci, cc, ws_idx, p)
+    # the gathered columns are bit-exact copies of X (one-hot gather)
+    np.testing.assert_array_equal(np.asarray(Xws), np.asarray(Xws_ref))
+
+
+def test_fused_exact_ties():
+    """Integer design with duplicated columns: many coordinates tie at
+    exactly equal scores. The fused candidate buffer must still cover the
+    top-k chosen under lax.top_k's lowest-index tie rule, and the gathered
+    columns must be bit-identical to the direct gather."""
+    rng = np.random.default_rng(7)
+    n, p, ws = 32, 96, 16
+    base = rng.integers(-3, 4, size=(n, p // 2)).astype(np.float64)
+    X = jnp.asarray(np.concatenate([base, base], axis=1))  # every col twice
+    r = jnp.asarray(rng.integers(-2, 3, size=n).astype(np.float64))
+    beta = jnp.zeros(p)
+    L = jnp.maximum(jnp.sum(X * X, axis=0) / n, 1e-12)
+    offset = jnp.zeros(p)
+    pen = L1(0.5)
+    gsupp = pen.generalized_support(beta)
+    sc_ref, _, ws_ref, Xws_ref = _two_pass(
+        X, r, beta, L, offset, pen, gsupp, ws, False)
+    sc, _, ci, cc = ops.fused_ws(
+        X, r, beta, L, offset, gsupp.astype(X.dtype), L1,
+        penalty_params(pen), ws, interpret=True)
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc_ref))
+    ws_idx = select_working_set(sc, gsupp, ws)
+    np.testing.assert_array_equal(np.asarray(ws_idx), np.asarray(ws_ref))
+    np.testing.assert_array_equal(
+        np.asarray(candidate_columns(ci, cc, ws_idx, p)),
+        np.asarray(Xws_ref))
+
+
+def test_fused_multitask_block_score():
+    """Block (multitask) scoring through the fused kernel: beta [p, T],
+    raw [n, T], BlockL1 — per-block scores and gathered columns match the
+    two-pass reference exactly."""
+    rng = np.random.default_rng(11)
+    n, p, T, ws = 40, 80, 6, 12
+    X = jnp.asarray(rng.standard_normal((n, p)))
+    R = jnp.asarray(rng.standard_normal((n, T)))
+    beta = jnp.asarray(
+        rng.standard_normal((p, T)) * (rng.random((p, 1)) < 0.2))
+    L = jnp.sum(X * X, axis=0) / n
+    offset = jnp.zeros(p)
+    pen = BlockL1(0.15)
+    gsupp = pen.generalized_support(beta)
+    grad_ref = X.T @ R
+    sc_ref = violation_scores(pen, beta, grad_ref, L)
+    ws_ref = select_working_set(sc_ref, gsupp, ws)
+    sc, gr, ci, cc = ops.fused_ws(
+        X, R, beta, L, offset, gsupp.astype(X.dtype), BlockL1,
+        penalty_params(pen), ws, interpret=True)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref),
+                               atol=1e-12, rtol=1e-11)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(grad_ref),
+                               atol=1e-12, rtol=1e-10)
+    ws_idx = select_working_set(sc, gsupp, ws)
+    np.testing.assert_array_equal(np.asarray(ws_idx), np.asarray(ws_ref))
+    np.testing.assert_array_equal(
+        np.asarray(candidate_columns(ci, cc, ws_idx, p)),
+        np.asarray(X[:, ws_ref]))
+
+
+# ------------------------------------------------------- end-to-end parity
+def test_fused_solve_matches_jax():
+    """A dense Pallas solve routes the fused head + kernel epochs and must
+    match the jax two-pass backend essentially bit-for-bit."""
+    X, y, _ = make_correlated_design(n=96, p=300, n_nonzero=10, seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = lambda_max(X, y) / 8
+    r_jax = solve(X, y, Quadratic(), L1(lam), tol=1e-9)
+    r_pal = solve(X, y, Quadratic(), L1(lam), tol=1e-9, use_kernels=True)
+    assert r_pal.converged
+    np.testing.assert_allclose(np.asarray(r_pal.beta), np.asarray(r_jax.beta),
+                               atol=1e-10)
+
+
+def test_multitask_solve_pallas_matches_jax():
+    """Multitask + BlockL1 on the Pallas backend (previously rejected at
+    validate): fused block scoring feeds the jax block inner epochs."""
+    X, Y, _, _ = make_leadfield(n=36, p_per_hemi=40, T=5, seed=0)
+    X, Y = jnp.asarray(X), jnp.asarray(Y)
+    df = MultitaskQuadratic()
+    lam = lambda_max(X, Y, df) / 8
+    r_jax = solve(X, Y, df, BlockL1(lam), tol=1e-8)
+    r_pal = solve(X, Y, df, BlockL1(lam), tol=1e-8, use_kernels=True)
+    assert r_pal.converged
+    np.testing.assert_allclose(np.asarray(r_pal.beta), np.asarray(r_jax.beta),
+                               atol=1e-6)
+
+
+# ------------------------------------------------------------ weighted path
+def test_ws_score_weighted_matches_ref():
+    """The weighted score kernel applies w to the raw gradient in VMEM;
+    w=ones must agree with the unweighted kernel and both with the dense
+    reference."""
+    n, p = 64, 160
+    X, r, beta, L, offset = _dense_inputs(n, p, seed=3)
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.random(n) + 0.25)
+    pen = MCP(0.09, 3.0)
+    params = penalty_params(pen)
+    got = ops.ws_score(X, r, beta, L, offset, MCP, params, w=w,
+                       interpret=True)
+    want = violation_scores(pen, beta, X.T @ (w * r) + offset, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-11, rtol=1e-9)
+    ones = ops.ws_score(X, r, beta, L, offset, MCP, params,
+                        w=jnp.ones(n, X.dtype), interpret=True)
+    none = ops.ws_score(X, r, beta, L, offset, MCP, params, w=None,
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(ones), np.asarray(none))
+
+
+def test_cd_epoch_xb_weighted_matches_jax():
+    """Weighted Xb inner epochs (Pallas) vs the jax cd_epoch_xb with the
+    same w."""
+    from repro.core.cd import cd_epoch_xb as cd_epoch_xb_jax
+    from repro.core.datafits import Logistic
+
+    rng = np.random.default_rng(9)
+    K, n = 24, 80
+    Xt = jnp.asarray(rng.standard_normal((K, n)))
+    w = jnp.asarray(rng.random(n) + 0.25)
+    pen = L1(0.05)
+    params = penalty_params(pen)
+    for datafit, kind in ((Quadratic(), "quadratic"),
+                          (Logistic(), "logistic")):
+        y = jnp.asarray(np.sign(rng.standard_normal(n)))
+        beta0 = jnp.asarray(rng.standard_normal(K) * 0.05)
+        Xb0 = beta0 @ Xt
+        L = jnp.sum(Xt * Xt, axis=1) / (n if kind == "quadratic" else 4 * n)
+        offset = datafit.grad_offset(K, Xt.dtype)
+        beta_k, Xb_k = ops.cd_epoch_xb(Xt, y, beta0, Xb0, L, offset, L1,
+                                       params, kind, w=w, epochs=2,
+                                       interpret=True)
+        beta_r, Xb_r = beta0, Xb0
+        for _ in range(2):
+            beta_r, Xb_r = cd_epoch_xb_jax(Xt, y, beta_r, Xb_r, L, offset,
+                                           datafit, pen, w=w)
+        np.testing.assert_allclose(np.asarray(beta_k), np.asarray(beta_r),
+                                   atol=1e-11, rtol=1e-8)
+        np.testing.assert_allclose(np.asarray(Xb_k), np.asarray(Xb_r),
+                                   atol=1e-11, rtol=1e-8)
+
+
+def test_weighted_solve_pallas_matches_jax_and_subset():
+    """sample_weight on the Pallas backend (previously rejected): parity
+    with the jax backend, and 0/1 fold weights reproduce the row-subset
+    solve (the normalize_weights contract, DESIGN.md §9)."""
+    rng = np.random.default_rng(13)
+    X, y, _ = make_correlated_design(n=90, p=200, n_nonzero=8, seed=1)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lam = lambda_max(X, y) / 8
+    w = rng.random(90) + 0.25
+    r_jax = solve(X, y, Quadratic(), L1(lam), sample_weight=w, tol=1e-9)
+    r_pal = solve(X, y, Quadratic(), L1(lam), sample_weight=w, tol=1e-9,
+                  use_kernels=True)
+    assert r_pal.converged
+    np.testing.assert_allclose(np.asarray(r_pal.beta), np.asarray(r_jax.beta),
+                               atol=1e-6)
+    mask = (rng.random(90) < 0.7).astype(np.float64)
+    keep = np.flatnonzero(mask)
+    r_mask = solve(X, y, Quadratic(), L1(lam), sample_weight=mask, tol=1e-10,
+                   use_kernels=True)
+    r_rows = solve(X[keep], y[keep], Quadratic(), L1(lam), tol=1e-10,
+                   use_kernels=True)
+    np.testing.assert_allclose(np.asarray(r_mask.beta),
+                               np.asarray(r_rows.beta), atol=1e-7)
+
+
+# ------------------------------------------------------------- sparse kernels
+def test_csc_weighted_col_sq_pallas_matches_dense():
+    """The weighted segment-sum kernel (grid-driver Lipschitz hot path) vs
+    the dense reduction, plus the multitask [n, T] score variant."""
+    import scipy.sparse as sp
+
+    from repro.sparse import CSCDesign
+    from repro.sparse.ops import csc_score_pallas, csc_weighted_col_sq_pallas
+
+    rng = np.random.default_rng(17)
+    n, p = 120, 300
+    Xd = rng.standard_normal((n, p)) * (rng.random((n, p)) < 0.05)
+    D = CSCDesign.from_scipy(sp.csc_matrix(Xd), ell=True)
+    w = jnp.asarray(rng.random(n) + 0.1)
+    got = csc_weighted_col_sq_pallas(D.ell_rows, D.ell_vals, w,
+                                     interpret=True)
+    want = (np.asarray(w)[:, None] * Xd * Xd).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-10, rtol=1e-8)
+
+    raw = jnp.asarray(rng.standard_normal((n, 4)))
+    got_mt = csc_score_pallas(D.ell_rows, D.ell_vals, raw, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_mt), Xd.T @ np.asarray(raw),
+                               atol=1e-10, rtol=1e-8)
+
+
+# -------------------------------------------------------------- grid drivers
+def test_paths_on_pallas_backend():
+    """reg_path (chunked) and cross_val_path run on the Pallas backend —
+    chunk() no longer rejects it — and match the jax grid results."""
+    from repro.core.path import cross_val_path, reg_path
+
+    X, y, _ = make_correlated_design(n=60, p=90, n_nonzero=6, seed=2)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    kw = dict(n_lambdas=5, lambda_min_ratio=0.1, tol=1e-7, vmap_chunk=3)
+    pj = reg_path(X, y, L1(1.0), Quadratic(), **kw)
+    pp = reg_path(X, y, L1(1.0), Quadratic(),
+                  engine=make_engine(L1(1.0), Quadratic(), use_kernels=True,
+                                     shared=False), **kw)
+    np.testing.assert_allclose(np.asarray(pp.betas), np.asarray(pj.betas),
+                               atol=1e-6)
+    cvkw = dict(n_lambdas=4, lambda_min_ratio=0.1, cv=3, tol=1e-7,
+                vmap_chunk=2, seed=0)
+    gj = cross_val_path(X, y, Quadratic(), L1(1.0), **cvkw)
+    gp = cross_val_path(X, y, Quadratic(), L1(1.0),
+                        engine=make_engine(L1(1.0), Quadratic(),
+                                           use_kernels=True, shared=False),
+                        **cvkw)
+    np.testing.assert_allclose(np.asarray(gp.cv_mean), np.asarray(gj.cv_mean),
+                               atol=1e-6)
+    assert gp.best_lambda == pytest.approx(gj.best_lambda, rel=1e-9)
+
+
+# ----------------------------------------------------------- roofline budget
+def test_fused_byte_model_within_budget():
+    """The CI-enforced single-read budget: fused score+select+gather HBM
+    bytes-per-outer <= 0.6x the two-pass head at the smoke roofline shape,
+    and the advantage grows with p at fixed ws."""
+    from repro.roofline.engine_stages import (fused_bytes_model,
+                                              fused_bytes_ratio,
+                                              two_pass_bytes_model)
+    assert fused_bytes_ratio(128, 1024, 64) <= 0.6
+    assert fused_bytes_ratio(300, 1500, 64) <= 0.6
+    r_small = fused_bytes_ratio(128, 1024, 64)
+    r_big = fused_bytes_ratio(128, 8192, 64)
+    assert r_big <= r_small
+    two = two_pass_bytes_model(128, 1024, 64)
+    fus = fused_bytes_model(128, 1024, 64)
+    assert set(two) == {"score", "select", "gather", "total"}
+    assert set(fus) == {"kernel", "select", "recover", "total"}
+    assert two["total"] > fus["total"] > 0

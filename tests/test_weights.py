@@ -192,10 +192,13 @@ def test_unsupported_weight_configs_raise_at_entry(wdata):
         solve(Z, y, QuadraticSVC(), Box(0.1), sample_weight=np.ones(40))
     with pytest.raises(NotImplementedError):
         LinearSVC(C=0.1).fit(X, y, sample_weight=np.ones(n))
-    # Pallas kernels hard-code unweighted raw gradients
-    with pytest.raises(NotImplementedError, match="Pallas"):
-        solve(X, y, Quadratic(), L1(0.1), use_kernels=True,
-              sample_weight=mask)
+    # the Pallas backend runs weighted solves natively since the fused-
+    # kernel generalization (DESIGN.md §10) — parity with jax, not an error
+    r_pal = solve(X, y, Quadratic(), L1(0.1), use_kernels=True,
+                  sample_weight=mask, tol=1e-8)
+    r_jax = solve(X, y, Quadratic(), L1(0.1), sample_weight=mask, tol=1e-8)
+    np.testing.assert_allclose(np.asarray(r_pal.beta), np.asarray(r_jax.beta),
+                               atol=1e-6)
 
 
 def test_normalize_weights_rescales_to_n():
