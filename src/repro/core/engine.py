@@ -68,14 +68,16 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import shard_map
-from repro.launch.shardings import design_specs, task_spec
+from repro.launch.shardings import design_specs, ring_spec, task_spec
+from repro.obs.registry import MetricsRegistry
+from repro.obs.rings import gap_supported, quadratic_l1_gap
 
 from .anderson import anderson_extrapolate
 from .cd import cd_epoch_gram, cd_epoch_xb
 from .working_set import (candidate_columns, gather_ws_cols, gather_ws_vec,
                           scatter_ws, select_working_set,
                           select_working_set_local, shard_ws_mask,
-                          violation_scores)
+                          violation_scores, ws_occupancy)
 
 __all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
            "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS", "Design",
@@ -393,16 +395,24 @@ class SubproblemSolver:
         raise NotImplementedError
 
     # -- shared Anderson-CD block loop ------------------------------------
-    def solve(self, ctx, beta0, eps, aux0=None):
-        """Returns (beta, aux, n_epochs, kkt). `aux0` lets the caller thread
-        outer-loop state (the Xb path shares Xb across outer iterations)."""
+    def solve(self, ctx, beta0, eps, aux0=None, track=False):
+        """Returns (beta, aux, n_epochs, kkt, n_accepts). `aux0` lets the
+        caller thread outer-loop state (the Xb path shares Xb across outer
+        iterations). `track=True` (the telemetry-ring path, DESIGN.md
+        §11.1) counts the accepted Anderson extrapolations as an extra
+        int32 loop carry; `track=False` keeps the pre-obs loop state
+        bit-identical and returns ``n_accepts=None``."""
         cfg = self.config
         M = cfg.M
         if aux0 is None:
             aux0 = self.prepare(ctx, beta0)
 
         def block(state):
-            beta, aux, k, _ = state
+            if track:
+                beta, aux, k, _, acc = state
+            else:
+                beta, aux, k, _ = state
+                acc = None
             hist = jnp.zeros((M + 1,) + beta.shape, beta.dtype).at[0].set(beta)
 
             def ep(e, s):
@@ -418,19 +428,25 @@ class SubproblemSolver:
                     self.objective(ctx, beta, aux)
                 beta = jnp.where(take, be, beta)
                 aux = jnp.where(take, auxe, aux)
+                if track:
+                    acc = acc + take.astype(jnp.int32)
             grad = self.gradient(ctx, beta, aux)
             kkt = jnp.max(violation_scores(ctx.penalty, beta, grad, ctx.L_ws,
                                            use_fixed_point=cfg.use_fp_score))
-            return beta, aux, k + 1, kkt
+            out = (beta, aux, k + 1, kkt)
+            return out + (acc,) if track else out
 
         def cond(state):
-            _, _, k, kkt = state
+            k, kkt = state[2], state[3]
             return (k < cfg.max_blocks) & (kkt > eps)
 
         init = (beta0, aux0, jnp.zeros((), jnp.int32),
                 jnp.asarray(jnp.inf, beta0.dtype))
-        beta, aux, k, kkt = jax.lax.while_loop(cond, block, init)
-        return beta, aux, k * M, kkt
+        if track:
+            init = init + (jnp.zeros((), jnp.int32),)
+        out = jax.lax.while_loop(cond, block, init)
+        beta, aux, k, kkt = out[:4]
+        return beta, aux, k * M, kkt, out[4] if track else None
 
 
 def _scalar_epoch_kernel_ok(penalty, beta) -> bool:
@@ -541,11 +557,37 @@ class SolveEngine:
             if missing:
                 raise ValueError(
                     f"mesh axes {sorted(missing)} not in {mesh.axis_names}")
+        self.metrics = MetricsRegistry()
         self.retraces: dict = {}
         self.n_dispatches = 0
         self._jstep = jax.jit(self._outer_step, static_argnames=("bucket",))
         self._jchunk = jax.jit(self._chunk_solve, static_argnames=("bucket",))
         self._jprobe = jax.jit(self._probe)
+
+    # legacy counter attributes are live views into the metrics registry
+    # (DESIGN.md §11.3): the mutation idioms used everywhere —
+    # ``engine.retraces[key] += 1``, ``engine.n_dispatches = 0`` in bench
+    # reset loops, ``dict(engine.retraces)`` snapshots — keep working
+    # verbatim, and the registry is the single export surface
+    @property
+    def retraces(self) -> dict:
+        """Live {bucket key: compile count} mapping (view into
+        ``metrics['engine.retraces']``)."""
+        return self.metrics.mapping("engine.retraces")
+
+    @retraces.setter
+    def retraces(self, value: dict):
+        self.metrics.set_mapping("engine.retraces", dict(value))
+
+    @property
+    def n_dispatches(self) -> int:
+        """Fused-step launches (view into
+        ``metrics['engine.n_dispatches']``)."""
+        return self.metrics.counter("engine.n_dispatches")
+
+    @n_dispatches.setter
+    def n_dispatches(self, value: int):
+        self.metrics.set_counter("engine.n_dispatches", value)
 
     def _make_inner(self):
         cfg = self.config
@@ -610,7 +652,7 @@ class SolveEngine:
         return sdf, grad, scores, kkt, gsupp, gcount, obj
 
     def _step_body(self, design, y, w, beta, Xb, L, offset, datafit, penalty,
-                   tol, eps_frac, bucket):
+                   tol, eps_frac, bucket, obs=None):
         """Fused: score -> select -> gather -> inner solve -> scatter.
 
         On a mesh: local views design [n_loc, width], y/w/Xb [n_loc],
@@ -625,6 +667,13 @@ class SolveEngine:
         launch is nearly free. The covered flag asserts the selected working
         set retained the whole generalized support (it must, while the
         bucket policy keeps bucket >= |gsupp|).
+
+        ``obs`` is an optional telemetry ring (repro.obs.rings, DESIGN.md
+        §11.1): when given, the step records this iteration's
+        kkt/gap/obj/ws curves in-dispatch and the advanced ring joins the
+        return tuple as an 8th element. ``obs=None`` (the default)
+        statically elides every ring op — the 7-tuple trace is the
+        bit-identical pre-obs program, like ``w=None``.
         """
         cfg = self.config
         da, ma = self._live_axes()
@@ -675,6 +724,7 @@ class SolveEngine:
         eps_in = jnp.maximum(eps_frac * kkt, 0.1 * tol)
         done = kkt <= tol
         inner = self._make_inner()
+        track = obs is not None           # count Anderson accepts for the ring
         # the pass-through sdf wrapper would break the pallas kernels'
         # datafit-kind lookup; hand the inner solver the bare datafit
         # whenever the samples are unsplit
@@ -704,14 +754,16 @@ class SolveEngine:
                                     pen_ws, G=G, c=c)
 
             def run(_):
-                beta_ws, _, n_ep, _ = inner.solve(ctx, beta_ws0, eps_in,
-                                                  aux0=q0)
-                return beta_ws, n_ep
+                beta_ws, _, n_ep, _, n_acc = inner.solve(ctx, beta_ws0,
+                                                         eps_in, aux0=q0,
+                                                         track=track)
+                return beta_ws, n_ep, n_acc
 
             def skip(_):
-                return beta_ws0, jnp.zeros((), jnp.int32)
+                zero = jnp.zeros((), jnp.int32)
+                return beta_ws0, zero, (zero if track else None)
 
-            beta_ws, n_ep = jax.lax.cond(done, skip, run, None)
+            beta_ws, n_ep, n_acc = jax.lax.cond(done, skip, run, None)
             # incremental residual: exact even when a nonzero coordinate
             # sits outside ws
             Xb_new = design.update_xb(Xb, X_ws, ws_aux, beta_ws - beta_ws0,
@@ -727,62 +779,92 @@ class SolveEngine:
 
             def run(_):
                 # Xb is shared outer-loop state: enter with the caller's Xb
-                beta_ws, Xb2, n_ep, _ = inner.solve(ctx, beta_ws0, eps_in,
-                                                    aux0=Xb)
-                return beta_ws, Xb2, n_ep
+                beta_ws, Xb2, n_ep, _, n_acc = inner.solve(ctx, beta_ws0,
+                                                           eps_in, aux0=Xb,
+                                                           track=track)
+                return beta_ws, Xb2, n_ep, n_acc
 
             def skip(_):
-                return beta_ws0, Xb, jnp.zeros((), jnp.int32)
+                zero = jnp.zeros((), jnp.int32)
+                return beta_ws0, Xb, zero, (zero if track else None)
 
-            beta_ws, Xb_new, n_ep = jax.lax.cond(done, skip, run, None)
+            beta_ws, Xb_new, n_ep, n_acc = jax.lax.cond(done, skip, run,
+                                                        None)
 
         beta_new = scatter_ws(beta, mine, loc, beta_ws)
         gcount = _psum_if(
             jnp.sum(penalty.generalized_support(beta_new), dtype=jnp.int32),
             ma)
-        return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov
+        if obs is None:
+            return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov
+        # in-dispatch telemetry (DESIGN.md §11.1): scalars of THIS iteration
+        # — kkt/obj/gap on the incoming iterate, epochs/accepts/occupancy of
+        # the inner solve just run — written at the ring cursor. The gap
+        # reuses the residual/gradient the score pass already produced, so
+        # recording costs a handful of scalar FLOPs, never an extra pass
+        gap = (quadratic_l1_gap(y, Xb, grad, obj, n_glob, penalty.lam,
+                                da, ma)
+               if gap_supported(datafit, penalty, w)
+               else jnp.full((), jnp.nan, jnp.asarray(obj).dtype))
+        ring = obs.record(
+            kkt=kkt, obj=obj, gap=gap,
+            ws_size=jnp.asarray(bucket, jnp.int32),
+            gsupp=jnp.asarray(gcount0, jnp.int32),
+            epochs=n_ep, accepts=n_acc,
+            occupancy=ws_occupancy(beta_ws))
+        return beta_new, Xb_new, kkt, obj, gcount, n_ep, cov, ring
 
     def _sharded_step(self, design, y, w, beta, Xb, L, offset, datafit,
-                      penalty, tol, eps_frac, bucket):
+                      penalty, tol, eps_frac, bucket, obs=None):
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
         # multitask: y/Xb are [n, T], beta is [p, T] — the task dimension is
         # explicitly replicated; L/offset stay 1-D feature vectors and the
-        # sample weights w stay a 1-D sample vector (spec = ys)
+        # sample weights w stay a 1-D sample vector (spec = ys); the
+        # telemetry ring's leaves are mesh-replicated (ring_spec), and
+        # obs=None contributes no leaves at all
         T = y.ndim - 1
         yt, bt = task_spec(ys, T), task_spec(bs, T)
 
         def body(design, y, w, beta, Xb, L, offset, datafit, penalty, tol,
-                 eps_frac):
+                 eps_frac, obs):
             return self._step_body(design, y, w, beta, Xb, L, offset,
-                                   datafit, penalty, tol, eps_frac, bucket)
+                                   datafit, penalty, tol, eps_frac, bucket,
+                                   obs=obs)
 
+        out_specs = (bt, yt, P(), P(), P(), P(), P())
+        if obs is not None:
+            out_specs = out_specs + (ring_spec(),)
         return shard_map(
             body, mesh=self.mesh,
-            in_specs=(xs, yt, ys, bt, yt, bs, bs, P(), P(), P(), P()),
-            out_specs=(bt, yt, P(), P(), P(), P(), P()),
+            in_specs=(xs, yt, ys, bt, yt, bs, bs, P(), P(), P(), P(),
+                      ring_spec()),
+            out_specs=out_specs,
             check_vma=False)(design, y, w, beta, Xb, L, offset, datafit,
-                             penalty, tol, eps_frac)
+                             penalty, tol, eps_frac, obs)
 
     def _outer_step(self, design, y, w, beta, Xb, L, offset, datafit,
-                    penalty, tol, eps_frac, *, bucket):
+                    penalty, tol, eps_frac, *, bucket, obs=None):
         # executes once per (bucket, arg-structure) compilation: the counter
         # is the proof behind "one compile per ws bucket across a path"
-        # (sparse designs, multitask and weighted solves get their own key
-        # spaces so mixed use of a shared engine stays observable — [p] and
-        # [p, T] traces are distinct compilations, as are weighted ones)
+        # (sparse designs, multitask, weighted and telemetry-carrying solves
+        # get their own key spaces so mixed use of a shared engine stays
+        # observable — [p] and [p, T] traces are distinct compilations, as
+        # are weighted and ring-carrying ones)
         key = bucket if design.KIND == "dense" else (design.KIND, bucket)
         if beta.ndim == 2:
             key = ("mt", key)
         if w is not None:
             key = ("wtd", key)
+        if obs is not None:
+            key = ("obs", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         if self.mesh is not None:
             return self._sharded_step(design, y, w, beta, Xb, L, offset,
                                       datafit, penalty, tol, eps_frac,
-                                      bucket)
+                                      bucket, obs=obs)
         return self._step_body(design, y, w, beta, Xb, L, offset, datafit,
-                               penalty, tol, eps_frac, bucket)
+                               penalty, tol, eps_frac, bucket, obs=obs)
 
     def _probe(self, design, y, w, beta, Xb, L, offset, datafit, penalty):
         """Pre-loop probe: kkt/|gsupp|/obj of the initial iterate (sizes the
@@ -812,30 +894,23 @@ class SolveEngine:
 
     # ---------------------------------------------------- multi-lambda chunk
     def _chunk_loop(self, step_fn, p, lams, betas, Xbs, w, L, tol, max_outer,
-                    growth, bucket):
+                    growth, bucket, obs=None):
         """The device-resident chunk outer loop, shared by the dense and the
-        sharded drivers. `step_fn(lam, beta, Xb, w, L)` is one fused outer
-        step for one lane; `p` is the GLOBAL feature count
+        sharded drivers. `step_fn(lam, beta, Xb, w, L[, ring])` is one fused
+        outer step for one lane; `p` is the GLOBAL feature count
         (bucket-escalation test). `w` may be None (unweighted), [n] (one
         weight vector shared by every lane) or [C, n] (per-lane weights —
         the CV/bootstrap grid, DESIGN.md §9); `L` is the matching [p] shared
-        or [C, p] per-lane Lipschitz constants."""
+        or [C, p] per-lane Lipschitz constants. `obs` is an optional
+        per-lane telemetry ring (leaves [C, cap], DESIGN.md §11.1): it
+        rides the lane vmap and the while_loop carry, and the final ring
+        joins the state tuple as an 8th element; `obs=None` keeps the
+        7-tuple pre-obs loop bit-identical."""
         w_ax = 0 if (w is not None and w.ndim == 2) else None
         L_ax = 0 if L.ndim == 2 else None
 
-        def lane(lam, beta, Xb, w_l, L_l):
-            return step_fn(lam, beta, Xb, w_l, L_l)[:6]  # drop covered flag
-
-        vstep = jax.vmap(lane, in_axes=(0, 0, 0, w_ax, L_ax))
-
-        def body(state):
-            betas, Xbs, kkts, objs, gcounts, n_eps, it = state
-            betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas, Xbs,
-                                                          w, L)
-            return betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1
-
         def cond(state):
-            _, _, kkts, _, gcounts, _, it = state
+            kkts, gcounts, it = state[2], state[4], state[6]
             unconverged = kkts > tol
             live = (it < max_outer) & jnp.any(unconverged)
             if bucket < p:
@@ -850,11 +925,39 @@ class SolveEngine:
                 jnp.zeros((C,), betas.dtype),
                 jnp.zeros((C,), jnp.int32), jnp.zeros((C,), jnp.int32),
                 jnp.zeros((), jnp.int32))
-        return jax.lax.while_loop(cond, body, init)
+
+        if obs is None:
+            def lane(lam, beta, Xb, w_l, L_l):
+                return step_fn(lam, beta, Xb, w_l, L_l)[:6]  # drop cov flag
+
+            vstep = jax.vmap(lane, in_axes=(0, 0, 0, w_ax, L_ax))
+
+            def body(state):
+                betas, Xbs, kkts, objs, gcounts, n_eps, it = state
+                betas, Xbs, kkts, objs, gcounts, d_ep = vstep(lams, betas,
+                                                              Xbs, w, L)
+                return betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1
+
+            return jax.lax.while_loop(cond, body, init)
+
+        def lane(lam, beta, Xb, w_l, L_l, ring):
+            out = step_fn(lam, beta, Xb, w_l, L_l, ring)
+            return out[:6] + (out[7],)                   # drop cov flag
+
+        vstep = jax.vmap(lane, in_axes=(0, 0, 0, w_ax, L_ax, 0))
+
+        def body(state):
+            betas, Xbs, kkts, objs, gcounts, n_eps, it, rings = state
+            betas, Xbs, kkts, objs, gcounts, d_ep, rings = vstep(
+                lams, betas, Xbs, w, L, rings)
+            return (betas, Xbs, kkts, objs, gcounts, n_eps + d_ep, it + 1,
+                    rings)
+
+        return jax.lax.while_loop(cond, body, init + (obs,))
 
     def _chunk_solve(self, design, y, lams, betas, Xbs, L, offset, datafit,
                      penalty, tol, eps_frac, max_outer, growth, w, *,
-                     bucket):
+                     bucket, obs=None):
         """Device-resident path chunk: vmap the fused step over a chunk of
         lambdas and drive the *outer* loop with lax.while_loop, so the host
         syncs once per chunk instead of once per (lambda, outer iteration).
@@ -877,17 +980,20 @@ class SolveEngine:
             key = ("mt", key)
         if w is not None:
             key = ("wtd", key)
+        if obs is not None:
+            key = ("obs", key)
         self.retraces[key] = self.retraces.get(key, 0) + 1
         p_glob = design.shape[1]
 
         if self.mesh is None:
-            def step(lam, beta, Xb, w_l, L_l):
+            def step(lam, beta, Xb, w_l, L_l, ring=None):
                 pen = dataclasses.replace(penalty, lam=lam)
                 return self._step_body(design, y, w_l, beta, Xb, L_l, offset,
-                                       datafit, pen, tol, eps_frac, bucket)
+                                       datafit, pen, tol, eps_frac, bucket,
+                                       obs=ring)
 
             return self._chunk_loop(step, p_glob, lams, betas, Xbs, w, L,
-                                    tol, max_outer, growth, bucket)
+                                    tol, max_outer, growth, bucket, obs=obs)
 
         xs = design.in_spec(self.data_axis, self.model_axis)
         _, ys, bs = self._specs()
@@ -903,32 +1009,42 @@ class SolveEngine:
         L_spec = bs if L.ndim == 1 else P(None, *bs)
 
         def body(design, y, lams, betas, Xbs, L, offset, datafit, penalty,
-                 tol, eps_frac, max_outer, growth, w):
-            def step(lam, beta, Xb, w_l, L_l):
+                 tol, eps_frac, max_outer, growth, w, obs):
+            def step(lam, beta, Xb, w_l, L_l, ring=None):
                 pen = dataclasses.replace(penalty, lam=lam)
                 return self._step_body(design, y, w_l, beta, Xb, L_l, offset,
-                                       datafit, pen, tol, eps_frac, bucket)
+                                       datafit, pen, tol, eps_frac, bucket,
+                                       obs=ring)
 
             return self._chunk_loop(step, p_glob, lams, betas, Xbs, w, L,
-                                    tol, max_outer, growth, bucket)
+                                    tol, max_outer, growth, bucket, obs=obs)
 
+        out_specs = (lane_b, lane_x, P(), P(), P(), P(), P())
+        if obs is not None:
+            out_specs = out_specs + (ring_spec(),)
         return shard_map(
             body, mesh=self.mesh,
             in_specs=(xs, yt, P(), lane_b, lane_x, L_spec, bs, P(), P(),
-                      P(), P(), P(), P(), w_spec),
-            out_specs=(lane_b, lane_x, P(), P(), P(), P(), P()),
+                      P(), P(), P(), P(), w_spec, ring_spec()),
+            out_specs=out_specs,
             check_vma=False)(design, y, lams, betas, Xbs, L, offset, datafit,
-                             penalty, tol, eps_frac, max_outer, growth, w)
+                             penalty, tol, eps_frac, max_outer, growth, w,
+                             obs)
 
     # ------------------------------------------------------------- host API
     def step(self, bucket, design, y, beta, Xb, L, offset, datafit, penalty,
-             tol, eps_frac, w=None):
+             tol, eps_frac, w=None, obs=None):
         """One fused outer iteration. Single device dispatch; the caller does
         the (single) scalar readback. ``w`` is the optional normalized
-        per-sample weight vector (DESIGN.md §9)."""
+        per-sample weight vector (DESIGN.md §9). ``obs`` is the optional
+        telemetry ring (repro.obs.rings, DESIGN.md §11.1): when given, the
+        step additionally records its per-outer scalars into the ring and
+        returns it as an 8th output — still one dispatch, and ``obs=None``
+        statically elides every telemetry op (same mechanism as
+        ``w=None``)."""
         self.n_dispatches += 1
         return self._jstep(design, y, w, beta, Xb, L, offset, datafit,
-                           penalty, tol, eps_frac, bucket=bucket)
+                           penalty, tol, eps_frac, bucket=bucket, obs=obs)
 
     def probe(self, design, y, beta, Xb, L, offset, datafit, penalty,
               w=None):
@@ -938,18 +1054,21 @@ class SolveEngine:
                             penalty)
 
     def chunk(self, bucket, design, y, lams, betas, Xbs, L, offset, datafit,
-              penalty, tol, eps_frac, max_outer, growth=2, w=None):
+              penalty, tol, eps_frac, max_outer, growth=2, w=None, obs=None):
         """One device-resident multi-lambda chunk solve. Returns the final
         (betas, Xbs, kkts, objs, gcounts, n_eps, n_outer) state. ``w`` may
         be None, a shared [n] weight vector, or per-lane [C, n] weights
         (with ``L`` then the per-lane [C, p] Lipschitz constants) — the
         grid-driver form (DESIGN.md §9). The Pallas kernels batch cleanly
         under vmap (pallas_call adds a leading grid dimension), so the
-        chunked driver runs on every backend."""
+        chunked driver runs on every backend. ``obs`` is the optional
+        per-lane telemetry ring (``lanes=C``; DESIGN.md §11.1), threaded
+        through the lane vmap and returned as an 8th output when given —
+        ``obs=None`` statically elides every telemetry op."""
         self.n_dispatches += 1
         return self._jchunk(design, y, lams, betas, Xbs, L, offset, datafit,
                             penalty, tol, eps_frac, max_outer, growth, w,
-                            bucket=bucket)
+                            bucket=bucket, obs=obs)
 
     def validate(self, datafit, penalty, n_tasks, shape=None, design=None,
                  weighted=False):

@@ -125,7 +125,10 @@ class GeneralizedLinearEstimator:
     def fit(self, X, y, sample_weight=None):
         """Run Algorithm 1 on (X, y); fitted state lands on ``coef_``,
         ``intercept_``, ``kkt_``, ``converged_``, ``n_iter_``,
-        ``n_epochs_``, ``result_``. ``y`` may be ``[n]`` or ``[n, T]``
+        ``n_epochs_``, ``result_``, ``diagnostics_`` (the solve's
+        convergence record, DESIGN.md §11 — pass ``obs=...`` at
+        construction to add device telemetry curves and tracer spans).
+        ``y`` may be ``[n]`` or ``[n, T]``
         (multitask datafits; ``coef_`` is then ``[p, T]``).
         ``sample_weight`` (non-negative ``[n]``, rejected at entry
         otherwise) weights the datafit per sample — the sklearn-compatible
@@ -150,6 +153,7 @@ class GeneralizedLinearEstimator:
         self.n_iter_ = res.n_outer
         self.n_epochs_ = res.n_epochs
         self.result_ = res
+        self.diagnostics_ = res.diagnostics
         return self
 
     def predict(self, X):
@@ -256,6 +260,7 @@ class LinearSVC(GeneralizedLinearEstimator):
         self.converged_ = res.converged
         self.n_iter_ = res.n_outer
         self.result_ = res
+        self.diagnostics_ = res.diagnostics
         return self
 
     def predict(self, X):
@@ -350,9 +355,11 @@ class _CVEstimatorMixin:
             raise ValueError(f"unknown criterion {criterion!r}; supported: "
                              f"'cv' | 'aic' | 'bic' | 'ebic'")
         # kwargs the grid drivers cannot honor must not silently fork the
-        # tuning sweep's solver away from the refit's (use_ws, beta0, ...)
+        # tuning sweep's solver away from the refit's (use_ws, beta0, ...);
+        # obs rides along — both drivers and solve() accept the handle
         extra = set(self.solve_kw) \
-            - {"mesh", "data_axis", "model_axis"} - set(self._ENGINE_KEYS)
+            - {"mesh", "data_axis", "model_axis", "obs"} \
+            - set(self._ENGINE_KEYS)
         if extra:
             raise ValueError(
                 f"CV estimators do not support solve kwargs "
@@ -373,7 +380,7 @@ class _CVEstimatorMixin:
         solver configuration the refit uses, so the tuning solves and the
         final model never run different engines."""
         kw = {k: v for k, v in self.solve_kw.items()
-              if k in ("mesh", "data_axis", "model_axis")
+              if k in ("mesh", "data_axis", "model_axis", "obs")
               or k in self._ENGINE_KEYS}
         kw.update(M=self.M, max_epochs=self.max_epochs,
                   use_kernels=self.use_kernels, engine=self.engine)
@@ -434,6 +441,9 @@ class _CVEstimatorMixin:
             self.n_iter_ = res.n_outer
             self.n_epochs_ = res.n_epochs
             self.result_ = res
+            # the refit's convergence record; the grid sweep's own curves
+            # stay on grid_result_.diagnostics
+            self.diagnostics_ = res.diagnostics
         else:
             path = reg_path(
                 design, y, self.penalty, self.datafit, lambdas=alphas,
@@ -462,6 +472,7 @@ class _CVEstimatorMixin:
             self.n_iter_ = int(path.n_outer[i])
             self.n_epochs_ = int(path.n_epochs[i])
             self.result_ = path
+            self.diagnostics_ = path.diagnostics
         self.intercept_ = 0.0 if not self.fit_intercept \
             else y_mean - X_mean @ self.coef_
         return self

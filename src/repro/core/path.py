@@ -41,10 +41,14 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
+
+from repro.obs import SolveDiagnostics, TelemetryRing, null_span
 
 from .api import lambda_max
 from .datafits import Quadratic
@@ -59,6 +63,11 @@ __all__ = ["reg_path", "PathResult", "support_metrics", "cross_val_path",
 _ENGINE_KW = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
               "use_kernels")
 
+# The drivers' wall clock, indirected so the timing tests can pin it to a
+# deterministic fake counter (tests/test_obs.py monkeypatches
+# ``repro.core.path._now``).
+_now = time.perf_counter
+
 
 @dataclass
 class PathResult:
@@ -72,14 +81,29 @@ class PathResult:
         Solutions, ``[n_lambdas, p]`` or ``[n_lambdas, p, T]`` (multitask).
     kkts, nnzs, n_epochs, n_outer, times : np.ndarray
         Per-lambda KKT violation, nonzero count, inner epochs, outer
-        iterations, and cumulative wall-clock seconds.
+        iterations, and wall-clock seconds. ``times[i]`` is the seconds
+        SPENT ON lambda i — the sequential driver stamps each solve's own
+        duration, the chunked driver stamps every lambda of a chunk with
+        that chunk's duration (``np.cumsum(times)`` recovers the
+        sweep-cumulative curve older versions recorded; the old chunked
+        stamping was buggy anyway — it wrote the running sweep total,
+        conflating chunk cost with position in the sweep).
     metrics : list of dict
         Per-lambda ``metric_fn`` outputs (when provided).
+    diagnostics : repro.obs.SolveDiagnostics
+        Structured convergence record (DESIGN.md §11). The chunked driver
+        run with ``obs=...`` fills ``curves`` with the drained per-lane
+        telemetry rings (``[n_lambdas, max_outer]`` per field); otherwise
+        the per-lambda aggregate curves. Its registry backs the legacy
+        telemetry attributes below.
     retraces : dict
         The engine's compile counter per (bucket, driver) key — the proof
-        behind "one compile per working-set bucket across a path".
+        behind "one compile per working-set bucket across a path". A LIVE
+        property view into ``diagnostics.registry`` mapping
+        ``"path.retraces"`` (reads and writes work as the pre-§11 field).
     n_dispatches : int
-        Total fused-step launches of the sweep.
+        Total fused-step launches of the sweep (property view into the
+        ``"path.n_dispatches"`` counter).
     screened_fracs : np.ndarray, optional
         Fraction of features pre-screened per lambda (gap-safe runs only).
     """
@@ -91,11 +115,33 @@ class PathResult:
     metrics: List[dict] = field(default_factory=list)
     # engine telemetry (per lambda / whole sweep)
     n_outer: Optional[np.ndarray] = None
-    times: Optional[np.ndarray] = None          # cumulative seconds
-    retraces: dict = field(default_factory=dict)
-    n_dispatches: int = 0
+    times: Optional[np.ndarray] = None          # per-lambda seconds
+    diagnostics: SolveDiagnostics = field(default_factory=SolveDiagnostics)
     # gap-safe screening telemetry (screen="gap_safe" only)
     screened_fracs: Optional[np.ndarray] = None
+
+    @property
+    def retraces(self) -> dict:
+        """Engine compile counter (live view into the registry)."""
+        return self.diagnostics.registry.mapping("path.retraces")
+
+    @retraces.setter
+    def retraces(self, value: dict):
+        self.diagnostics.registry.set_mapping("path.retraces", dict(value))
+
+    @property
+    def n_dispatches(self) -> int:
+        """Fused-step launches of the sweep (view into the registry)."""
+        return self.diagnostics.registry.counter("path.n_dispatches")
+
+    @n_dispatches.setter
+    def n_dispatches(self, value: int):
+        self.diagnostics.registry.set_counter("path.n_dispatches",
+                                              int(value))
+
+    def summary(self) -> str:
+        """Render the convergence diagnostics table."""
+        return self.diagnostics.summary()
 
 
 def _with_lam(penalty, lam: float):
@@ -128,7 +174,7 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
              lambda_min_ratio=1e-2, tol=1e-6,
              metric_fn: Optional[Callable] = None, engine=None, vmap_chunk=1,
              mesh=None, data_axis="data", model_axis="model", screen=None,
-             sample_weight=None, **solve_kw) -> PathResult:
+             sample_weight=None, obs=None, **solve_kw) -> PathResult:
     """Warm-started path over a geometric lambda grid (lam_max -> ratio*lam_max).
 
     Parameters
@@ -177,6 +223,15 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
         Non-negative per-sample weights ``[n]`` shared by every lambda
         (DESIGN.md §9): validated and rescaled to sum to n once, then
         threaded through both drivers as a pytree leaf (never retraces).
+    obs : repro.obs.Obs, optional
+        Observability handle (DESIGN.md §11): opens nested path → lambda
+        (-chunk) spans on ``obs.tracer`` and, on the chunked driver,
+        carries a per-lane telemetry ring through the device-resident
+        sweep — per-outer convergence curves for every lambda lane land on
+        ``PathResult.diagnostics`` (the sequential driver's per-solve
+        curves land on each solve's diagnostics via ``obs.solves``). Zero
+        extra dispatches; ``obs=None`` is bit-identical to the pre-obs
+        program.
     **solve_kw
         Forwarded to :func:`repro.core.solver.solve` (sequential driver) or
         restricted to engine-level keys (chunked driver).
@@ -238,37 +293,52 @@ def reg_path(X, y, penalty, datafit=None, *, lambdas=None, n_lambdas=30,
     if engine.mesh is not None:
         design, y, w = _place_design(engine, design, y, w)
 
-    if vmap_chunk > 1:
-        res = _chunked_path(design, y, penalty, datafit, lambdas, tol,
-                            engine, vmap_chunk, metric_fn, w=w, **solve_kw)
-    else:
-        res = _sequential_path(design, y, penalty, datafit, lambdas, tol,
-                               engine, metric_fn, screen=screen, w=host_w,
-                               **solve_kw)
+    sp = obs.span if obs is not None else null_span
+    driver = "chunked" if vmap_chunk > 1 \
+        else ("screened" if screen is not None else "sequential")
+    with sp("path", driver=driver, n_lambdas=len(lambdas)):
+        if vmap_chunk > 1:
+            res = _chunked_path(design, y, penalty, datafit, lambdas, tol,
+                                engine, vmap_chunk, metric_fn, w=w, obs=obs,
+                                **solve_kw)
+        else:
+            res = _sequential_path(design, y, penalty, datafit, lambdas,
+                                   tol, engine, metric_fn, screen=screen,
+                                   w=host_w, obs=obs, **solve_kw)
     res.retraces = dict(engine.retraces)
     res.n_dispatches = engine.n_dispatches
+    if not res.diagnostics.curves:
+        # no device rings ran: the per-lambda aggregates are the curves
+        res.diagnostics.curves.update(kkt=np.asarray(res.kkts),
+                                      epochs=np.asarray(res.n_epochs),
+                                      time_s=np.asarray(res.times))
+        res.diagnostics.n_recorded = len(res.lambdas)
+    if obs is not None:
+        obs.registry.inc("path.count")
     return res
 
 
 def _sequential_path(design, y, penalty, datafit, lambdas, tol, engine,
-                     metric_fn, *, screen=None, w=None, **solve_kw):
+                     metric_fn, *, screen=None, w=None, obs=None, **solve_kw):
     if screen is not None:
         return _screened_path(design, y, penalty, datafit, lambdas, tol,
-                              engine, metric_fn, **solve_kw)
+                              engine, metric_fn, obs=obs, **solve_kw)
+    sp = obs.span if obs is not None else null_span
     beta = None
-    t0 = time.perf_counter()
     betas, kkts, nnzs, eps, outers, times, metrics = [], [], [], [], [], [], []
     for lam in lambdas:
-        res = solve(design, y, datafit, _with_lam(penalty, float(lam)),
-                    tol=tol, beta0=beta, engine=engine, sample_weight=w,
-                    **solve_kw)
+        t_lam = _now()
+        with sp("lambda", lam=float(lam)):
+            res = solve(design, y, datafit, _with_lam(penalty, float(lam)),
+                        tol=tol, beta0=beta, engine=engine, sample_weight=w,
+                        obs=obs, **solve_kw)
         beta = res.beta
         betas.append(np.asarray(beta))
         kkts.append(res.kkt)
         nnzs.append(int(jnp.sum(beta != 0)))
         eps.append(res.n_epochs)
         outers.append(res.n_outer)
-        times.append(time.perf_counter() - t0)
+        times.append(_now() - t_lam)
         if metric_fn is not None:
             metrics.append(metric_fn(lam, beta))
     return PathResult(lambdas=lambdas, betas=np.stack(betas),
@@ -278,7 +348,7 @@ def _sequential_path(design, y, penalty, datafit, lambdas, tol, engine,
 
 
 def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
-                   metric_fn, **solve_kw):
+                   metric_fn, *, obs=None, **solve_kw):
     """Sequential path with the gap-safe pre-filter (opt-in, L1+Quadratic).
 
     Per lambda: certify zeros with the previous solution's duality gap,
@@ -288,12 +358,13 @@ def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
     """
     from .screening import gap_safe_mask_design
 
+    sp = obs.span if obs is not None else null_span
     n, p = design.shape
     beta_full = np.zeros(p)
-    t0 = time.perf_counter()
     betas, kkts, nnzs, eps, outers, times = [], [], [], [], [], []
     metrics, fracs = [], []
     for lam in lambdas:
+        t_lam = _now()
         mask = np.asarray(gap_safe_mask_design(design, y,
                                                jnp.asarray(beta_full),
                                                float(lam)))
@@ -307,9 +378,10 @@ def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
             sub = design.take_columns(idx)
             beta0_sub = np.zeros(width)
             beta0_sub[:len(surv)] = beta_full[surv]
-            res = solve(sub, y, datafit, _with_lam(penalty, float(lam)),
-                        tol=tol, beta0=jnp.asarray(beta0_sub),
-                        engine=engine, **solve_kw)
+            with sp("lambda", lam=float(lam), width=int(width)):
+                res = solve(sub, y, datafit, _with_lam(penalty, float(lam)),
+                            tol=tol, beta0=jnp.asarray(beta0_sub),
+                            engine=engine, obs=obs, **solve_kw)
             beta_full = np.zeros(p)
             beta_full[surv] = np.asarray(res.beta)[:len(surv)]
             kkts.append(res.kkt)
@@ -322,7 +394,7 @@ def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
             outers.append(0)
         betas.append(beta_full.copy())
         nnzs.append(int(np.sum(beta_full != 0)))
-        times.append(time.perf_counter() - t0)
+        times.append(_now() - t_lam)
         if metric_fn is not None:
             metrics.append(metric_fn(lam, beta_full))
     return PathResult(lambdas=lambdas, betas=np.stack(betas),
@@ -334,7 +406,7 @@ def _screened_path(design, y, penalty, datafit, lambdas, tol, engine,
 
 def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
                   metric_fn, *, p0=64, max_outer=50, eps_inner_frac=0.3,
-                  w=None, **solve_kw):
+                  w=None, obs=None, **solve_kw):
     """Chunked vmap sweep with warm-start handoff between chunks."""
     # engine-level kwargs were consumed by make_engine; anything else the
     # sequential driver would honor (use_ws, beta0, ...) must not be
@@ -344,6 +416,8 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
         raise ValueError(
             f"vmap_chunk > 1 does not support solve kwargs "
             f"{sorted(unsupported)}; use the sequential driver (vmap_chunk=1)")
+    sp = obs.span if obs is not None else null_span
+    use_ring = obs is not None and getattr(obs, "rings", True)
     p = design.shape[1]
     policy = BucketPolicy(p0=p0)
     L = design.lipschitz(datafit) if w is None \
@@ -354,9 +428,10 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
     Xb_prev = design.matvec(beta_prev)
     gcount_prev = 0
 
-    t0 = time.perf_counter()
     betas, kkts, n_eps, outers, times = [], [], [], [], []
+    ring_curves, ring_counts = [], []
     for lo in range(0, len(lambdas), chunk):
+        t_chunk = _now()
         lams_c = jnp.asarray(lambdas[lo:lo + chunk], design.dtype)
         C = lams_c.shape[0]
         # all lanes warm-start from the previous chunk's densest solution
@@ -366,32 +441,47 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
         iters_left = max_outer
         chunk_iters = 0
         chunk_eps = np.zeros(C, np.int64)
-        while True:
-            out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0, L,
-                               offset, datafit, penalty, tol, eps_inner_frac,
-                               iters_left, w=w)
-            betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
-            # one host sync per (chunk, bucket) attempt
-            kkts_c, gcounts_c, neps_c, it = jax.device_get(
-                (kkts_d, gcounts_d, neps_d, it_d))
-            iters_left -= int(it)
-            chunk_iters += int(it)
-            chunk_eps += np.asarray(neps_c, np.int64)
-            done = bool(np.all(kkts_c <= tol))
-            if done or bucket >= p or iters_left <= 0:
-                break
-            # a lane outgrew the bucket: escalate and resume from the
-            # partially-converged state
-            bucket = max(policy.escalate(bucket, p),
-                         policy.next_bucket(bucket, int(np.max(gcounts_c)),
-                                            p))
-            betas0, Xbs0 = betas_c, Xbs_c
+        ring = TelemetryRing.alloc(max_outer, design.dtype, lanes=int(C)) \
+            if use_ring else None
+        with sp("lambda_chunk", lo=int(lo), n_lanes=int(C)):
+            while True:
+                out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0,
+                                   L, offset, datafit, penalty, tol,
+                                   eps_inner_frac, iters_left, w=w, obs=ring)
+                if ring is not None:
+                    (betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d,
+                     ring) = out
+                else:
+                    betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
+                # one host sync per (chunk, bucket) attempt
+                kkts_c, gcounts_c, neps_c, it = jax.device_get(
+                    (kkts_d, gcounts_d, neps_d, it_d))
+                iters_left -= int(it)
+                chunk_iters += int(it)
+                chunk_eps += np.asarray(neps_c, np.int64)
+                done = bool(np.all(kkts_c <= tol))
+                if done or bucket >= p or iters_left <= 0:
+                    break
+                # a lane outgrew the bucket: escalate and resume from the
+                # partially-converged state (the ring cursor carries over —
+                # resumed iterations append to the same per-lane curves)
+                bucket = max(policy.escalate(bucket, p),
+                             policy.next_bucket(bucket,
+                                                int(np.max(gcounts_c)), p))
+                betas0, Xbs0 = betas_c, Xbs_c
+        if ring is not None:
+            curves, counts = ring.drain()
+            ring_curves.append(curves)
+            ring_counts.append(counts)
         betas_np = np.asarray(betas_c)
         betas.extend(betas_np)
         kkts.extend(np.asarray(kkts_c).tolist())
         n_eps.extend(chunk_eps.tolist())
         outers.extend([chunk_iters] * C)
-        times.extend([time.perf_counter() - t0] * C)
+        # every lambda of the chunk is stamped with the CHUNK's duration —
+        # the lanes solved simultaneously, so per-lambda attribution below
+        # chunk granularity does not exist
+        times.extend([_now() - t_chunk] * C)
         beta_prev = betas_c[-1]
         Xb_prev = Xbs_c[-1]
         gcount_prev = int(gcounts_c[-1])
@@ -400,10 +490,18 @@ def _chunked_path(design, y, penalty, datafit, lambdas, tol, engine, chunk,
     metrics = []
     if metric_fn is not None:
         metrics = [metric_fn(lam, b) for lam, b in zip(lambdas, betas)]
-    return PathResult(lambdas=lambdas, betas=betas, kkts=np.asarray(kkts),
-                      nnzs=np.asarray([(b != 0).sum() for b in betas]),
-                      n_epochs=np.asarray(n_eps), metrics=metrics,
-                      n_outer=np.asarray(outers), times=np.asarray(times))
+    res = PathResult(lambdas=lambdas, betas=betas, kkts=np.asarray(kkts),
+                     nnzs=np.asarray([(b != 0).sum() for b in betas]),
+                     n_epochs=np.asarray(n_eps), metrics=metrics,
+                     n_outer=np.asarray(outers), times=np.asarray(times))
+    if ring_curves:
+        res.diagnostics.curves.update(
+            {k: np.concatenate([c[k] for c in ring_curves], axis=0)
+             for k in ring_curves[0]})
+        res.diagnostics.n_recorded = np.concatenate(ring_counts)
+        if obs is not None:
+            obs.note_solve(res.diagnostics)
+    return res
 
 
 # --------------------------------------------------------------- grid driver
@@ -435,7 +533,8 @@ class GridResult:
     n_outer : int
         Total vmapped outer iterations driven across the sweep.
     times : np.ndarray
-        Cumulative wall-clock seconds per lambda chunk.
+        Wall-clock seconds PER lambda chunk (each entry is one chunk's own
+        duration; ``np.cumsum`` recovers the sweep-cumulative curve).
     retraces : dict
         The engine's compile counter — the proof behind "one compile per
         working-set bucket across the whole grid".
@@ -443,6 +542,11 @@ class GridResult:
         Fused-step launches / blocking host readbacks of the sweep (the
         contract is at most one of each per outer iteration — chunking
         amortizes far below that).
+    diagnostics : repro.obs.SolveDiagnostics
+        Structured convergence record (DESIGN.md §11): run with
+        ``obs=...``, ``curves`` holds the drained per-lane telemetry rings
+        reshaped to ``[n_folds, n_lambdas, max_outer]`` per field, and the
+        registry mirrors the sweep counters under ``grid.*`` names.
     """
     lambdas: np.ndarray
     betas: np.ndarray                 # [F, n_lambdas, p(, T)]
@@ -459,6 +563,11 @@ class GridResult:
     retraces: dict = field(default_factory=dict)
     n_dispatches: int = 0
     n_host_syncs: int = 0
+    diagnostics: SolveDiagnostics = field(default_factory=SolveDiagnostics)
+
+    def summary(self) -> str:
+        """Render the convergence diagnostics (per-lane rollup)."""
+        return self.diagnostics.summary()
 
 
 @functools.lru_cache(maxsize=32)
@@ -480,12 +589,25 @@ def _heldout_fn(datafit):
         return _heldout_fn_cached.__wrapped__(datafit)
 
 
+def _emit_progress(progress, **ev):
+    """Deliver one grid-progress event: ``progress`` is a callable (gets the
+    event dict) or any other truthy value (one stderr line per event)."""
+    if not progress:
+        return
+    if callable(progress):
+        progress(dict(ev))
+        return
+    print("[cross_val_path] "
+          + " ".join(f"{k}={v}" for k, v in ev.items()), file=sys.stderr)
+
+
 def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
                    n_lambdas=30, lambda_min_ratio=1e-2, cv=5,
                    fold_weights=None, sample_weight=None, seed=0, tol=1e-6,
                    vmap_chunk=10, p0=64, max_outer=50, eps_inner_frac=0.3,
                    engine=None, mesh=None, data_axis="data",
-                   model_axis="model", **engine_kw) -> GridResult:
+                   model_axis="model", obs=None, progress=None,
+                   **engine_kw) -> GridResult:
     """Solve a (fold x lambda) grid simultaneously through the fused step.
 
     Every fold (or bootstrap replicate) is a sample-weight leaf on the SAME
@@ -536,6 +658,19 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
         As in :func:`reg_path`; ``**engine_kw`` is restricted to engine
         config keys (M, max_epochs, accel, use_fp_score, use_gram,
         use_kernels).
+    obs : repro.obs.Obs, optional
+        Observability handle (DESIGN.md §11): grid → lambda_chunk spans on
+        ``obs.tracer`` plus a per-lane telemetry ring through every chunk
+        dispatch — per-outer convergence curves for all (fold, lambda)
+        lanes land on ``GridResult.diagnostics`` as
+        ``[n_folds, n_lambdas, max_outer]`` arrays. Zero extra dispatches.
+    progress : callable or bool, optional
+        Per-(chunk, bucket) progress events: a callable receives dicts like
+        ``{"event": "bucket", "chunk": 1, "n_chunks": 3, "bucket": 64,
+        "lanes_converged": 7, "n_lanes": 15, "lambdas_done": 10,
+        "n_lambdas": 30, "elapsed_s": ..., "eta_s": ...}`` (an ``"event":
+        "chunk"`` dict follows each chunk retirement); any other truthy
+        value prints one stderr line per event.
 
     Returns
     -------
@@ -636,55 +771,94 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
     eps_out = np.zeros((F, nlam), np.int64)
     loss_out = np.zeros((F, nlam))
     dispatches0, total_outer, n_syncs, times = engine.n_dispatches, 0, 0, []
-    t0 = time.perf_counter()
+    sp = obs.span if obs is not None else null_span
+    use_ring = obs is not None and getattr(obs, "rings", True)
+    ring_curves, ring_counts = [], []
+    n_chunks = -(-nlam // chunk)
+    t0 = _now()
     rep = lambda a: jnp.repeat(a, chunk, axis=0)      # fold -> lane axis
     # loop-invariant lane expansions: the fold weights and per-fold L are
     # the same [F * chunk, ...] tensors for every lambda chunk
     w_lanes, L_lanes = rep(Wd), rep(L_folds)
 
-    for lo in range(0, nlam, chunk):
-        blk = lambdas[lo:lo + chunk]
-        C_real = len(blk)
-        # pad short tails by repeating the smallest lambda: every dispatch
-        # keeps the SAME lane count, so one compiled step per bucket serves
-        # the whole grid (padded lanes are discarded below)
-        blk = np.concatenate([blk, np.full(chunk - C_real, blk[-1])])
-        lams_c = jnp.asarray(np.tile(blk, F), design.dtype)     # [F * chunk]
-        betas0, Xbs0 = rep(betas_prev), rep(Xbs_prev)
-        bucket = policy.first_bucket(gcount_prev, p)
-        iters_left = max_outer
-        chunk_eps = np.zeros(F * chunk, np.int64)
-        while True:
-            out = engine.chunk(bucket, design, y, lams_c, betas0, Xbs0,
-                               L_lanes, offset, datafit, penalty, tol,
-                               eps_inner_frac, iters_left, w=w_lanes)
-            betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d = out
-            # one blocking host sync per (chunk, bucket) attempt
-            kkts_c, gcounts_c, neps_c, it = jax.device_get(
-                (kkts_d, gcounts_d, neps_d, it_d))
-            n_syncs += 1
-            iters_left -= int(it)
-            total_outer += int(it)
-            chunk_eps += np.asarray(neps_c, np.int64)
-            if bool(np.all(kkts_c <= tol)) or bucket >= p or iters_left <= 0:
-                break
-            bucket = max(policy.escalate(bucket, p),
-                         policy.next_bucket(bucket, int(np.max(gcounts_c)),
-                                            p))
-            betas0, Xbs0 = betas_c, Xbs_c
-        betas_f = betas_c.reshape((F, chunk) + bshape)
-        Xbs_f = Xbs_c.reshape((F, chunk) + xshape)
-        loss_f = heldout(Xbs_f, y, Hd)                # device-side reduction
-        betas_out[:, lo:lo + C_real] = np.asarray(betas_f[:, :C_real])
-        kkts_out[:, lo:lo + C_real] = \
-            np.asarray(kkts_c).reshape(F, chunk)[:, :C_real]
-        eps_out[:, lo:lo + C_real] = \
-            chunk_eps.reshape(F, chunk)[:, :C_real]
-        loss_out[:, lo:lo + C_real] = np.asarray(loss_f)[:, :C_real]
-        betas_prev = betas_f[:, C_real - 1]
-        Xbs_prev = Xbs_f[:, C_real - 1]
-        gcount_prev = int(np.max(gcounts_c))
-        times.append(time.perf_counter() - t0)
+    with sp("grid", folds=F, n_lambdas=nlam, chunk=chunk):
+        for lo in range(0, nlam, chunk):
+            t_chunk = _now()
+            blk = lambdas[lo:lo + chunk]
+            C_real = len(blk)
+            # pad short tails by repeating the smallest lambda: every
+            # dispatch keeps the SAME lane count, so one compiled step per
+            # bucket serves the whole grid (padded lanes discarded below)
+            blk = np.concatenate([blk, np.full(chunk - C_real, blk[-1])])
+            lams_c = jnp.asarray(np.tile(blk, F), design.dtype)  # [F*chunk]
+            betas0, Xbs0 = rep(betas_prev), rep(Xbs_prev)
+            bucket = policy.first_bucket(gcount_prev, p)
+            iters_left = max_outer
+            chunk_eps = np.zeros(F * chunk, np.int64)
+            ring = TelemetryRing.alloc(max_outer, design.dtype,
+                                       lanes=F * chunk) if use_ring else None
+            with sp("lambda_chunk", lo=int(lo), n_lanes=F * chunk):
+                while True:
+                    out = engine.chunk(bucket, design, y, lams_c, betas0,
+                                       Xbs0, L_lanes, offset, datafit,
+                                       penalty, tol, eps_inner_frac,
+                                       iters_left, w=w_lanes, obs=ring)
+                    if ring is not None:
+                        (betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d,
+                         ring) = out
+                    else:
+                        (betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d,
+                         it_d) = out
+                    # one blocking host sync per (chunk, bucket) attempt
+                    kkts_c, gcounts_c, neps_c, it = jax.device_get(
+                        (kkts_d, gcounts_d, neps_d, it_d))
+                    n_syncs += 1
+                    iters_left -= int(it)
+                    total_outer += int(it)
+                    chunk_eps += np.asarray(neps_c, np.int64)
+                    done = bool(np.all(kkts_c <= tol))
+                    _emit_progress(
+                        progress, event="bucket", chunk=lo // chunk,
+                        n_chunks=n_chunks, bucket=bucket,
+                        lanes_converged=int(np.sum(kkts_c <= tol)),
+                        n_lanes=F * chunk, lambdas_done=lo,
+                        n_lambdas=nlam, elapsed_s=_now() - t0)
+                    if done or bucket >= p or iters_left <= 0:
+                        break
+                    bucket = max(policy.escalate(bucket, p),
+                                 policy.next_bucket(
+                                     bucket, int(np.max(gcounts_c)), p))
+                    betas0, Xbs0 = betas_c, Xbs_c
+            if ring is not None:
+                curves, counts = ring.drain()
+                # [F * chunk, cap] lanes -> [F, chunk, cap], drop padding
+                ring_curves.append(
+                    {k: v.reshape(F, chunk, -1)[:, :C_real]
+                     for k, v in curves.items()})
+                ring_counts.append(
+                    np.asarray(counts).reshape(F, chunk)[:, :C_real])
+            betas_f = betas_c.reshape((F, chunk) + bshape)
+            Xbs_f = Xbs_c.reshape((F, chunk) + xshape)
+            loss_f = heldout(Xbs_f, y, Hd)            # device-side reduction
+            betas_out[:, lo:lo + C_real] = np.asarray(betas_f[:, :C_real])
+            kkts_out[:, lo:lo + C_real] = \
+                np.asarray(kkts_c).reshape(F, chunk)[:, :C_real]
+            eps_out[:, lo:lo + C_real] = \
+                chunk_eps.reshape(F, chunk)[:, :C_real]
+            loss_out[:, lo:lo + C_real] = np.asarray(loss_f)[:, :C_real]
+            betas_prev = betas_f[:, C_real - 1]
+            Xbs_prev = Xbs_f[:, C_real - 1]
+            gcount_prev = int(np.max(gcounts_c))
+            times.append(_now() - t_chunk)
+            lambdas_done = lo + C_real
+            elapsed = _now() - t0
+            _emit_progress(
+                progress, event="chunk", chunk=lo // chunk,
+                n_chunks=n_chunks, bucket=bucket,
+                lanes_converged=int(np.sum(kkts_c <= tol)),
+                n_lanes=F * chunk, lambdas_done=lambdas_done,
+                n_lambdas=nlam, elapsed_s=elapsed,
+                eta_s=elapsed / lambdas_done * (nlam - lambdas_done))
 
     loss_out[~valid_fold] = np.nan
     cv_mean = np.mean(loss_out[valid_fold], axis=0) if valid_fold.any() \
@@ -692,13 +866,28 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
     cv_std = np.std(loss_out[valid_fold], axis=0) if valid_fold.any() \
         else np.full(nlam, np.nan)
     best = int(np.argmin(cv_mean)) if np.isfinite(cv_mean).any() else 0
-    return GridResult(lambdas=lambdas, betas=betas_out, cv_loss=loss_out,
+    grid = GridResult(lambdas=lambdas, betas=betas_out, cv_loss=loss_out,
                       cv_mean=cv_mean, cv_std=cv_std, best_index=best,
                       best_lambda=float(lambdas[best]), kkts=kkts_out,
                       n_epochs=eps_out, fold_weights=W, n_outer=total_outer,
-                      times=np.asarray(times), retraces=dict(engine.retraces),
+                      times=np.asarray(times),
+                      retraces=dict(engine.retraces),
                       n_dispatches=engine.n_dispatches - dispatches0,
                       n_host_syncs=n_syncs)
+    reg = grid.diagnostics.registry
+    reg.set_counter("grid.n_host_syncs", n_syncs)
+    reg.set_counter("grid.n_dispatches", grid.n_dispatches)
+    reg.set_counter("grid.n_outer", total_outer)
+    reg.set_mapping("grid.retraces", dict(engine.retraces))
+    if ring_curves:
+        grid.diagnostics.curves.update(
+            {k: np.concatenate([c[k] for c in ring_curves], axis=1)
+             for k in ring_curves[0]})
+        grid.diagnostics.n_recorded = np.concatenate(ring_counts, axis=1)
+    if obs is not None:
+        obs.registry.inc("grid.count")
+        obs.note_solve(grid.diagnostics)
+    return grid
 
 
 def support_metrics(beta, beta_true, X=None, y=None):

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro.obs import SolveDiagnostics, TelemetryRing, null_span
+
 from .engine import EngineConfig, SolveEngine, as_design, get_engine
 from .working_set import BucketPolicy
 
@@ -85,9 +87,18 @@ class SolveResult:
     kkt_history, ws_history, obj_history, time_history : list
         Per-outer-iteration telemetry (violation, bucket size, objective,
         cumulative seconds).
+    diagnostics : repro.obs.SolveDiagnostics
+        Structured convergence record (DESIGN.md §11): ``curves`` holds the
+        per-outer kkt/obj/time arrays (plus gap/ws_size/epochs/accepts/
+        occupancy when a telemetry ring ran, i.e. ``solve(..., obs=...)``),
+        ``registry`` the per-solve counters, and ``summary()`` renders the
+        convergence table.
     n_host_syncs : int
         Blocking device-to-host readbacks (the engine contract is one per
-        outer iteration, plus one probe for warm starts).
+        outer iteration, plus one probe for warm starts, plus one ring
+        drain when telemetry is on). A property view into the
+        ``"solve.n_host_syncs"`` counter of ``diagnostics.registry``;
+        reads and ``+=`` writes work exactly as the pre-§11 plain field.
     """
     beta: jax.Array
     kkt: float                       # final max optimality violation
@@ -98,7 +109,17 @@ class SolveResult:
     ws_history: list = field(default_factory=list)
     obj_history: list = field(default_factory=list)
     time_history: list = field(default_factory=list)
-    n_host_syncs: int = 0            # blocking device->host readbacks
+    diagnostics: SolveDiagnostics = field(default_factory=SolveDiagnostics)
+
+    @property
+    def n_host_syncs(self) -> int:
+        """Blocking device->host readbacks (view into the registry)."""
+        return self.diagnostics.registry.counter("solve.n_host_syncs")
+
+    @n_host_syncs.setter
+    def n_host_syncs(self, value: int):
+        self.diagnostics.registry.set_counter("solve.n_host_syncs",
+                                              int(value))
 
 
 def make_engine(penalty, datafit, *, M=5, max_epochs=1000, accel=True,
@@ -128,7 +149,7 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           M=5, p0=64, use_gram="auto", use_fp_score=None, eps_inner_frac=0.3,
           beta0=None, n_tasks=None, accel=True, use_ws=True,
           use_kernels=False, mesh=None, data_axis="data", model_axis="model",
-          engine=None, bucket_policy=None, sample_weight=None):
+          engine=None, bucket_policy=None, sample_weight=None, obs=None):
     """Solve Problem (1): ``argmin_beta F(X beta) + sum_j g_j(beta_j)``.
 
     The thin host driver over the device-resident fused engine: one jitted
@@ -203,6 +224,15 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         bit-identical unweighted program. Weighted solves require a datafit
         with ``SUPPORTS_WEIGHTS`` and run on every backend (the Pallas
         kernels fold w into the in-kernel raw gradient).
+    obs : repro.obs.Obs, optional
+        Observability handle (DESIGN.md §11). When given, the solve carries
+        a device telemetry ring through the fused step — per-outer
+        kkt/gap/objective/ws curves land on ``result.diagnostics`` — and
+        opens nested tracer spans (solve → outer → dispatch/sync) on
+        ``obs.tracer``. Zero extra dispatches; one extra blocking readback
+        at drain time. ``obs=None`` (the default) statically elides every
+        telemetry op: the compiled program is bit-identical to the pre-obs
+        one (same mechanism as the ``w=None`` weight leaf).
 
     Returns
     -------
@@ -259,45 +289,85 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
 
     res = SolveResult(beta=beta, kkt=float("inf"), converged=False,
                       n_outer=0, n_epochs=0)
+    sp = obs.span if obs is not None else null_span
+    ring = None
+    if obs is not None and getattr(obs, "rings", True):
+        ring = TelemetryRing.alloc(max_outer, design.dtype)
     t0 = time.perf_counter()
 
-    # first-bucket sizing: cold starts have empty generalized support; warm
-    # starts probe it once (one launch + one sync per solve, not per iter)
-    if beta0 is None:
-        gcount = 0
-    else:
-        _, g0, _ = engine.probe(design, y, beta, Xb, L, offset, datafit,
-                                penalty, w=w)
-        gcount = int(g0)
-        res.n_host_syncs += 1
-    bucket = policy.first_bucket(gcount, p)
+    with sp("solve", n=n_rows, p=p, tol=tol,
+            backend=engine.config.backend):
+        # first-bucket sizing: cold starts have empty generalized support;
+        # warm starts probe it once (one launch + one sync per solve, not
+        # per iter)
+        if beta0 is None:
+            gcount = 0
+        else:
+            with sp("probe"):
+                _, g0, _ = engine.probe(design, y, beta, Xb, L, offset,
+                                        datafit, penalty, w=w)
+                gcount = int(g0)
+            res.n_host_syncs += 1
+        bucket = policy.first_bucket(gcount, p)
 
-    for t in range(max_outer):
-        beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d = engine.step(
-            bucket, design, y, beta, Xb, L, offset, datafit, penalty, tol,
-            eps_inner_frac, w=w)
-        # the single blocking host sync of this outer iteration
-        kkt, obj, gcount, n_ep, cov = jax.device_get(
-            (kkt_d, obj_d, gcount_d, nep_d, cov_d))
-        res.n_host_syncs += 1
-        if not bool(cov):
-            raise RuntimeError(
-                "working-set selection dropped generalized-support "
-                "coordinates (bucket too small for |gsupp| — bucket-policy "
-                "invariant violated)")
-        kkt = float(kkt)
-        res.kkt_history.append(kkt)
-        res.obj_history.append(float(obj))
-        res.time_history.append(time.perf_counter() - t0)
-        if kkt <= tol:
-            res.converged = True
-            res.n_outer = t
-            break
-        res.ws_history.append(bucket)
-        res.n_epochs += int(n_ep)
-        res.n_outer = t + 1
-        bucket = policy.next_bucket(bucket, int(gcount), p)
+        for t in range(max_outer):
+            with sp("outer", it=t, bucket=bucket) as ev:
+                r0 = sum(engine.retraces.values()) if obs is not None else 0
+                with sp("dispatch", bucket=bucket):
+                    out = engine.step(
+                        bucket, design, y, beta, Xb, L, offset, datafit,
+                        penalty, tol, eps_inner_frac, w=w, obs=ring)
+                if ring is not None:
+                    (beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d,
+                     ring) = out
+                else:
+                    beta, Xb, kkt_d, obj_d, gcount_d, nep_d, cov_d = out
+                # the single blocking host sync of this outer iteration
+                with sp("sync"):
+                    kkt, obj, gcount, n_ep, cov = jax.device_get(
+                        (kkt_d, obj_d, gcount_d, nep_d, cov_d))
+                if ev is not None:
+                    ev["args"]["compiled"] = \
+                        sum(engine.retraces.values()) > r0
+            res.n_host_syncs += 1
+            if not bool(cov):
+                raise RuntimeError(
+                    "working-set selection dropped generalized-support "
+                    "coordinates (bucket too small for |gsupp| — "
+                    "bucket-policy invariant violated)")
+            kkt = float(kkt)
+            res.kkt_history.append(kkt)
+            res.obj_history.append(float(obj))
+            res.time_history.append(time.perf_counter() - t0)
+            if kkt <= tol:
+                res.converged = True
+                res.n_outer = t
+                break
+            res.ws_history.append(bucket)
+            res.n_epochs += int(n_ep)
+            res.n_outer = t + 1
+            bucket = policy.next_bucket(bucket, int(gcount), p)
 
-    res.beta = beta
-    res.kkt = res.kkt_history[-1] if res.kkt_history else float("inf")
+        res.beta = beta
+        res.kkt = res.kkt_history[-1] if res.kkt_history else float("inf")
+        if ring is not None:
+            # one extra (and final) blocking readback of the whole solve
+            with sp("drain"):
+                curves, n_rec = ring.drain()
+            res.n_host_syncs += 1
+            res.diagnostics.curves.update(curves)
+            res.diagnostics.n_recorded = n_rec
+        else:
+            res.diagnostics.curves.update(
+                kkt=np.asarray(res.kkt_history),
+                obj=np.asarray(res.obj_history),
+                ws_size=np.asarray(res.ws_history, dtype=np.int64))
+            res.diagnostics.n_recorded = len(res.kkt_history)
+        res.diagnostics.curves["time_s"] = np.asarray(res.time_history)
+        reg = res.diagnostics.registry
+        reg.set_counter("solve.n_outer", res.n_outer)
+        reg.set_counter("solve.n_epochs", res.n_epochs)
+    if obs is not None:
+        obs.registry.inc("solve.count")
+        obs.note_solve(res.diagnostics)
     return res

@@ -172,6 +172,20 @@ def scatter_ws(vec_loc, mine, loc_idx, vals):
     return vec_loc.at[idx].set(vals, mode="drop")
 
 
+def ws_occupancy(beta_ws):
+    """Fraction of the gathered working-set slots holding a nonzero (block)
+    coefficient after the inner solve — the bucket-utilization diagnostic
+    the telemetry ring records per outer iteration (repro.obs, DESIGN.md
+    §11.1): occupancy near 1.0 means the bucket is saturated and escalation
+    is imminent; near 0.0 the bucket over-provisions. Multitask blocks
+    ``[K, T]`` count a slot occupied when any task coefficient is nonzero.
+    Traced; mesh-safe without collectives (beta_ws is replicated)."""
+    nz = jnp.any(beta_ws != 0, axis=-1) if beta_ws.ndim == 2 \
+        else (beta_ws != 0)
+    return jnp.mean(nz.astype(beta_ws.dtype if beta_ws.dtype.kind == "f"
+                              else jnp.float64))
+
+
 def candidate_columns(cand_idx, cand_cols, ws, p: int):
     """Recover ``X[:, ws]`` ([n, K]) from the fused kernel's candidate buffer.
 

@@ -183,6 +183,18 @@ def weight_spec(data_axis="data", n_lanes: int = 0) -> P:
     return P(None, data_axis) if n_lanes else P(data_axis)
 
 
+def ring_spec() -> P:
+    """Spec of every telemetry-ring leaf under the mesh (repro.obs.rings,
+    DESIGN.md §11.1): fully replicated. Everything the fused step records —
+    kkt/gap/objective scalars, epoch counts — is already reduced across the
+    mesh (pmax over the model axis, psum over the data axis) before the
+    ring write, so the ``[max_outer]`` (or ``[lanes, max_outer]``) buffers
+    carry identical replicas on every device and ``P()`` is exact, not a
+    fallback. Used as the shard_map pytree-prefix spec for the whole ring
+    (``obs=None`` contributes no leaves, like the ``w=None`` weight leaf)."""
+    return P()
+
+
 def sparse_design_spec(model_axis="model"):
     """Leading-axis spec of the stacked per-shard CSC design leaves
     (ShardedCSCDesign, DESIGN.md §7): every leaf is [n_shards, ...] and

@@ -1,0 +1,122 @@
+"""repro.obs — the solver observability layer (DESIGN.md §11).
+
+Three parts, threaded through the whole solve stack:
+
+  * device-side telemetry rings (:mod:`repro.obs.rings`): preallocated
+    ``[max_outer]`` pytree buffers recording per-outer KKT/gap/working-set
+    curves INSIDE the fused dispatch, drained once per solve;
+  * a span tracer (:mod:`repro.obs.trace`) with Chrome-trace/Perfetto JSON
+    export plus a central :class:`MetricsRegistry`
+    (:mod:`repro.obs.registry`) that the legacy ad-hoc counters are views
+    into;
+  * result surfaces: ``SolveResult.diagnostics`` et al.
+    (:mod:`repro.obs.diagnostics`), the ``cross_val_path`` progress
+    callback, and the ``python -m repro.obs.report`` CLI.
+
+Quickstart::
+
+    from repro.core import solve, Quadratic, L1
+    from repro.obs import Obs
+
+    obs = Obs()
+    res = solve(X, y, Quadratic(), L1(lam), obs=obs)
+    print(res.diagnostics.summary())      # per-outer kkt/gap/ws curves
+    obs.export_chrome("trace.json")       # open in ui.perfetto.dev
+    obs.dump("run.json")                  # python -m repro.obs.report run.json
+
+Everything is opt-in: ``obs=None`` (the default) statically elides every
+device-side op — the trace is bit-identical to the pre-obs program and adds
+zero dispatches (asserted by tests/test_obs.py and the CI-enforced
+``telemetry_overhead`` budget in BENCH_engine.json).
+"""
+from __future__ import annotations
+
+import json
+from contextlib import nullcontext
+
+import numpy as np
+
+from .diagnostics import Diagnostics, SolveDiagnostics
+from .registry import MetricsRegistry
+from .rings import TelemetryRing, lasso_duality_gap
+from .trace import Tracer
+
+__all__ = ["Obs", "Tracer", "MetricsRegistry", "TelemetryRing",
+           "Diagnostics", "SolveDiagnostics", "lasso_duality_gap",
+           "null_span"]
+
+
+def null_span(name, **args):
+    """The span used when no Obs is attached: a reusable nullcontext
+    (yields None, so span-arg attachment sites guard on ``ev is not
+    None``)."""
+    del name, args
+    return nullcontext()
+
+
+class Obs:
+    """User-facing observability handle passed to ``solve``/``reg_path``/
+    ``cross_val_path`` (and through the estimators' ``**solve_kw``).
+
+    Parameters
+    ----------
+    rings : bool, optional
+        Carry a device telemetry ring through the fused step (per-outer
+        kkt/gap/ws curves on the result's ``diagnostics``; one extra host
+        readback per solve at drain time, zero extra dispatches).
+    trace : bool, optional
+        Collect host-side spans (solve → outer → dispatch/sync, path →
+        lambda, grid → chunk/bucket) on :attr:`tracer`.
+    annotate : bool, optional
+        Additionally enter a ``jax.profiler.TraceAnnotation`` per span so
+        the names land inside XLA profiler captures.
+    """
+
+    def __init__(self, rings: bool = True, trace: bool = True,
+                 annotate: bool = False):
+        self.rings = rings
+        self.trace = trace
+        self.tracer = Tracer(annotate=annotate)
+        self.registry = MetricsRegistry()
+        self.solves: list = []          # Diagnostics of every solve seen
+
+    def span(self, name, **args):
+        """Open a tracer span (a no-op context when ``trace=False``)."""
+        if not self.trace:
+            return nullcontext()
+        return self.tracer.span(name, **args)
+
+    def note_solve(self, diagnostics: Diagnostics):
+        """Called by the solver at drain time; keeps the run's curve sets
+        for :meth:`run_report`."""
+        self.solves.append(diagnostics)
+
+    def chrome_trace(self) -> dict:
+        """The Chrome trace-event JSON object for the spans so far."""
+        return self.tracer.chrome_trace()
+
+    def export_chrome(self, path: str) -> str:
+        """Write the Chrome/Perfetto trace JSON to ``path``."""
+        return self.tracer.export_chrome(path)
+
+    def run_report(self) -> dict:
+        """JSON-serializable report of this run: the metrics registry, the
+        per-span-name wall-time rollup, and every solve's curve set."""
+        def _curves(d):
+            return {k: np.asarray(v, np.float64).tolist()
+                    for k, v in d.curves.items()}
+        return {
+            "registry": self.registry.as_dict(),
+            "spans": self.tracer.summary(),
+            "n_solves": len(self.solves),
+            "solves": [{"curves": _curves(d),
+                        "registry": d.registry.as_dict()}
+                       for d in self.solves[:64]],
+        }
+
+    def dump(self, path: str) -> str:
+        """Write :meth:`run_report` as JSON to ``path``; renderable with
+        ``python -m repro.obs.report path``."""
+        with open(path, "w") as f:
+            json.dump(self.run_report(), f, indent=1)
+        return path

@@ -1,0 +1,98 @@
+"""Structured convergence diagnostics attached to solver results.
+
+``SolveResult.diagnostics`` / ``PathResult.diagnostics`` /
+``GridResult.diagnostics`` are all a :class:`Diagnostics`: named
+convergence curves (np arrays keyed by ring field — ``kkt``, ``gap``,
+``obj``, ``ws_size``, ``occupancy``, ``gsupp``, ``epochs``, ``accepts``,
+plus the host-side ``time_s``) and a per-result
+:class:`~repro.obs.registry.MetricsRegistry` that the legacy counter
+attributes (``SolveResult.n_host_syncs``, ``PathResult.retraces`` /
+``n_dispatches``) are property views into.
+
+Curves are per-outer ``[n]`` vectors for one solve, ``[n_lambdas, cap]``
+for a path sweep, and ``[n_folds, n_lambdas, cap]`` for a CV grid; slots a
+lane never reached hold NaN (float) / -1 (int). ``summary()`` renders a
+terminal table for the 1-D case and a per-lane rollup otherwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .registry import MetricsRegistry
+
+__all__ = ["Diagnostics", "SolveDiagnostics"]
+
+
+def _fmt(v) -> str:
+    if isinstance(v, (int, np.integer)):
+        return str(int(v))
+    if v is None or (isinstance(v, float) and not np.isfinite(v)):
+        return "-"
+    return f"{float(v):.3e}"
+
+
+@dataclass
+class Diagnostics:
+    """Convergence curves + metrics registry of one solve/path/grid run.
+
+    Attributes
+    ----------
+    curves : dict
+        Field name -> np array (see module doc for shapes). Populated from
+        the device telemetry ring when the run carried an
+        :class:`repro.obs.Obs`, and from the host-side histories otherwise
+        (so the ``kkt``/``obj``/``ws_size``/``time_s`` curves exist on
+        every solve; ``gap``/``epochs``/``accepts``/``occupancy`` need the
+        ring).
+    registry : MetricsRegistry
+        Per-run named counters (``solve.n_host_syncs`` etc.) — the backing
+        store of the legacy result attributes.
+    n_recorded : int or np.ndarray
+        Recorded-entry count (per lane for path/grid rings).
+    """
+    curves: dict = field(default_factory=dict)
+    registry: MetricsRegistry = field(default_factory=MetricsRegistry)
+    n_recorded: object = 0
+
+    def summary(self) -> str:
+        """Pretty-print the convergence curves (terminal table)."""
+        if not self.curves:
+            return "Diagnostics: no curves recorded"
+        some = next(iter(self.curves.values()))
+        lines = []
+        if np.ndim(some) <= 1:
+            cols = [c for c in ("kkt", "gap", "obj", "ws_size", "gsupp",
+                                "epochs", "accepts", "occupancy", "time_s")
+                    if c in self.curves]
+            n = max((len(np.atleast_1d(self.curves[c])) for c in cols),
+                    default=0)
+            lines.append("outer  " + "  ".join(f"{c:>9}" for c in cols))
+            for t in range(n):
+                row = []
+                for c in cols:
+                    v = np.atleast_1d(self.curves[c])
+                    row.append(f"{_fmt(v[t]) if t < len(v) else '-':>9}")
+                lines.append(f"{t:<5}  " + "  ".join(row))
+        else:
+            kkt = np.asarray(self.curves.get("kkt", some), float)
+            lanes = kkt.reshape(-1, kkt.shape[-1])
+            rec = np.sum(np.isfinite(lanes), axis=-1)
+            finals = np.array([lane[r - 1] if r > 0 else np.nan
+                               for lane, r in zip(lanes, rec)])
+            lines.append(f"{lanes.shape[0]} lanes x {lanes.shape[1]} outer "
+                         f"slots (shape {kkt.shape})")
+            lines.append(f"outers recorded: min={int(rec.min())} "
+                         f"median={int(np.median(rec))} max={int(rec.max())}")
+            ok = np.isfinite(finals)
+            if ok.any():
+                lines.append(f"final kkt: max={_fmt(np.max(finals[ok]))} "
+                             f"median={_fmt(np.median(finals[ok]))}")
+        for name in self.registry.names():
+            lines.append(f"{name}: {self.registry.get(name)}")
+        return "\n".join(lines)
+
+
+# alias kept for call sites that read better with the result type spelled out
+SolveDiagnostics = Diagnostics

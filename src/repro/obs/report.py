@@ -1,0 +1,162 @@
+"""``python -m repro.obs.report`` — render an observability run report.
+
+Modes::
+
+    python -m repro.obs.report RUN.json [--bench BENCH_engine.json]
+        [--merge-out MERGED.json]
+    python -m repro.obs.report --smoke [--trace-out trace.json]
+        [--run-out run.json] [--bench ...] [--merge-out ...]
+
+The first renders a ``run.json`` written by :meth:`repro.obs.Obs.dump`;
+``--bench`` places the run next to the repo's benchmark budgets and
+``--merge-out`` writes the bench report with the run attached under an
+``"obs_report"`` key (the artifact the CI ``obs`` job uploads). ``--smoke``
+first GENERATES the run — a tiny sequential ``reg_path`` (so the trace
+holds nested solve/outer/lambda spans) followed by a small
+``cross_val_path`` grid with a progress callback — then renders it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+__all__ = ["main", "render", "smoke_run"]
+
+
+def smoke_run(trace_out=None, run_out=None, seed=0):
+    """Run the smoke workload under one Obs handle; returns the Obs.
+
+    Deliberately tiny (n=64, p=256, 4 lambdas, 3 folds) — the point is a
+    populated trace/registry, not a benchmark.
+    """
+    import numpy as np
+    from repro.core import (L1, Quadratic, cross_val_path, lambda_max,
+                            reg_path, solve)
+    from repro.obs import Obs
+
+    rng = np.random.default_rng(seed)
+    n, p = 64, 256
+    X = rng.standard_normal((n, p))
+    beta_true = np.zeros(p)
+    beta_true[:8] = rng.standard_normal(8)
+    y = X @ beta_true + 0.05 * rng.standard_normal(n)
+    lmax = float(lambda_max(X, y, Quadratic()))
+
+    # tol reachable in float32 (the CLI may run without x64): the smoke
+    # point is populated spans/rings, not tight convergence
+    obs = Obs()
+    solve(X, y, Quadratic(), L1(0.1 * lmax), tol=1e-6, obs=obs)
+    reg_path(X, y, L1(1.0), lambdas=lmax * np.geomspace(1, 0.05, 4),
+             tol=1e-6, obs=obs)
+    cross_val_path(X, y, Quadratic(), L1(1.0),
+                   lambdas=lmax * np.geomspace(1, 0.05, 4), cv=3,
+                   vmap_chunk=2, tol=1e-6, obs=obs,
+                   progress=lambda ev: None)
+    if trace_out:
+        obs.export_chrome(trace_out)
+    if run_out:
+        obs.dump(run_out)
+    return obs
+
+
+def render(run: dict, bench: dict = None) -> str:
+    """Human-readable text report of a run dict (+ optional bench report)."""
+    lines = ["== repro.obs run report =="]
+    reg = run.get("registry", {})
+    for kind in ("counters", "gauges"):
+        for k in sorted(reg.get(kind, {})):
+            lines.append(f"  {k}: {reg[kind][k]}")
+    for name, m in sorted(reg.get("mappings", {}).items()):
+        lines.append(f"  {name}: {m}")
+    spans = run.get("spans", {})
+    if spans:
+        lines.append("-- spans (wall-time rollup) --")
+        width = max(len(s) for s in spans)
+        for name, rec in sorted(spans.items(),
+                                key=lambda kv: -kv[1]["total_s"]):
+            lines.append(f"  {name:<{width}}  x{rec['count']:<5} "
+                         f"{rec['total_s'] * 1e3:9.2f} ms")
+    lines.append(f"-- solves: {run.get('n_solves', 0)} --")
+    for i, s in enumerate(run.get("solves", [])[:8]):
+        kkt = np.asarray(s.get("curves", {}).get("kkt", []), dtype=float)
+        if kkt.ndim <= 1:                       # single solve: one curve
+            final = float(kkt[-1]) if kkt.size else None
+            desc = (f"{kkt.size} outer, final kkt="
+                    f"{final if final is None else f'{final:.3e}'}")
+        else:                 # path/grid rings: [lanes..., cap] NaN-padded
+            finite = kkt[np.isfinite(kkt)]
+            worst = float(np.max(
+                [row[np.isfinite(row)][-1]
+                 for row in kkt.reshape(-1, kkt.shape[-1])
+                 if np.isfinite(row).any()] or [float("nan")]))
+            desc = (f"curves {'x'.join(map(str, kkt.shape))}, "
+                    f"{finite.size} recorded, worst final kkt={worst:.3e}")
+        lines.append(f"  solve[{i}]: {desc}")
+    if bench is not None:
+        lines.append("-- BENCH_engine.json context --")
+        to = bench.get("telemetry_overhead")
+        if to:
+            lines.append(f"  telemetry_overhead: "
+                         f"+{to.get('overhead_frac', 0) * 100:.2f}% wall, "
+                         f"+{to.get('extra_dispatches', 0)} dispatches")
+        for section in ("engine_after", "mesh_2x4"):
+            for key, rec in sorted(bench.get(section, {}).items()):
+                if isinstance(rec, dict) \
+                        and "jit_dispatches_per_outer" in rec:
+                    lines.append(
+                        f"  {section}/{key}: dispatches/outer="
+                        f"{rec['jit_dispatches_per_outer']:.3f}, "
+                        f"syncs/outer={rec['host_syncs_per_outer']:.3f}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    """CLI entry point (``python -m repro.obs.report``)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("run", nargs="?", help="run.json from Obs.dump()")
+    ap.add_argument("--smoke", action="store_true",
+                    help="generate the run from a smoke solve+path+grid")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome-trace JSON here (--smoke)")
+    ap.add_argument("--run-out", default=None,
+                    help="write the run JSON here (--smoke)")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_engine.json to merge context from")
+    ap.add_argument("--merge-out", default=None,
+                    help="write bench report with the run under 'obs_report'")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        obs = smoke_run(trace_out=args.trace_out, run_out=args.run_out)
+        run = obs.run_report()
+    elif args.run:
+        with open(args.run) as f:
+            run = json.load(f)
+    else:
+        ap.error("need a RUN.json or --smoke")
+
+    bench = None
+    if args.bench:
+        try:
+            with open(args.bench) as f:
+                bench = json.load(f)
+        except FileNotFoundError:
+            print(f"[report] bench file {args.bench} not found; "
+                  f"rendering run alone", file=sys.stderr)
+    print(render(run, bench))
+    if args.merge_out:
+        merged = dict(bench or {})
+        merged["obs_report"] = run
+        with open(args.merge_out, "w") as f:
+            json.dump(merged, f, indent=1)
+        print(f"[report] merged report -> {args.merge_out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

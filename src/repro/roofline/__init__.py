@@ -1,10 +1,10 @@
 """Roofline accounting: HLO collective parsing plus per-stage byte/FLOP
 attribution for the solver engine's outer step (``engine_stages``)."""
 from .engine_stages import (fused_bytes_model, fused_bytes_ratio,
-                            measure_stage_costs, stage_table,
-                            two_pass_bytes_model)
+                            measure_stage_costs, register_stage_table,
+                            stage_table, two_pass_bytes_model)
 from .hlo import collective_bytes, parse_collectives
 
 __all__ = ["collective_bytes", "parse_collectives", "stage_table",
            "measure_stage_costs", "fused_bytes_model", "two_pass_bytes_model",
-           "fused_bytes_ratio"]
+           "fused_bytes_ratio", "register_stage_table"]

@@ -212,6 +212,28 @@ def stage_table(n: int, p: int, ws: int, dtype=jnp.float64,
     return table
 
 
+def register_stage_table(registry, name: str, table) -> None:
+    """Publish a :func:`stage_table` record as named metrics-registry gauges.
+
+    The roofline numbers become ``roofline.<name>.<stage>.<metric>`` gauges
+    (flops / bytes_hlo / bytes_model / coll_bytes per stage) plus the
+    headline ``roofline.<name>.fused_bytes_per_outer`` /
+    ``two_pass_bytes_per_outer`` / ``fused_ratio`` — the same registry
+    namespace the solver counters live in (DESIGN.md §11.3), so one
+    ``MetricsRegistry.as_dict()`` snapshot carries solver telemetry and
+    roofline budgets side by side (``bench_engine.py --check-budget`` reads
+    the ratio from here).
+    """
+    base = f"roofline.{name}"
+    for stage, row in table.get("stages", {}).items():
+        for metric, value in row.items():
+            registry.set_gauge(f"{base}.{stage}.{metric}", float(value))
+    for key in ("two_pass_bytes_per_outer", "fused_bytes_per_outer",
+                "fused_ratio"):
+        if key in table:
+            registry.set_gauge(f"{base}.{key}", float(table[key]))
+
+
 def format_stage_table(table) -> str:
     """Render a stage_table() record as an aligned text table."""
     sh = table["shape"]

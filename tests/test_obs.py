@@ -1,0 +1,446 @@
+"""Observability layer (DESIGN.md §11): telemetry-ring parity, tracer,
+registry, and the zero-overhead contract.
+
+The load-bearing claims under test:
+
+  * ``obs=None`` is FREE — the solve's compiled program carries no ring
+    buffers (static elision, same mechanism as the ``w=None`` weight
+    leaf), dispatch counts match an obs-carrying solve exactly, and the
+    returned coefficients are bit-identical with obs on and off (dense,
+    CSC-sparse, mesh, chunked-path, and grid drivers).
+  * the ring contents are HONEST — per-outer kkt/objective entries match
+    the host-recorded histories bitwise, and the in-step duality gap
+    matches the host-recomputed Lasso dual oracle to 1e-10.
+  * obs-on compilations live in a disjoint ``("obs", ...)`` retrace key
+    space, so mixing obs and non-obs solves on a shared engine never
+    silently retraces the plain step.
+  * the chunked-path ``times`` fix: per-chunk DELTAS, not the running
+    sweep total (the pre-§11 bug stamped cumulative time).
+  * the legacy telemetry attributes (``SolveResult.n_host_syncs``,
+    ``PathResult.retraces``/``n_dispatches``) keep working as live
+    property views into the diagnostics registry.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (L1, Quadratic, as_design, cross_val_path,
+                        lambda_max, make_engine, reg_path, solve)
+from repro.core.estimators import Lasso
+from repro.data.synth import make_correlated_design, make_sparse_design
+from repro.launch.mesh import make_test_mesh
+from repro.obs import (MetricsRegistry, Obs, TelemetryRing, Tracer,
+                       lasso_duality_gap)
+
+requires8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def obs_data():
+    X, y, _ = make_correlated_design(n=80, p=160, n_nonzero=10, rho=0.5,
+                                     snr=5.0, seed=3)
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def _solve_pair(X, y, penalty, mesh=None, **kw):
+    """The parity protocol: the same solve twice on FRESH engines, obs off
+    then on. Returns (res_off, res_on, eng_off, eng_on, obs)."""
+    eng_off = make_engine(penalty, Quadratic(), mesh=mesh)
+    eng_on = make_engine(penalty, Quadratic(), mesh=mesh)
+    res_off = solve(X, y, Quadratic(), penalty, engine=eng_off, **kw)
+    obs = Obs()
+    res_on = solve(X, y, Quadratic(), penalty, engine=eng_on, obs=obs, **kw)
+    return res_off, res_on, eng_off, eng_on, obs
+
+
+def _assert_parity(res_off, res_on, eng_off, eng_on):
+    np.testing.assert_array_equal(np.asarray(res_off.beta),
+                                  np.asarray(res_on.beta))
+    assert res_off.kkt == res_on.kkt
+    assert res_off.n_outer == res_on.n_outer
+    # the ring rides the existing fused step: zero extra dispatches
+    assert eng_on.n_dispatches == eng_off.n_dispatches
+    # exactly ONE extra blocking readback: the drain at solve end
+    assert res_on.n_host_syncs == res_off.n_host_syncs + 1
+
+
+# ------------------------------------------------------------------ parity
+def test_parity_dense(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    res_off, res_on, eo, en, _ = _solve_pair(X, y, L1(lam), tol=1e-10)
+    assert res_off.converged
+    _assert_parity(res_off, res_on, eo, en)
+
+
+def test_parity_sparse_csc():
+    Xsp, y, _ = make_sparse_design(n=200, p=600, density=2e-2,
+                                   n_nonzero=15, snr=5.0, seed=0)
+    y = jnp.asarray(y)
+    lam = lambda_max(as_design(Xsp), y) / 10
+    res_off, res_on, eo, en, _ = _solve_pair(Xsp, y, L1(lam), tol=1e-10)
+    assert res_off.converged
+    _assert_parity(res_off, res_on, eo, en)
+    # the CSC obs compile keys carry both the design kind and the obs tag
+    assert any(k[0] == "obs" for k in en.retraces)
+
+
+def test_parity_mesh_1x1(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    res_off, res_on, eo, en, _ = _solve_pair(X, y, L1(lam),
+                                             mesh=make_test_mesh((1, 1)),
+                                             tol=1e-10)
+    assert res_off.converged
+    _assert_parity(res_off, res_on, eo, en)
+
+
+@requires8
+def test_parity_mesh_2x4(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    res_off, res_on, eo, en, _ = _solve_pair(X, y, L1(lam),
+                                             mesh=make_test_mesh((2, 4)),
+                                             tol=1e-10)
+    assert res_off.converged
+    _assert_parity(res_off, res_on, eo, en)
+
+
+def test_parity_chunked_path(obs_data):
+    X, y = obs_data
+    lmax = float(lambda_max(X, y))
+    lambdas = lmax * np.geomspace(0.5, 0.05, 6)
+    kw = dict(lambdas=lambdas, tol=1e-8, vmap_chunk=3)
+    eng_off = make_engine(L1(1.0), Quadratic(), shared=False)
+    eng_on = make_engine(L1(1.0), Quadratic(), shared=False)
+    p_off = reg_path(X, y, L1(1.0), engine=eng_off, **kw)
+    obs = Obs()
+    p_on = reg_path(X, y, L1(1.0), engine=eng_on, obs=obs, **kw)
+    np.testing.assert_array_equal(p_off.betas, p_on.betas)
+    np.testing.assert_array_equal(p_off.kkts, p_on.kkts)
+    assert eng_on.n_dispatches == eng_off.n_dispatches
+    # lane rings: one [n_lambdas, max_outer] curve per field, NaN-padded
+    assert p_on.diagnostics.curves["kkt"].shape[0] == len(lambdas)
+    assert np.all(np.asarray(p_on.diagnostics.n_recorded) >= 1)
+
+
+def test_parity_grid(obs_data):
+    X, y = obs_data
+    kw = dict(n_lambdas=6, lambda_min_ratio=0.05, cv=3, tol=1e-8,
+              vmap_chunk=3, seed=0)
+    eng_off = make_engine(L1(1.0), Quadratic(), shared=False)
+    eng_on = make_engine(L1(1.0), Quadratic(), shared=False)
+    g_off = cross_val_path(X, y, Quadratic(), L1(1.0), engine=eng_off, **kw)
+    obs = Obs()
+    g_on = cross_val_path(X, y, Quadratic(), L1(1.0), engine=eng_on,
+                          obs=obs, **kw)
+    np.testing.assert_array_equal(g_off.cv_loss, g_on.cv_loss)
+    np.testing.assert_array_equal(np.asarray(g_off.betas),
+                                  np.asarray(g_on.betas))
+    assert g_on.n_dispatches == g_off.n_dispatches
+    # grid rings drain to [n_folds, n_lambdas, max_outer] curves whose last
+    # recorded entry per lane is the lane's final kkt
+    kkt = g_on.diagnostics.curves["kkt"]
+    assert kkt.shape[:2] == g_on.kkts.shape
+    finals = np.full(kkt.shape[:2], np.nan)
+    for f in range(kkt.shape[0]):
+        for l in range(kkt.shape[1]):
+            lane = kkt[f, l][np.isfinite(kkt[f, l])]
+            if lane.size:
+                finals[f, l] = lane[-1]
+    np.testing.assert_allclose(finals, g_on.kkts, rtol=0, atol=0)
+
+
+# ------------------------------------------------------- ring contents
+def test_ring_matches_host_histories(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    _, res, _, _, _ = _solve_pair(X, y, L1(lam), tol=1e-10)
+    n = res.diagnostics.n_recorded
+    assert n == len(res.kkt_history)
+    np.testing.assert_array_equal(res.diagnostics.curves["kkt"],
+                                  np.asarray(res.kkt_history))
+    np.testing.assert_array_equal(res.diagnostics.curves["obj"],
+                                  np.asarray(res.obj_history))
+    # ws_history only records non-converged iterations (a prefix)
+    ws = res.diagnostics.curves["ws_size"]
+    np.testing.assert_array_equal(ws[:len(res.ws_history)],
+                                  np.asarray(res.ws_history))
+
+
+def test_ring_gap_matches_host_oracle(obs_data):
+    X, y = obs_data
+    lam = float(lambda_max(X, y)) / 10
+    _, res, _, _, _ = _solve_pair(X, y, L1(lam), tol=1e-10)
+    gap = res.diagnostics.curves["gap"]
+    Xh, yh = np.asarray(X), np.asarray(y)
+    # first record: the cold-start iterate beta = 0
+    g0 = lasso_duality_gap(Xh, yh, np.zeros(Xh.shape[1]), lam)
+    assert abs(gap[0] - g0) <= 1e-10 * max(1.0, abs(g0))
+    # last record: the converged iterate the solve returned
+    g_end = lasso_duality_gap(Xh, yh, np.asarray(res.beta), lam)
+    assert abs(gap[-1] - g_end) <= 1e-10 * max(1.0, abs(g_end))
+    # the gap upper-bounds the suboptimality and decreases to ~tol scale
+    assert gap[-1] < gap[0]
+
+
+# ------------------------------------------------- static elision / keys
+def test_obs_none_elides_ring_from_lowering(obs_data):
+    """The zero-overhead proof obligation (DESIGN.md §11.4): lowering the
+    fused step with obs=None contains NO ring-shaped buffer, and the
+    output arity is the pre-obs 7-tuple (8 with a ring)."""
+    X, y = obs_data
+    lam = float(lambda_max(X, y)) / 10
+    engine = make_engine(L1(lam), Quadratic())
+    design = as_design(X)
+    p = design.shape[1]
+    L = design.lipschitz(Quadratic())
+    offset = Quadratic().grad_offset(p, design.dtype)
+    beta = jnp.zeros(p, design.dtype)
+    Xb = design.matvec(beta)
+    args = (design, y, None, beta, Xb, L, offset, Quadratic(), L1(lam),
+            1e-8, 0.3)
+    # ring capacity 37: a shape that appears nowhere else in the program
+    ring = TelemetryRing.alloc(37, design.dtype)
+    low_off = engine._jstep.lower(*args, bucket=64, obs=None)
+    low_on = engine._jstep.lower(*args, bucket=64, obs=ring)
+    out_off = jax.eval_shape(
+        lambda *a: engine._outer_step(*a, bucket=64, obs=None), *args)
+    out_on = jax.eval_shape(
+        lambda *a: engine._outer_step(*a, bucket=64, obs=ring), *args)
+    assert len(out_off) == 7 and len(out_on) == 8
+    txt_off, txt_on = low_off.as_text(), low_on.as_text()
+    assert "37x" not in txt_off and "<37" not in txt_off
+    assert "37x" in txt_on or "<37" in txt_on
+
+
+def test_obs_retrace_keys_are_disjoint(obs_data):
+    """Mixing obs and non-obs solves on a SHARED engine compiles each mode
+    once — the obs trace never evicts or aliases the plain one."""
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    engine = make_engine(L1(lam), Quadratic(), shared=False)
+    solve(X, y, Quadratic(), L1(lam), engine=engine, tol=1e-10)
+    plain_keys = set(engine.retraces)
+    solve(X, y, Quadratic(), L1(lam), engine=engine, tol=1e-10, obs=Obs())
+    obs_keys = set(engine.retraces) - plain_keys
+    assert obs_keys and all(k[0] == "obs" for k in obs_keys)
+    assert all(not (isinstance(k, tuple) and k[0] == "obs")
+               for k in plain_keys)
+    # re-running either mode adds no retrace
+    before = dict(engine.retraces)
+    solve(X, y, Quadratic(), L1(lam), engine=engine, tol=1e-10)
+    solve(X, y, Quadratic(), L1(lam), engine=engine, tol=1e-10, obs=Obs())
+    assert dict(engine.retraces) == before
+
+
+# --------------------------------------------------- chunked timing fix
+def test_chunked_path_times_are_per_chunk_deltas(obs_data, monkeypatch):
+    """The pre-§11 bug: the chunked driver stamped every lambda with the
+    RUNNING sweep total (``perf_counter() - t0`` of the sweep start), so
+    ``times`` grew with grid position instead of recording chunk cost.
+    With a fake counter advancing 1s per call, every chunk must now stamp
+    a constant per-chunk delta."""
+    import repro.core.path as path_mod
+
+    X, y = obs_data
+    lmax = float(lambda_max(X, y))
+    lambdas = lmax * np.geomspace(0.5, 0.05, 6)
+
+    tick = {"t": 0.0}
+
+    def fake_now():
+        tick["t"] += 1.0
+        return tick["t"]
+
+    monkeypatch.setattr(path_mod, "_now", fake_now)
+    res = reg_path(X, y, L1(1.0), lambdas=lambdas, tol=1e-8, vmap_chunk=2)
+    times = np.asarray(res.times)
+    assert times.shape == (6,)
+    # each chunk calls _now() once at entry and once at stamping: with the
+    # +1s fake counter every per-chunk delta is EXACTLY 1.0. The buggy
+    # cumulative stamping would have produced [1, 1, 3, 3, 5, 5].
+    np.testing.assert_array_equal(times, np.ones(6))
+    # chunk lanes share one stamp: pairwise-equal within each chunk
+    assert times[0] == times[1] and times[2] == times[3]
+
+
+# ----------------------------------------------------- deprecation shims
+def test_solve_n_host_syncs_shim(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-10)
+    # reads go through the registry...
+    assert res.n_host_syncs == \
+        res.diagnostics.registry.counter("solve.n_host_syncs")
+    assert res.n_host_syncs == res.n_outer + 1
+    # ...and writes (the bench reset idiom) round-trip
+    res.n_host_syncs = 0
+    assert res.diagnostics.registry.counter("solve.n_host_syncs") == 0
+    res.n_host_syncs += 2
+    assert res.n_host_syncs == 2
+
+
+def test_path_retraces_shim(obs_data):
+    X, y = obs_data
+    lmax = float(lambda_max(X, y))
+    res = reg_path(X, y, L1(1.0), lambdas=lmax * np.geomspace(0.5, 0.1, 4),
+                   tol=1e-8, vmap_chunk=2)
+    # live view: the mapping object IS the registry's
+    view = res.retraces
+    assert view is res.diagnostics.registry.mapping("path.retraces")
+    assert sum(view.values()) >= 1
+    assert res.n_dispatches >= 1
+    assert res.n_dispatches == \
+        res.diagnostics.registry.counter("path.n_dispatches")
+    # mutation through the attribute surfaces in the registry (pre-§11
+    # callers did `res.retraces[key] += 1` style bookkeeping)
+    view["probe"] = 7
+    assert res.diagnostics.registry.mapping("path.retraces")["probe"] == 7
+
+
+def test_engine_counters_are_registry_views(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    engine = make_engine(L1(lam), Quadratic(), shared=False)
+    solve(X, y, Quadratic(), L1(lam), engine=engine, tol=1e-10)
+    assert engine.n_dispatches == \
+        engine.metrics.counter("engine.n_dispatches")
+    assert engine.retraces is engine.metrics.mapping("engine.retraces")
+    engine.n_dispatches = 0                    # the bench reset idiom
+    assert engine.metrics.counter("engine.n_dispatches") == 0
+
+
+# ------------------------------------------------------ tracer / registry
+def test_metrics_registry_units():
+    reg = MetricsRegistry()
+    assert reg.counter("absent") == 0
+    assert reg.inc("c") == 1 and reg.inc("c", 4) == 5
+    reg.set_counter("c", 2)
+    assert reg.counter("c") == 2
+    reg.set_gauge("g", 0.25)
+    assert reg.gauge("g") == 0.25 and reg.gauge("absent", -1) == -1
+    m = reg.mapping("m")
+    m[("obs", 64)] = 3
+    assert reg.mapping("m") is m
+    reg.set_mapping("m", {("obs", 128): 1})
+    assert m == {("obs", 128): 1}              # contents replaced, view kept
+    reg.observe("h", 1.0)
+    reg.observe("h", 3.0)
+    assert reg.histogram_summary("h") == {
+        "count": 2, "min": 1.0, "max": 3.0, "mean": 2.0, "sum": 4.0}
+    assert "c" in reg and "nope" not in reg
+    assert reg["g"] == 0.25
+    with pytest.raises(KeyError):
+        reg["nope"]
+    other = MetricsRegistry()
+    other.inc("c", 10)
+    other.observe("h", 5.0)
+    reg.merge(other)
+    assert reg.counter("c") == 12
+    assert reg.histogram_summary("h")["count"] == 3
+    d = reg.as_dict()
+    assert d["counters"]["c"] == 12
+    # tuple mapping keys serialize via repr
+    assert "('obs', 128)" in d["mappings"]["m"]
+    json.dumps(d)                              # JSON-clean snapshot
+
+
+def test_tracer_chrome_trace(tmp_path):
+    tr = Tracer()
+    with tr.span("solve", n=10):
+        with tr.span("outer", it=0) as ev:
+            with tr.span("dispatch"):
+                pass
+            ev["args"]["compiled"] = True
+        with tr.span("outer", it=1):
+            pass
+    doc = tr.chrome_trace()
+    events = doc["traceEvents"]
+    names = [e["name"] for e in events]
+    assert names.count("outer") == 2 and "solve" in names
+    for e in events:
+        assert e["ph"] == "X" and "ts" in e and "dur" in e
+    outer0 = next(e for e in events
+                  if e["name"] == "outer" and e["args"].get("it") == 0)
+    assert outer0["args"]["compiled"] is True
+    # nesting: children fall inside the parent's [ts, ts+dur] window
+    solve_ev = next(e for e in events if e["name"] == "solve")
+    for e in events:
+        assert e["ts"] >= solve_ev["ts"]
+        assert e["ts"] + e["dur"] <= solve_ev["ts"] + solve_ev["dur"] + 1
+    out = tr.export_chrome(str(tmp_path / "trace.json"))
+    loaded = json.load(open(out))
+    assert loaded["traceEvents"]
+    roll = tr.summary()
+    assert roll["outer"]["count"] == 2
+
+
+def test_solve_trace_spans_and_export(obs_data, tmp_path):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    obs = Obs()
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-10, obs=obs)
+    roll = obs.tracer.summary()
+    assert roll["solve"]["count"] == 1
+    assert roll["outer"]["count"] == res.n_outer + 1   # +1: converged iter
+    assert roll["dispatch"]["count"] == roll["outer"]["count"]
+    assert roll["sync"]["count"] == roll["outer"]["count"]
+    assert roll["drain"]["count"] == 1
+    out = obs.export_chrome(str(tmp_path / "solve-trace.json"))
+    names = {e["name"] for e in json.load(open(out))["traceEvents"]}
+    assert {"solve", "outer", "dispatch", "sync", "drain"} <= names
+
+
+def test_grid_progress_events(obs_data):
+    X, y = obs_data
+    events = []
+    cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=4,
+                   lambda_min_ratio=0.1, cv=3, tol=1e-8, vmap_chunk=2,
+                   seed=0, progress=events.append)
+    kinds = [ev["event"] for ev in events]
+    assert "bucket" in kinds and "chunk" in kinds
+    chunks = [ev for ev in events if ev["event"] == "chunk"]
+    assert chunks[-1]["lambdas_done"] == 4
+    assert all("elapsed_s" in ev and "eta_s" in ev for ev in chunks)
+
+
+def test_diagnostics_summary_renders(obs_data):
+    X, y = obs_data
+    lam = lambda_max(X, y) / 10
+    res = solve(X, y, Quadratic(), L1(lam), tol=1e-10, obs=Obs())
+    text = res.diagnostics.summary()
+    assert "kkt" in text and "gap" in text and "ws_size" in text
+    assert f"{res.kkt:.3e}"[:6] in text
+    # grid diagnostics render the per-lane rollup
+    g = cross_val_path(X, y, Quadratic(), L1(1.0), n_lambdas=4,
+                       lambda_min_ratio=0.1, cv=3, tol=1e-8, vmap_chunk=2,
+                       seed=0, obs=Obs())
+    assert "lane" in g.summary().lower()
+
+
+def test_estimator_exposes_diagnostics(obs_data):
+    X, y = obs_data
+    est = Lasso(alpha=float(lambda_max(X, y)) / 10, tol=1e-8).fit(
+        np.asarray(X), np.asarray(y))
+    assert est.diagnostics_ is est.result_.diagnostics
+    assert len(est.diagnostics_.curves["kkt"]) >= 1
+
+
+def test_report_render_smoke(tmp_path):
+    from repro.obs.report import main, render
+    run = {"registry": {"counters": {"solve.count": 1}, "gauges": {},
+                        "mappings": {}},
+           "spans": {"solve": {"count": 1, "total_s": 0.5}},
+           "n_solves": 1,
+           "solves": [{"curves": {"kkt": [1.0, 1e-9]}}]}
+    text = render(run)
+    assert "solve.count" in text and "1.000e-09" in text
+    p = tmp_path / "run.json"
+    p.write_text(json.dumps(run))
+    assert main([str(p)]) == 0
