@@ -1,3 +1,4 @@
-from .checkpointer import (Checkpointer, latest_step, restore_pytree,
-                           save_pytree)
-from .fault import ElasticPlan, FaultToleranceConfig, TrainingSupervisor
+from .checkpointer import (Checkpointer, CheckpointConfig, latest_step,
+                           restore_pytree, save_pytree)
+from .fault import (ElasticPlan, FaultToleranceConfig, GridSupervisor,
+                    TrainingSupervisor)

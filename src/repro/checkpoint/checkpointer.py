@@ -18,12 +18,48 @@ import json
 import os
 import shutil
 import threading
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "//"
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    """Grid-solver checkpointing policy (DESIGN.md §12).
+
+    Passed as ``cross_val_path(..., checkpoint=CheckpointConfig(dir))``:
+    the grid driver snapshots its full cursor state (lane scheduler, device
+    lane states, warm-start bank, accumulated outputs) through a
+    :class:`Checkpointer` under ``directory`` every ``every_n_chunks``
+    scheduler rounds, and ``cross_val_path(..., resume=directory)``
+    restores it — onto any mesh shape, since save/restore is
+    sharding-agnostic.
+
+    Attributes
+    ----------
+    directory : str
+        Checkpoint root; each snapshot lands in ``step_<round>/``.
+    every_n_chunks : int
+        Snapshot cadence in scheduler rounds (1 = after every round).
+    keep : int
+        Retention: newest ``keep`` snapshots survive GC (0 keeps all).
+    async_save : bool
+        Hand the write to the background thread (the host snapshot is
+        copied first, so the driver may keep mutating its arrays).
+    """
+    directory: str
+    every_n_chunks: int = 1
+    keep: int = 3
+    async_save: bool = True
+
+    def make(self) -> "Checkpointer":
+        """Build the backing :class:`Checkpointer` for this policy."""
+        return Checkpointer(self.directory, every=self.every_n_chunks,
+                            keep=self.keep, async_save=self.async_save)
 
 
 def _flatten_with_names(tree):
@@ -182,8 +218,11 @@ class Checkpointer:
         self.wait()                              # one in flight at a time
         if self._error is not None:
             raise self._error
+        # np.array (not asarray): device_get returns the SAME object for
+        # numpy leaves, and the async writer must not alias host buffers
+        # the caller keeps mutating between snapshots
         host_tree = jax.tree_util.tree_map(
-            lambda x: np.asarray(jax.device_get(x)), tree)
+            lambda x: np.array(jax.device_get(x)), tree)
         if self.async_save and not block:
             self._thread = threading.Thread(
                 target=self._do_save, args=(host_tree, step), daemon=True)

@@ -28,7 +28,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 __all__ = ["FaultToleranceConfig", "ElasticPlan", "StragglerMonitor",
-           "TrainingSupervisor", "RESTARTABLE_ERRORS"]
+           "TrainingSupervisor", "GridSupervisor", "RESTARTABLE_ERRORS"]
 
 # XLA/runtime failures that a restart can heal (vs. bugs, which re-raise)
 RESTARTABLE_ERRORS = (
@@ -173,3 +173,50 @@ class TrainingSupervisor:
                     self.on_restart(e)
                 state, step = self.restore_fn()
         return state, step
+
+
+@dataclass
+class GridSupervisor:
+    """Checkpoint/restart loop around a grid solve (DESIGN.md §12).
+
+    The grid analogue of :class:`TrainingSupervisor`: ``run(grid_fn)``
+    invokes ``grid_fn(resume)`` where ``resume`` is ``checkpoint_dir`` when
+    a snapshot exists there and ``None`` otherwise (fresh start). A raised
+    exception is classified with :func:`is_restartable`: fatal errors
+    (bugs) re-raise immediately; restartable runtime failures back off
+    exponentially (``backoff_s * 2**k`` capped at ``backoff_cap_s``) and
+    re-enter ``grid_fn`` with the latest checkpoint, until the
+    ``max_restarts`` budget is exhausted. The grid driver itself writes the
+    checkpoints (``cross_val_path(..., checkpoint=...)``), so the contract
+    is simply: ``grid_fn`` must pass ``resume`` through to the driver.
+    """
+    checkpoint_dir: str
+    config: FaultToleranceConfig = field(default_factory=FaultToleranceConfig)
+    on_restart: Optional[Callable] = None
+    restarts: int = 0
+    sleep_fn: Callable = time.sleep    # injectable for tests
+
+    def run(self, grid_fn: Callable):
+        """Drive ``grid_fn(resume: Optional[str])`` to completion."""
+        from .checkpointer import latest_step
+
+        consecutive_failures = 0
+        while True:
+            resume = self.checkpoint_dir \
+                if latest_step(self.checkpoint_dir) is not None else None
+            try:
+                return grid_fn(resume)
+            except Exception as e:               # noqa: BLE001
+                if not is_restartable(e):
+                    raise
+                self.restarts += 1
+                consecutive_failures += 1
+                if self.restarts > self.config.max_restarts:
+                    raise RuntimeError(
+                        f"restart budget exhausted ({self.restarts})") from e
+                backoff = min(
+                    self.config.backoff_s * 2 ** (consecutive_failures - 1),
+                    self.config.backoff_cap_s)
+                self.sleep_fn(backoff)
+                if self.on_restart is not None:
+                    self.on_restart(e)

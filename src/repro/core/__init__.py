@@ -14,8 +14,9 @@ from .working_set import (BucketPolicy, fixed_point_score, grow_ws_size,
 from .api import (elastic_net, enet_gap, lambda_max, lasso, lasso_gap,
                   logreg_gap, mcp_regression, multitask_lasso, multitask_mcp,
                   scad_regression, sparse_logreg, svc_dual)
-from .path import (GridResult, PathResult, cross_val_path, reg_path,
-                   support_metrics)
+from .path import (CheckpointConfig, GridResult, PathResult, cross_val_path,
+                   reg_path, support_metrics)
+from .lanes import LaneScheduler
 from .distributed import make_distributed_ops, shard_design, solve_distributed
 from .estimators import (ElasticNet, GeneralizedLinearEstimator, Lasso,
                          LassoCV, LinearSVC, MCPRegression, MCPRegressionCV,
@@ -35,7 +36,8 @@ __all__ = [
     "mcp_regression", "scad_regression", "sparse_logreg", "svc_dual",
     "multitask_lasso", "multitask_mcp", "lasso_gap", "enet_gap", "logreg_gap",
     "reg_path", "PathResult", "support_metrics",
-    "cross_val_path", "GridResult", "normalize_weights",
+    "cross_val_path", "GridResult", "CheckpointConfig", "LaneScheduler",
+    "normalize_weights",
     "shard_design", "solve_distributed", "make_distributed_ops",
     "GeneralizedLinearEstimator", "Lasso", "ElasticNet", "MCPRegression",
     "SCADRegression", "SparseLogisticRegression", "LinearSVC",

@@ -600,6 +600,18 @@ class SolveEngine:
     def _n_data_shards(self):
         return self.mesh.shape[self.data_axis] if self.mesh is not None else 1
 
+    def lane_shardings(self, n_tasks: int = 0):
+        """(beta_sharding, xb_sharding) of the chunked driver's per-lane
+        state ``betas [S, p(, T)]`` / ``Xbs [S, n(, T)]`` — the placement
+        targets when a grid checkpoint restores onto this engine's mesh
+        (DESIGN.md §12), or ``(None, None)`` on a dense engine (leaves stay
+        wherever ``jnp.asarray`` puts them)."""
+        if self.mesh is None:
+            return None, None
+        from repro.launch.shardings import grid_lane_specs
+        bs, xs = grid_lane_specs(self.data_axis, self.model_axis, n_tasks)
+        return (NamedSharding(self.mesh, bs), NamedSharding(self.mesh, xs))
+
     def _live_axes(self):
         """(data_axis | None, model_axis | None): axis names with the size-1
         (unsplit) axes dropped — and both None on a dense (mesh-less) engine.

@@ -350,10 +350,16 @@ class _CVEstimatorMixin:
                     "use_kernels")
 
     def _init_grid(self, alphas, n_alphas, eps, cv, criterion, ebic_gamma,
-                   vmap_chunk, seed):
+                   vmap_chunk, seed, checkpoint=None, resume=None):
         if criterion not in ("cv", "aic", "bic", "ebic"):
             raise ValueError(f"unknown criterion {criterion!r}; supported: "
                              f"'cv' | 'aic' | 'bic' | 'ebic'")
+        if (checkpoint is not None or resume is not None) \
+                and criterion != "cv":
+            raise ValueError(
+                "checkpoint/resume apply to the CV grid only "
+                "(criterion='cv'); information-criterion paths are single "
+                "solves with nothing to snapshot")
         # kwargs the grid drivers cannot honor must not silently fork the
         # tuning sweep's solver away from the refit's (use_ws, beta0, ...);
         # obs rides along — both drivers and solve() accept the handle
@@ -374,6 +380,8 @@ class _CVEstimatorMixin:
         self.ebic_gamma = ebic_gamma
         self.vmap_chunk = vmap_chunk
         self.seed = seed
+        self.checkpoint = checkpoint
+        self.resume = resume
 
     def _grid_kw(self):
         """Engine/mesh kwargs forwarded to the path drivers — the SAME
@@ -418,7 +426,8 @@ class _CVEstimatorMixin:
                 design, y, self.datafit, self.penalty, lambdas=alphas,
                 cv=self.cv, sample_weight=sample_weight, seed=self.seed,
                 tol=self.tol, vmap_chunk=self.vmap_chunk, p0=self.p0,
-                max_outer=self.max_outer, **self._grid_kw())
+                max_outer=self.max_outer, checkpoint=self.checkpoint,
+                resume=self.resume, **self._grid_kw())
             self.grid_result_ = grid
             self.alphas_ = grid.lambdas
             self.cv_loss_ = grid.cv_loss
@@ -493,10 +502,11 @@ class LassoCV(_CVEstimatorMixin, Lasso):
 
     def __init__(self, *, alphas=None, n_alphas=30, eps=1e-2, cv=5,
                  criterion="cv", ebic_gamma=0.5, vmap_chunk=10, seed=0,
-                 **kw):
+                 checkpoint=None, resume=None, **kw):
         super().__init__(alpha=1.0, **kw)
         self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
-                        vmap_chunk, seed)
+                        vmap_chunk, seed, checkpoint=checkpoint,
+                        resume=resume)
 
     @property
     def mse_path_(self):
@@ -511,10 +521,11 @@ class MCPRegressionCV(_CVEstimatorMixin, MCPRegression):
 
     def __init__(self, *, gamma=3.0, alphas=None, n_alphas=30, eps=1e-2,
                  cv=5, criterion="cv", ebic_gamma=0.5, vmap_chunk=10,
-                 seed=0, **kw):
+                 seed=0, checkpoint=None, resume=None, **kw):
         super().__init__(alpha=1.0, gamma=gamma, **kw)
         self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
-                        vmap_chunk, seed)
+                        vmap_chunk, seed, checkpoint=checkpoint,
+                        resume=resume)
 
 
 class SparseLogisticRegressionCV(_CVEstimatorMixin,
@@ -525,7 +536,8 @@ class SparseLogisticRegressionCV(_CVEstimatorMixin,
 
     def __init__(self, *, alphas=None, n_alphas=30, eps=1e-2, cv=5,
                  criterion="cv", ebic_gamma=0.5, vmap_chunk=10, seed=0,
-                 **kw):
+                 checkpoint=None, resume=None, **kw):
         super().__init__(alpha=1.0, **kw)
         self._init_grid(alphas, n_alphas, eps, cv, criterion, ebic_gamma,
-                        vmap_chunk, seed)
+                        vmap_chunk, seed, checkpoint=checkpoint,
+                        resume=resume)

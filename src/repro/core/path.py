@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -48,17 +49,23 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
+from repro.checkpoint import CheckpointConfig, restore_pytree
 from repro.obs import SolveDiagnostics, TelemetryRing, null_span
 
 from .api import lambda_max
 from .datafits import Quadratic
 from .engine import as_design
+from .lanes import LaneScheduler
 from .penalties import L1
 from .solver import _place_design, make_engine, normalize_weights, solve
 from .working_set import BucketPolicy, next_pow2
 
 __all__ = ["reg_path", "PathResult", "support_metrics", "cross_val_path",
-           "GridResult"]
+           "GridResult", "CheckpointConfig"]
+
+# working-set growth factor of the engine's chunked device loop: the host
+# mirrors it to detect "a lane outgrew its bucket" from the synced gcounts
+_GROWTH = 2
 
 _ENGINE_KW = ("M", "max_epochs", "accel", "use_fp_score", "use_gram",
               "use_kernels")
@@ -533,8 +540,17 @@ class GridResult:
     n_outer : int
         Total vmapped outer iterations driven across the sweep.
     times : np.ndarray
-        Wall-clock seconds PER lambda chunk (each entry is one chunk's own
-        duration; ``np.cumsum`` recovers the sweep-cumulative curve).
+        Wall-clock seconds PER scheduler round (each entry is one round's
+        own duration; ``np.cumsum`` recovers the sweep-cumulative curve).
+    occupancy : np.ndarray
+        Fraction of the lane pool holding live (fold, lambda) work at each
+        round's dispatch — the lane scheduler's retire/backfill keeps this
+        at 1.0 until the work queue drains (DESIGN.md §12).
+    n_rounds : int
+        Scheduler rounds driven (== dispatches of the sweep).
+    resumed_from : int, optional
+        The checkpoint step this grid resumed from (``resume=...`` runs
+        only); ``None`` for uninterrupted grids.
     retraces : dict
         The engine's compile counter — the proof behind "one compile per
         working-set bucket across the whole grid".
@@ -560,6 +576,9 @@ class GridResult:
     fold_weights: np.ndarray
     n_outer: int = 0
     times: Optional[np.ndarray] = None
+    occupancy: Optional[np.ndarray] = None
+    n_rounds: int = 0
+    resumed_from: Optional[int] = None
     retraces: dict = field(default_factory=dict)
     n_dispatches: int = 0
     n_host_syncs: int = 0
@@ -575,18 +594,71 @@ def _heldout_fn_cached(datafit):
     def lane(Xb, y, h):
         return datafit.value(Xb, y, h)
 
-    per_fold = jax.vmap(lane, in_axes=(0, None, None))     # lambda lanes
-    return jax.jit(jax.vmap(per_fold, in_axes=(0, None, 0)))
+    return jax.jit(jax.vmap(lane, in_axes=(0, None, 0)))
 
 
 def _heldout_fn(datafit):
-    """Jitted [F, C, n(, T)] x [F, n] -> [F, C] held-out mean-loss map,
-    cached per (hashable) datafit so repeated grids reuse the compilation;
-    datafits with unhashable leaves fall back to a per-call closure."""
+    """Jitted [S, n(, T)] x [n(, T)] x [S, n] -> [S] held-out mean-loss map
+    over the grid driver's lanes (each lane carries its own fold's held-out
+    weight row), cached per (hashable) datafit so repeated grids reuse the
+    compilation; datafits with unhashable leaves fall back to a per-call
+    closure."""
     try:
         return _heldout_fn_cached(datafit)
     except TypeError:
         return _heldout_fn_cached.__wrapped__(datafit)
+
+
+def _grid_fingerprint(lambdas, W, dims, tol):
+    """Identity of a grid problem, stored in every checkpoint: a resumed
+    run must present the SAME lambdas, fold weights, shapes, and solver
+    knobs (mesh shape deliberately excluded — restore is mesh-elastic)."""
+    digest = hashlib.sha1(np.ascontiguousarray(W).tobytes()).digest()[:8]
+    return {
+        "lambdas": np.asarray(lambdas, np.float64),
+        "w_digest": np.frombuffer(digest, np.uint64).copy(),
+        "dims": np.asarray(dims, np.int64),
+        "tol": np.float64(tol),
+    }
+
+
+def _grid_state_template(sched, bshape, xshape, dtype, fingerprint,
+                         use_ring, max_outer):
+    """Zero-valued pytree matching a grid checkpoint's exact structure and
+    shapes — the `restore_pytree` template (DESIGN.md §12). The round-log
+    leaves (`times`, `occupancy`) grow with the round count, so their
+    template entries are plain ints: shape-less template leaves accept
+    whatever length the snapshot recorded."""
+    F, nlam, S = sched.n_folds, sched.n_lambdas, sched.n_lanes
+    state = {
+        "round": np.int64(0), "bucket": np.int64(0),
+        "total_outer": np.int64(0), "n_syncs": np.int64(0),
+        "n_disp": np.int64(0),
+        "sched": {k: np.zeros_like(np.asarray(v))
+                  for k, v in sched.state_dict().items()},
+        "lane_betas": np.zeros((S,) + bshape, dtype),
+        "lane_xbs": np.zeros((S,) + xshape, dtype),
+        "lane_lams": np.zeros(S, np.float64),
+        "lane_fold": np.zeros(S, np.int64),
+        "bank_betas": np.zeros((F,) + bshape, dtype),
+        "bank_xbs": np.zeros((F,) + xshape, dtype),
+        "out_betas": np.zeros((F, nlam) + bshape, dtype),
+        "out_loss": np.zeros((F, nlam), dtype),
+        "kkts_out": np.zeros((F, nlam)),
+        "eps_out": np.zeros((F, nlam), np.int64),
+        "item_done": np.zeros((F, nlam), np.uint8),
+        "times": 0, "occupancy": 0,
+        "fingerprint": fingerprint,
+    }
+    if use_ring:
+        from repro.obs.rings import _FLOAT_FIELDS, _INT_FIELDS
+        state["curves"] = {
+            **{f: np.full((F, nlam, max_outer), np.nan, dtype)
+               for f in _FLOAT_FIELDS},
+            **{f: np.full((F, nlam, max_outer), -1, np.int32)
+               for f in _INT_FIELDS}}
+        state["n_recorded"] = np.zeros((F, nlam), np.int64)
+    return state
 
 
 def _emit_progress(progress, **ev):
@@ -605,6 +677,7 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
                    n_lambdas=30, lambda_min_ratio=1e-2, cv=5,
                    fold_weights=None, sample_weight=None, seed=0, tol=1e-6,
                    vmap_chunk=10, p0=64, max_outer=50, eps_inner_frac=0.3,
+                   sync_every=8, checkpoint=None, resume=None,
                    engine=None, mesh=None, data_axis="data",
                    model_axis="model", obs=None, progress=None,
                    **engine_kw) -> GridResult:
@@ -613,12 +686,17 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
     Every fold (or bootstrap replicate) is a sample-weight leaf on the SAME
     (X, y) — 0/1 train membership for k-fold CV, resample counts for the
     bootstrap — so all replicates share one static shape and the whole grid
-    vmaps through the chunked fused step: lanes are (fold, lambda) pairs,
-    each fold warm-starts from its own previous chunk's densest solution,
-    bucket escalation is shared across lanes, and held-out scores reduce
-    device-side from the lanes' full-row residuals (DESIGN.md §9). One
-    compiled step per working-set bucket serves the entire grid; the host
-    syncs once per (chunk, bucket) attempt.
+    vmaps through the chunked fused step: a FIXED pool of
+    ``n_folds * vmap_chunk`` lanes runs (fold, lambda) cells from a global
+    work queue, each fold warm-starts from its own densest completed
+    solution, bucket escalation is shared across lanes, and held-out
+    scores reduce device-side from the lanes' full-row residuals
+    (DESIGN.md §9). One compiled step per working-set bucket serves the
+    entire grid; the host syncs once per dispatch, every dispatch runs up
+    to ``sync_every`` device-resident outer iterations, and at each sync
+    the lane scheduler RETIRES converged lanes and BACKFILLS their slots
+    from the queue, so late rounds run at full occupancy instead of
+    padding to the initial lane count (DESIGN.md §12).
 
     Parameters
     ----------
@@ -650,10 +728,32 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
         Per-lane outer KKT tolerance and chunk-driver knobs (as in
         :func:`reg_path`).
     vmap_chunk : int, optional
-        Lambdas swept per dispatch; lane count per dispatch is
-        ``n_folds * vmap_chunk``. The last chunk is padded (by repeating
-        its smallest lambda) so every dispatch shares one lane count — and
-        therefore one compiled program per bucket.
+        Width of the lane pool in lambdas: every dispatch drives
+        ``n_folds * vmap_chunk`` lanes, so one compiled program per bucket
+        serves the whole grid. Slots the work queue can no longer fill
+        keep their retired (converged) state and take the fused step's
+        skip path — dead lanes never reach the held-out scores or the
+        telemetry curves.
+    sync_every : int, optional
+        Outer-iteration block per dispatch: the device loop runs at most
+        this many outers before the host syncs, retires converged lanes,
+        and backfills. Smaller blocks react faster (higher occupancy) at
+        the cost of more dispatches; the 1-sync/1-dispatch-per-outer
+        budget contract holds for any value >= 1.
+    checkpoint : repro.checkpoint.CheckpointConfig, optional
+        Snapshot the full grid cursor (scheduler, device lane states,
+        warm-start bank, accumulated outputs) under
+        ``checkpoint.directory`` every ``checkpoint.every_n_chunks``
+        scheduler rounds, through the sharding-agnostic
+        ``repro.checkpoint.Checkpointer`` (atomic tmp-rename writes,
+        optional async; DESIGN.md §12).
+    resume : str, optional
+        Directory holding a checkpoint written by a previous run of the
+        SAME grid (validated by fingerprint): restores the latest snapshot
+        — onto any mesh shape — and continues, replaying the exact
+        schedule; the resumed result is bit-identical (dense/CSC) to an
+        uninterrupted run with zero extra dispatches on the resumed
+        segment (tests/test_grid_fault.py).
     engine, mesh, data_axis, model_axis : optional
         As in :func:`reg_path`; ``**engine_kw`` is restricted to engine
         config keys (M, max_epochs, accel, use_fp_score, use_gram,
@@ -665,12 +765,15 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
         lanes land on ``GridResult.diagnostics`` as
         ``[n_folds, n_lambdas, max_outer]`` arrays. Zero extra dispatches.
     progress : callable or bool, optional
-        Per-(chunk, bucket) progress events: a callable receives dicts like
+        Per-round progress events: a callable receives dicts like
         ``{"event": "bucket", "chunk": 1, "n_chunks": 3, "bucket": 64,
         "lanes_converged": 7, "n_lanes": 15, "lambdas_done": 10,
-        "n_lambdas": 30, "elapsed_s": ..., "eta_s": ...}`` (an ``"event":
-        "chunk"`` dict follows each chunk retirement); any other truthy
-        value prints one stderr line per event.
+        "n_lambdas": 30, "elapsed_s": ..., "eta_s": ...}`` — one
+        ``"bucket"`` event per dispatch, an ``"event": "chunk"`` dict on
+        every round that retired lanes (``lambdas_done`` counts fully
+        completed lambda columns), and an ``"event": "resume"`` dict when
+        a run restores from a checkpoint; any other truthy value prints
+        one stderr line per event.
 
     Returns
     -------
@@ -762,115 +865,276 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
     xshape = (n,) if n_tasks == 0 else (n, n_tasks)
     policy = BucketPolicy(p0=p0)
     chunk = max(1, min(int(vmap_chunk), nlam))
-    betas_prev = jnp.zeros((F,) + bshape, design.dtype)
-    Xbs_prev = jnp.zeros((F,) + xshape, design.dtype)
-    gcount_prev = 0
-
-    betas_out = np.zeros((F, nlam) + bshape)
-    kkts_out = np.zeros((F, nlam))
-    eps_out = np.zeros((F, nlam), np.int64)
-    loss_out = np.zeros((F, nlam))
-    dispatches0, total_outer, n_syncs, times = engine.n_dispatches, 0, 0, []
+    S = F * chunk                          # the fixed lane pool
+    sync_every = max(1, int(sync_every))
+    sched = LaneScheduler(F, nlam, S, max_outer)
+    dtype = design.dtype
     sp = obs.span if obs is not None else null_span
     use_ring = obs is not None and getattr(obs, "rings", True)
-    ring_curves, ring_counts = [], []
-    n_chunks = -(-nlam // chunk)
-    t0 = _now()
-    rep = lambda a: jnp.repeat(a, chunk, axis=0)      # fold -> lane axis
-    # loop-invariant lane expansions: the fold weights and per-fold L are
-    # the same [F * chunk, ...] tensors for every lambda chunk
-    w_lanes, L_lanes = rep(Wd), rep(L_folds)
+    fingerprint = _grid_fingerprint(
+        lambdas, W, [n, p, F, nlam, S, max_outer, sync_every, n_tasks,
+                     int(use_ring)], tol)
+    beta_sh, xb_sh = engine.lane_shardings(n_tasks)
 
+    def _put_lanes(b_arr, x_arr):
+        b, x = jnp.asarray(b_arr, dtype), jnp.asarray(x_arr, dtype)
+        if beta_sh is not None:
+            b, x = jax.device_put(b, beta_sh), jax.device_put(x, xb_sh)
+        return b, x
+
+    ckpt = checkpoint.make() if checkpoint is not None else None
+    if use_ring:
+        from repro.obs.rings import _FLOAT_FIELDS, _INT_FIELDS
+        curves_store = {
+            **{f: np.full((F, nlam, max_outer), np.nan, dtype)
+               for f in _FLOAT_FIELDS},
+            **{f: np.full((F, nlam, max_outer), -1, np.int32)
+               for f in _INT_FIELDS}}
+        counts_store = np.zeros((F, nlam), np.int64)
+    else:
+        curves_store = counts_store = None
+
+    # driver-side lane maps, kept verbatim for DEAD slots too: their stale
+    # entries keep every dispatch input identical between a resumed and an
+    # uninterrupted run, which is what makes resume bit-exact
+    lams_l = np.zeros(S, np.float64)
+    fold_host = np.zeros(S, np.int64)
+    lamidx_host = np.zeros(S, np.int64)
+    kkts_out = np.zeros((F, nlam))
+    eps_out = np.zeros((F, nlam), np.int64)
+    item_done = np.zeros((F, nlam), np.uint8)
+    times, occupancy = [], []
+    round_idx, total_outer, n_syncs = 0, 0, 0
+    resumed_from = None
+
+    if resume is not None:
+        template = _grid_state_template(sched, bshape, xshape, dtype,
+                                        fingerprint, use_ring, max_outer)
+        try:
+            state, step = restore_pytree(template, str(resume))
+        except KeyError as e:
+            # leaf-set mismatch = the snapshot was written with a different
+            # telemetry setting (obs on/off changes the checkpoint pytree)
+            raise ValueError(
+                f"resume={str(resume)!r}: checkpoint leaf set does not "
+                f"match this grid — pass the same obs= (telemetry on/off) "
+                f"the checkpointing run used ({e})") from e
+        state = jax.tree_util.tree_map(lambda a: np.array(a), state)
+        fp = state["fingerprint"]
+        if not (np.array_equal(fp["lambdas"], fingerprint["lambdas"])
+                and np.array_equal(fp["w_digest"], fingerprint["w_digest"])
+                and np.array_equal(fp["dims"], fingerprint["dims"])
+                and float(fp["tol"]) == float(tol)):
+            raise ValueError(
+                f"resume={str(resume)!r}: the checkpoint was written by a "
+                f"different grid (lambdas / fold weights / shapes / solver "
+                f"knobs mismatch); refusing to mix solver states")
+        sched.load_state(state["sched"])
+        betas_l, Xbs_l = _put_lanes(state["lane_betas"], state["lane_xbs"])
+        bank_b, bank_x = _put_lanes(state["bank_betas"], state["bank_xbs"])
+        out_betas = jnp.asarray(state["out_betas"], dtype)
+        out_loss = jnp.asarray(state["out_loss"], dtype)
+        lams_l = np.asarray(state["lane_lams"], np.float64)
+        fold_host = np.asarray(state["lane_fold"], np.int64)
+        lamidx_host = np.where(sched.lane_lam >= 0, sched.lane_lam,
+                               0).astype(np.int64)
+        kkts_out = np.array(state["kkts_out"])
+        eps_out = np.asarray(state["eps_out"], np.int64)
+        item_done = np.asarray(state["item_done"], np.uint8)
+        times = [float(t) for t in np.atleast_1d(state["times"])]
+        occupancy = [float(v) for v in np.atleast_1d(state["occupancy"])]
+        round_idx = int(state["round"])
+        bucket = int(state["bucket"])
+        total_outer = int(state["total_outer"])
+        n_syncs = int(state["n_syncs"])
+        # report CUMULATIVE sweep counters: the resumed GridResult equals
+        # the uninterrupted run's, dispatches included
+        dispatches0 = engine.n_dispatches - int(state["n_disp"])
+        resumed_from = int(step)
+        if use_ring:
+            curves_store = {k: np.array(v)
+                            for k, v in state["curves"].items()}
+            counts_store = np.array(state["n_recorded"])
+        if obs is not None:
+            obs.registry.inc("grid.resume.count")
+            obs.registry.set_gauge("grid.resume.step", resumed_from)
+        _emit_progress(progress, event="resume", round=round_idx,
+                       step=resumed_from, items_done=int(sched.n_retired),
+                       n_items=sched.total_items)
+    else:
+        dispatches0 = engine.n_dispatches
+        betas_l, Xbs_l = _put_lanes(np.zeros((S,) + bshape),
+                                    np.zeros((S,) + xshape))
+        bank_b, bank_x = _put_lanes(np.zeros((F,) + bshape),
+                                    np.zeros((F,) + xshape))
+        out_betas = jnp.zeros((F, nlam) + bshape, dtype)
+        out_loss = jnp.zeros((F, nlam), dtype)
+        for s, f, j in sched.fill():
+            lams_l[s], fold_host[s], lamidx_host[s] = lambdas[j], f, j
+        bucket = policy.first_bucket(0, p)
+
+    def _snapshot():
+        st = {"round": np.int64(round_idx), "bucket": np.int64(bucket),
+              "total_outer": np.int64(total_outer),
+              "n_syncs": np.int64(n_syncs),
+              "n_disp": np.int64(engine.n_dispatches - dispatches0),
+              "sched": sched.state_dict(),
+              "lane_betas": betas_l, "lane_xbs": Xbs_l,
+              "lane_lams": lams_l, "lane_fold": fold_host,
+              "bank_betas": bank_b, "bank_xbs": bank_x,
+              "out_betas": out_betas, "out_loss": out_loss,
+              "kkts_out": kkts_out, "eps_out": eps_out,
+              "item_done": item_done,
+              "times": np.asarray(times, np.float64),
+              "occupancy": np.asarray(occupancy, np.float64),
+              "fingerprint": fingerprint}
+        if use_ring:
+            st["curves"] = curves_store
+            st["n_recorded"] = counts_store
+        return st
+
+    n_chunks = -(-nlam // chunk)        # nominal lower bound on rounds
+    t0 = _now()
+    dirty = True                        # lane tensors need (re)gathering
     with sp("grid", folds=F, n_lambdas=nlam, chunk=chunk):
-        for lo in range(0, nlam, chunk):
-            t_chunk = _now()
-            blk = lambdas[lo:lo + chunk]
-            C_real = len(blk)
-            # pad short tails by repeating the smallest lambda: every
-            # dispatch keeps the SAME lane count, so one compiled step per
-            # bucket serves the whole grid (padded lanes discarded below)
-            blk = np.concatenate([blk, np.full(chunk - C_real, blk[-1])])
-            lams_c = jnp.asarray(np.tile(blk, F), design.dtype)  # [F*chunk]
-            betas0, Xbs0 = rep(betas_prev), rep(Xbs_prev)
-            bucket = policy.first_bucket(gcount_prev, p)
-            iters_left = max_outer
-            chunk_eps = np.zeros(F * chunk, np.int64)
-            ring = TelemetryRing.alloc(max_outer, design.dtype,
-                                       lanes=F * chunk) if use_ring else None
-            with sp("lambda_chunk", lo=int(lo), n_lanes=F * chunk):
-                while True:
-                    out = engine.chunk(bucket, design, y, lams_c, betas0,
-                                       Xbs0, L_lanes, offset, datafit,
-                                       penalty, tol, eps_inner_frac,
-                                       iters_left, w=w_lanes, obs=ring)
-                    if ring is not None:
-                        (betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d, it_d,
-                         ring) = out
-                    else:
-                        (betas_c, Xbs_c, kkts_d, _, gcounts_d, neps_d,
-                         it_d) = out
-                    # one blocking host sync per (chunk, bucket) attempt
-                    kkts_c, gcounts_c, neps_c, it = jax.device_get(
-                        (kkts_d, gcounts_d, neps_d, it_d))
-                    n_syncs += 1
-                    iters_left -= int(it)
-                    total_outer += int(it)
-                    chunk_eps += np.asarray(neps_c, np.int64)
-                    done = bool(np.all(kkts_c <= tol))
-                    _emit_progress(
-                        progress, event="bucket", chunk=lo // chunk,
-                        n_chunks=n_chunks, bucket=bucket,
-                        lanes_converged=int(np.sum(kkts_c <= tol)),
-                        n_lanes=F * chunk, lambdas_done=lo,
-                        n_lambdas=nlam, elapsed_s=_now() - t0)
-                    if done or bucket >= p or iters_left <= 0:
-                        break
+        while not sched.done:
+            t_round = _now()
+            if dirty:
+                fold_dev = jnp.asarray(fold_host)
+                w_lanes = jnp.take(Wd, fold_dev, axis=0)
+                L_lanes = jnp.take(L_folds, fold_dev, axis=0)
+                H_lanes = jnp.take(Hd, fold_dev, axis=0)
+                lams_dev = jnp.asarray(lams_l, dtype)
+                dirty = False
+            occupancy.append(sched.occupancy)
+            mo = sched.dispatch_budget(sync_every)
+            ring = TelemetryRing.alloc(max_outer, dtype, lanes=S) \
+                if use_ring else None
+            bucket_used = bucket
+            with sp("grid_round", round=round_idx, bucket=int(bucket),
+                    n_lanes=S):
+                out = engine.chunk(bucket, design, y, lams_dev, betas_l,
+                                   Xbs_l, L_lanes, offset, datafit,
+                                   penalty, tol, eps_inner_frac, mo,
+                                   w=w_lanes, obs=ring)
+            if ring is not None:
+                (betas_l, Xbs_l, kkts_d, _, gcounts_d, neps_d, it_d,
+                 ring) = out
+            else:
+                betas_l, Xbs_l, kkts_d, _, gcounts_d, neps_d, it_d = out
+            # ONE blocking host sync per dispatch: the convergence scalars
+            # that drive the scheduler (the budget contract)
+            kkts_c, gcounts_c, neps_c, it = jax.device_get(
+                (kkts_d, gcounts_d, neps_d, it_d))
+            n_syncs += 1
+            it = int(it)
+            total_outer += it
+            rep = sched.observe(kkts_c, gcounts_c, neps_c, it, tol)
+            if ring is not None:
+                # obs-only output path (not a scheduler sync, matching the
+                # pre-§12 chunk driver's drain accounting)
+                curves, counts = ring.drain()
+                for s, r0 in zip(rep.active, rep.rec_before):
+                    f, j = int(fold_host[s]), int(lamidx_host[s])
+                    r0 = int(r0)
+                    r1 = min(r0 + it, max_outer)
+                    for k, v in curves.items():
+                        curves_store[k][f, j, r0:r1] = v[s, :r1 - r0]
+                    counts_store[f, j] = r1
+            if rep.retired:
+                # harvest retired lanes device-side: scatter into the
+                # output buffers, no host transfer mid-grid (dead lanes
+                # never reach the held-out scores — there is no padding)
+                loss_l = heldout(Xbs_l, y, H_lanes)
+                sl_np = np.array([r.slot for r in rep.retired])
+                fl = np.array([r.fold for r in rep.retired])
+                jl = np.array([r.lam_idx for r in rep.retired])
+                sl = jnp.asarray(sl_np)
+                out_betas = out_betas.at[fl, jl].set(betas_l[sl])
+                out_loss = out_loss.at[fl, jl].set(loss_l[sl])
+                kkts_out[fl, jl] = kkts_c[sl_np]
+                eps_out[fl, jl] = np.array(
+                    [r.n_epochs for r in rep.retired], np.int64)
+                item_done[fl, jl] = 1
+            if rep.bank_updates:
+                fb = np.array([u[0] for u in rep.bank_updates])
+                sb = jnp.asarray(np.array([u[1] for u in rep.bank_updates]))
+                bank_b = bank_b.at[fb].set(betas_l[sb])
+                bank_x = bank_x.at[fb].set(Xbs_l[sb])
+            assigns = sched.fill()
+            if assigns:
+                sl_np = np.array([a[0] for a in assigns])
+                fl = np.array([a[1] for a in assigns])
+                jl = np.array([a[2] for a in assigns])
+                fl_d = jnp.asarray(fl)
+                betas_l = betas_l.at[jnp.asarray(sl_np)].set(
+                    jnp.take(bank_b, fl_d, axis=0))
+                Xbs_l = Xbs_l.at[jnp.asarray(sl_np)].set(
+                    jnp.take(bank_x, fl_d, axis=0))
+                lams_l[sl_np] = lambdas[jl]
+                fold_host[sl_np] = fl
+                lamidx_host[sl_np] = jl
+                dirty = True
+            # bucket for the next dispatch: escalate when a continuing lane
+            # outgrew it; an all-retired boundary may de-escalate to what
+            # the fresh warm starts need (the old chunk-handoff behavior)
+            cont = rep.continuing
+            if len(cont):
+                if bucket < p and np.any(
+                        _GROWTH * gcounts_c[cont] > bucket):
                     bucket = max(policy.escalate(bucket, p),
                                  policy.next_bucket(
-                                     bucket, int(np.max(gcounts_c)), p))
-                    betas0, Xbs0 = betas_c, Xbs_c
-            if ring is not None:
-                curves, counts = ring.drain()
-                # [F * chunk, cap] lanes -> [F, chunk, cap], drop padding
-                ring_curves.append(
-                    {k: v.reshape(F, chunk, -1)[:, :C_real]
-                     for k, v in curves.items()})
-                ring_counts.append(
-                    np.asarray(counts).reshape(F, chunk)[:, :C_real])
-            betas_f = betas_c.reshape((F, chunk) + bshape)
-            Xbs_f = Xbs_c.reshape((F, chunk) + xshape)
-            loss_f = heldout(Xbs_f, y, Hd)            # device-side reduction
-            betas_out[:, lo:lo + C_real] = np.asarray(betas_f[:, :C_real])
-            kkts_out[:, lo:lo + C_real] = \
-                np.asarray(kkts_c).reshape(F, chunk)[:, :C_real]
-            eps_out[:, lo:lo + C_real] = \
-                chunk_eps.reshape(F, chunk)[:, :C_real]
-            loss_out[:, lo:lo + C_real] = np.asarray(loss_f)[:, :C_real]
-            betas_prev = betas_f[:, C_real - 1]
-            Xbs_prev = Xbs_f[:, C_real - 1]
-            gcount_prev = int(np.max(gcounts_c))
-            times.append(_now() - t_chunk)
-            lambdas_done = lo + C_real
+                                     bucket,
+                                     int(np.max(gcounts_c[cont])), p))
+                if assigns:
+                    bucket = max(bucket, max(
+                        policy.first_bucket(int(sched.bank_gcount[f]), p)
+                        for f in fl))
+            elif assigns:
+                bucket = max(policy.first_bucket(
+                    int(sched.bank_gcount[f]), p) for f in fl)
+            round_idx += 1
+            times.append(_now() - t_round)
             elapsed = _now() - t0
+            lambdas_done = int(np.sum(np.all(item_done == 1, axis=0)))
             _emit_progress(
-                progress, event="chunk", chunk=lo // chunk,
-                n_chunks=n_chunks, bucket=bucket,
+                progress, event="bucket", chunk=round_idx - 1,
+                n_chunks=n_chunks, bucket=int(bucket_used),
                 lanes_converged=int(np.sum(kkts_c <= tol)),
-                n_lanes=F * chunk, lambdas_done=lambdas_done,
-                n_lambdas=nlam, elapsed_s=elapsed,
-                eta_s=elapsed / lambdas_done * (nlam - lambdas_done))
+                n_lanes=S, lambdas_done=lambdas_done, n_lambdas=nlam,
+                elapsed_s=elapsed)
+            if rep.retired:
+                _emit_progress(
+                    progress, event="chunk", chunk=round_idx - 1,
+                    n_chunks=n_chunks, bucket=int(bucket_used),
+                    lanes_converged=int(np.sum(kkts_c <= tol)),
+                    n_lanes=S, lambdas_done=lambdas_done,
+                    n_lambdas=nlam, elapsed_s=elapsed,
+                    eta_s=elapsed / max(lambdas_done, 1)
+                    * (nlam - lambdas_done))
+            if ckpt is not None and round_idx % ckpt.every == 0 \
+                    and not sched.done:
+                with sp("grid_checkpoint", round=round_idx):
+                    ckpt.save(_snapshot(), round_idx)
 
+    if ckpt is not None:
+        ckpt.wait()                     # surface async write errors here
+    betas_np, loss_np = jax.device_get((out_betas, out_loss))
+    betas_out = np.array(betas_np, np.float64)
+    loss_out = np.array(loss_np, np.float64)
     loss_out[~valid_fold] = np.nan
     cv_mean = np.mean(loss_out[valid_fold], axis=0) if valid_fold.any() \
         else np.full(nlam, np.nan)
     cv_std = np.std(loss_out[valid_fold], axis=0) if valid_fold.any() \
         else np.full(nlam, np.nan)
     best = int(np.argmin(cv_mean)) if np.isfinite(cv_mean).any() else 0
+    occ = np.asarray(occupancy)
     grid = GridResult(lambdas=lambdas, betas=betas_out, cv_loss=loss_out,
                       cv_mean=cv_mean, cv_std=cv_std, best_index=best,
                       best_lambda=float(lambdas[best]), kkts=kkts_out,
                       n_epochs=eps_out, fold_weights=W, n_outer=total_outer,
-                      times=np.asarray(times),
+                      times=np.asarray(times), occupancy=occ,
+                      n_rounds=round_idx, resumed_from=resumed_from,
                       retraces=dict(engine.retraces),
                       n_dispatches=engine.n_dispatches - dispatches0,
                       n_host_syncs=n_syncs)
@@ -878,14 +1142,19 @@ def cross_val_path(X, y, datafit=None, penalty=None, *, lambdas=None,
     reg.set_counter("grid.n_host_syncs", n_syncs)
     reg.set_counter("grid.n_dispatches", grid.n_dispatches)
     reg.set_counter("grid.n_outer", total_outer)
+    reg.set_counter("grid.n_rounds", round_idx)
     reg.set_mapping("grid.retraces", dict(engine.retraces))
-    if ring_curves:
-        grid.diagnostics.curves.update(
-            {k: np.concatenate([c[k] for c in ring_curves], axis=1)
-             for k in ring_curves[0]})
-        grid.diagnostics.n_recorded = np.concatenate(ring_counts, axis=1)
+    reg.set_gauge("grid.lane_occupancy",
+                  float(occ.mean()) if occ.size else 1.0)
+    for v in occupancy:
+        reg.observe("grid.occupancy", float(v))
+    if curves_store is not None:
+        grid.diagnostics.curves.update(curves_store)
+        grid.diagnostics.n_recorded = counts_store
     if obs is not None:
         obs.registry.inc("grid.count")
+        obs.registry.set_gauge("grid.lane_occupancy",
+                               float(occ.mean()) if occ.size else 1.0)
         obs.note_solve(grid.diagnostics)
     return grid
 

@@ -183,6 +183,22 @@ def weight_spec(data_axis="data", n_lanes: int = 0) -> P:
     return P(None, data_axis) if n_lanes else P(data_axis)
 
 
+def grid_lane_specs(data_axis="data", model_axis="model", n_tasks: int = 0):
+    """(beta_spec, xb_spec) of the grid driver's per-lane solver state
+    (DESIGN.md §12): the lane axis in front is replicated (lanes are the
+    vmapped grid cells), coefficients ``[S, p(, T)]`` shard features over
+    the model axis and residuals ``[S, n(, T)]`` shard samples over the
+    data axis, exactly like the un-laned solver state in `design_specs`.
+    These are the device_put targets of a grid-checkpoint restore — a
+    snapshot written on one mesh lands on any other mesh through them
+    (save/restore is sharding-agnostic, repro.checkpoint)."""
+    beta = P(None, model_axis)
+    xb = P(None, data_axis)
+    if n_tasks:
+        beta, xb = P(*beta, None), P(*xb, None)
+    return beta, xb
+
+
 def ring_spec() -> P:
     """Spec of every telemetry-ring leaf under the mesh (repro.obs.rings,
     DESIGN.md §11.1): fully replicated. Everything the fused step records —

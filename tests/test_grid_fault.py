@@ -1,0 +1,479 @@
+"""Fault-tolerant grid solves (DESIGN.md §12).
+
+Covers the checkpoint/resume + lane-scheduler acceptance criteria:
+  * kill-at-every-chunk resume equivalence: a grid preempted by a synthetic
+    restartable failure after round k — for EVERY k — and driven back
+    through ``GridSupervisor`` produces the bit-identical ``GridResult``
+    (betas, held-out losses, kkts, epoch counts, AND the sweep counters:
+    cumulative dispatches/syncs/outers equal the uninterrupted run's, i.e.
+    the resumed segment re-dispatches nothing it already paid for);
+  * the same bit-for-bit guarantee through the CSC engine, and <= 1e-10
+    across a mesh-shape change (checkpoints are sharding-agnostic: save
+    dense, resume on a 1x1 mesh in-process; save 1x1, resume 2x4 in the
+    subprocess smoke — the CI `fault` job runs it on 8 forced host devices);
+  * the lane scheduler retires converged lanes and backfills from the
+    (fold, lambda) queue in slot order, banks the densest completed
+    solution per fold, and reports occupancy;
+  * ``GridSupervisor``: bounded exponential backoff on restartable
+    failures, immediate re-raise of real bugs, restart-budget exhaustion;
+  * tail rounds with dead lanes (lane pool not dividing the work queue)
+    leak nothing into held-out scores or telemetry.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointConfig, FaultToleranceConfig,
+                              GridSupervisor, latest_step)
+from repro.core import L1, Quadratic, cross_val_path, lambda_max
+from repro.core.lanes import LaneScheduler
+from repro.data.synth import make_correlated_design
+from repro.launch.mesh import make_solver_mesh
+from repro.sparse import CSCDesign
+
+
+@pytest.fixture(scope="module")
+def grid_data():
+    X, y, _ = make_correlated_design(n=120, p=200, n_nonzero=10, rho=0.5,
+                                     seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    lams = lambda_max(X, y) * np.geomspace(1.0, 0.05, 6)
+    return X, y, lams
+
+
+def _run_grid(X, y, lams, **kw):
+    kw.setdefault("cv", 3)
+    kw.setdefault("vmap_chunk", 2)
+    kw.setdefault("tol", 1e-10)
+    kw.setdefault("seed", 0)
+    kw.setdefault("sync_every", 4)
+    return cross_val_path(X, y, Quadratic(), L1(1.0), lambdas=lams, **kw)
+
+
+class _Preempt(RuntimeError):
+    """Synthetic restartable failure (message carries a fault token)."""
+
+    def __init__(self, k):
+        super().__init__(f"UNAVAILABLE: pod preempted after round {k}")
+
+
+def _killer(kill_after):
+    """Progress callback that preempts the run after `kill_after` dispatch
+    rounds — once: the retry (resumed) attempt runs to completion."""
+    state = {"rounds": 0, "armed": True}
+
+    def cb(info):
+        if info.get("event") == "bucket":
+            state["rounds"] += 1
+            if state["armed"] and state["rounds"] >= kill_after:
+                state["armed"] = False
+                raise _Preempt(kill_after)
+
+    return cb
+
+
+def _assert_grids_identical(g, ref):
+    np.testing.assert_array_equal(g.betas, ref.betas)
+    np.testing.assert_array_equal(g.cv_loss, ref.cv_loss)
+    np.testing.assert_array_equal(g.cv_mean, ref.cv_mean)
+    np.testing.assert_array_equal(g.cv_std, ref.cv_std)
+    np.testing.assert_array_equal(g.kkts, ref.kkts)
+    np.testing.assert_array_equal(g.n_epochs, ref.n_epochs)
+    assert g.best_index == ref.best_index
+    assert g.n_outer == ref.n_outer
+    assert g.n_rounds == ref.n_rounds
+    # the resumed segment re-dispatches NOTHING already paid for: the
+    # cumulative counters equal the uninterrupted run's
+    assert g.n_dispatches == ref.n_dispatches
+    assert g.n_host_syncs == ref.n_host_syncs
+
+
+# --------------------------------------------------- kill-at-every-round
+def test_kill_at_every_round_resume_equivalence(grid_data, tmp_path):
+    """Preempt after round k for EVERY k in the grid, resume through the
+    supervisor, and demand the bit-identical GridResult each time."""
+    X, y, lams = grid_data
+    ref = _run_grid(X, y, lams)
+    assert ref.n_rounds >= 3, "fixture too easy to exercise the sweep"
+    for k in range(1, ref.n_rounds + 1):
+        ckdir = str(tmp_path / f"kill_{k}")
+        kill = _killer(k)
+
+        def grid_fn(resume):
+            return _run_grid(
+                X, y, lams, progress=kill,
+                checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                            async_save=False),
+                resume=resume)
+
+        sup = GridSupervisor(ckdir, FaultToleranceConfig(max_restarts=3),
+                             sleep_fn=lambda s: None)
+        g = sup.run(grid_fn)
+        assert sup.restarts == 1, f"kill at round {k}"
+        # k=1 dies before the first snapshot: the supervisor restarts from
+        # scratch; every later k restores a real checkpoint
+        assert (g.resumed_from is None) == (k == 1)
+        _assert_grids_identical(g, ref)
+
+
+def test_kill_resume_csc_bit_identical(grid_data, tmp_path):
+    """Same preempt/resume round trip through the CSC engine."""
+    import scipy.sparse as sp
+    rng = np.random.default_rng(2)
+    Xs = sp.random(120, 160, density=0.1, random_state=2, format="csc")
+    beta = np.zeros(160)
+    beta[:8] = rng.standard_normal(8)
+    y = jnp.asarray(np.asarray(Xs @ beta) + 0.1 * rng.standard_normal(120))
+    lams = lambda_max(CSCDesign.from_scipy(Xs), y) * \
+        np.geomspace(1.0, 0.1, 5)
+    ref = _run_grid(Xs, y, lams)
+    k = max(2, ref.n_rounds // 2)
+    ckdir = str(tmp_path / "csc")
+    kill = _killer(k)
+
+    def grid_fn(resume):
+        return _run_grid(
+            Xs, y, lams, progress=kill,
+            checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                        async_save=False),
+            resume=resume)
+
+    sup = GridSupervisor(ckdir, FaultToleranceConfig(),
+                         sleep_fn=lambda s: None)
+    g = sup.run(grid_fn)
+    assert sup.restarts == 1 and g.resumed_from is not None
+    _assert_grids_identical(g, ref)
+
+
+def test_resume_onto_different_mesh(grid_data, tmp_path):
+    """Checkpoints are sharding-agnostic: save from a dense (no-mesh) run,
+    resume on a 1x1 mesh — whose program IS the dense program — and the
+    result stays bit-identical to the uninterrupted dense grid."""
+    X, y, lams = grid_data
+    ref = _run_grid(X, y, lams)
+    k = max(2, ref.n_rounds // 2)
+    ckdir = str(tmp_path / "mesh")
+    with pytest.raises(_Preempt):
+        _run_grid(X, y, lams, progress=_killer(k),
+                  checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                              async_save=False))
+    assert latest_step(ckdir) is not None
+    g = _run_grid(X, y, lams, resume=ckdir,
+                  mesh=make_solver_mesh((1, 1)))
+    assert g.resumed_from is not None
+    _assert_grids_identical(g, ref)
+
+
+def test_resume_rejects_foreign_checkpoint(grid_data, tmp_path):
+    """A checkpoint written by a different grid (other lambdas) must be
+    refused, not silently mixed into the wrong solve."""
+    X, y, lams = grid_data
+    ckdir = str(tmp_path / "foreign")
+    with pytest.raises(_Preempt):
+        _run_grid(X, y, lams, progress=_killer(1),
+                  checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                              async_save=False))
+    # k=1 leaves no snapshot; write one at round 2 instead
+    with pytest.raises(_Preempt):
+        _run_grid(X, y, lams, progress=_killer(2),
+                  checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                              async_save=False))
+    with pytest.raises(ValueError, match="different grid"):
+        _run_grid(X, y, lams * 0.5, resume=ckdir)
+
+
+def test_resume_emits_event_and_metrics(grid_data, tmp_path):
+    """The resumed run announces itself: a 'resume' progress event and the
+    grid.resume.* observability counters. Telemetry is part of the
+    checkpoint pytree, so the obs= setting must match across the restart
+    (a mismatch is refused with a clear error, not a KeyError)."""
+    from repro.obs import Obs
+    X, y, lams = grid_data
+    ckdir = str(tmp_path / "events")
+    with pytest.raises(_Preempt):
+        _run_grid(X, y, lams, progress=_killer(2), obs=Obs(),
+                  checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                              async_save=False))
+    with pytest.raises(ValueError, match="different grid|obs"):
+        _run_grid(X, y, lams, resume=ckdir)         # telemetry off: refuse
+    events = []
+    obs = Obs()
+    g = _run_grid(X, y, lams, resume=ckdir, progress=events.append, obs=obs)
+    kinds = [e.get("event") for e in events]
+    assert kinds[0] == "resume"
+    assert events[0]["step"] == g.resumed_from
+    assert obs.registry.counter("grid.resume.count") == 1
+    assert obs.registry.gauge("grid.resume.step") == float(g.resumed_from)
+
+
+# ------------------------------------------------------- lane scheduler
+def test_scheduler_queue_is_lambda_major():
+    s = LaneScheduler(n_folds=3, n_lambdas=4, n_lanes=6, max_outer=10)
+    first = s.fill()
+    # slots 0..5 get items 0..5: all folds of lambda 0, then lambda 1
+    assert first == [(0, 0, 0), (1, 1, 0), (2, 2, 0),
+                     (3, 0, 1), (4, 1, 1), (5, 2, 1)]
+    assert s.occupancy == 1.0 and not s.done
+
+
+def test_scheduler_retire_backfill_and_bank():
+    s = LaneScheduler(n_folds=2, n_lambdas=3, n_lanes=4, max_outer=10)
+    s.fill()                                    # items (f,j): 00 10 01 11
+    kkts = np.array([0.0, 1.0, 0.0, 1.0])       # slots 0, 2 converge
+    rep = s.observe(kkts, gcounts=np.array([4, 8, 16, 8]),
+                    n_eps=np.array([3, 5, 7, 9]), it=2, tol=1e-9)
+    assert [(r.slot, r.fold, r.lam_idx) for r in rep.retired] == \
+        [(0, 0, 0), (2, 0, 1)]
+    assert all(r.converged for r in rep.retired)
+    assert [r.n_epochs for r in rep.retired] == [3, 7]
+    np.testing.assert_array_equal(rep.continuing, [1, 3])
+    # the bank takes fold 0's DENSEST retiree (lam_idx 1, slot 2) only
+    assert rep.bank_updates == [(0, 2, 1)]
+    assert s.bank_lam[0] == 1 and s.bank_gcount[0] == 16
+    assert s.bank_lam[1] == -1
+    # freed slots backfill from the queue head in slot order
+    assert s.fill() == [(0, 0, 2), (2, 1, 2)]
+    assert s.occupancy == 1.0
+    # continuing lanes carried their budget; fresh lanes got a full one
+    np.testing.assert_array_equal(s.lane_left, [10, 8, 10, 8])
+
+
+def test_scheduler_budget_exhaustion_retires_unconverged():
+    s = LaneScheduler(n_folds=1, n_lambdas=2, n_lanes=2, max_outer=4)
+    s.fill()
+    assert s.dispatch_budget(8) == 4            # capped by the item budget
+    rep = s.observe(np.array([1.0, 1.0]), np.array([2, 2]),
+                    np.array([1, 1]), it=4, tol=1e-9)
+    assert len(rep.retired) == 2
+    assert not any(r.converged for r in rep.retired)
+    assert s.done and s.fill() == []
+    with pytest.raises(RuntimeError, match="no active lanes"):
+        s.dispatch_budget(8)
+
+
+def test_scheduler_dead_lanes_when_queue_drains():
+    s = LaneScheduler(n_folds=2, n_lambdas=2, n_lanes=4, max_outer=10)
+    s.fill()                                    # queue fully in flight
+    rep = s.observe(np.zeros(4), np.ones(4), np.ones(4), it=1, tol=1e-9)
+    assert len(rep.retired) == 3 or len(rep.retired) == 4
+    # nothing left to hand out: freed slots stay dead, occupancy drops
+    rep2 = s.fill()
+    assert rep2 == [] and s.occupancy < 1.0 or s.done
+
+
+def test_scheduler_state_roundtrip_and_validation():
+    s = LaneScheduler(n_folds=2, n_lambdas=5, n_lanes=4, max_outer=7)
+    s.fill()
+    s.observe(np.array([0.0, 1.0, 1.0, 0.0]), np.arange(4),
+              np.arange(4), it=3, tol=1e-9)
+    s.fill()
+    state = s.state_dict()
+    t = LaneScheduler(n_folds=2, n_lambdas=5, n_lanes=4, max_outer=7)
+    t.load_state(state)
+    for k, v in t.state_dict().items():
+        np.testing.assert_array_equal(v, state[k], err_msg=k)
+    bad = dict(state, lane_fold=np.zeros(3, np.int64))
+    with pytest.raises(ValueError, match="lane_fold"):
+        t.load_state(bad)
+    with pytest.raises(ValueError, match="n_lanes"):
+        LaneScheduler(n_folds=2, n_lambdas=2, n_lanes=5, max_outer=7)
+
+
+# -------------------------------------------------------- grid supervisor
+def test_grid_supervisor_backoff_is_bounded(tmp_path):
+    sleeps, calls = [], {"n": 0}
+
+    def grid_fn(resume):
+        calls["n"] += 1
+        if calls["n"] <= 4:
+            raise RuntimeError("NCCL collective aborted")
+        return "done"
+
+    sup = GridSupervisor(str(tmp_path),
+                         FaultToleranceConfig(max_restarts=10, backoff_s=1.0,
+                                              backoff_cap_s=4.0),
+                         sleep_fn=sleeps.append)
+    assert sup.run(grid_fn) == "done"
+    assert sup.restarts == 4
+    assert sleeps == [1.0, 2.0, 4.0, 4.0]       # doubling, then capped
+
+
+def test_grid_supervisor_reraises_bugs(tmp_path):
+    def grid_fn(resume):
+        raise ValueError("shape mismatch: a bug, not a fault")
+
+    sup = GridSupervisor(str(tmp_path), sleep_fn=lambda s: None)
+    with pytest.raises(ValueError, match="a bug"):
+        sup.run(grid_fn)
+    assert sup.restarts == 0
+
+
+def test_grid_supervisor_exhausts_restart_budget(tmp_path):
+    def grid_fn(resume):
+        raise RuntimeError("DEADLINE_EXCEEDED: barrier timeout")
+
+    sup = GridSupervisor(str(tmp_path), FaultToleranceConfig(max_restarts=2),
+                         sleep_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run(grid_fn)
+    assert sup.restarts == 3
+
+
+def test_grid_supervisor_passes_resume_dir(tmp_path):
+    """Only once a checkpoint exists does the supervisor resume from it."""
+    from repro.checkpoint import save_pytree
+    seen = []
+
+    def grid_fn(resume):
+        seen.append(resume)
+        if len(seen) == 1:
+            raise RuntimeError("UNAVAILABLE: preempted")
+        if len(seen) == 2:
+            save_pytree({"x": np.zeros(2)}, str(tmp_path), 3)
+            raise RuntimeError("UNAVAILABLE: preempted again")
+        return "ok"
+
+    sup = GridSupervisor(str(tmp_path), sleep_fn=lambda s: None)
+    assert sup.run(grid_fn) == "ok"
+    assert seen == [None, None, str(tmp_path)]
+
+
+# ------------------------------------------------- tail rounds / dead lanes
+def test_dead_lanes_never_reach_outputs(grid_data):
+    """A lane pool that does not divide the work queue leaves dead slots in
+    the tail rounds; their state must leak into nothing: every (fold,
+    lambda) score equals the host-recomputed held-out loss and telemetry
+    rows exist only for real items."""
+    from repro.obs import Obs
+    X, y, _ = grid_data
+    lams = lambda_max(X, y) * np.geomspace(1.0, 0.05, 5)
+    obs = Obs()
+    g = _run_grid(X, y, lams, vmap_chunk=2, obs=obs)   # S=6 lanes, 15 items
+    assert g.occupancy.min() < 1.0, "tail rounds should under-fill"
+    assert np.all(g.kkts <= 1e-10)
+    Xn, yn = np.asarray(X), np.asarray(y)
+    for f in range(3):
+        held = g.fold_weights[f] == 0
+        for j in range(5):
+            r = yn[held] - Xn[held] @ g.betas[f, j]
+            assert abs(g.cv_loss[f, j] - 0.5 * np.mean(r * r)) < 1e-10, \
+                (f, j)
+    # telemetry: one row span per REAL item, none for dead slots
+    d = g.diagnostics
+    assert d.n_recorded.shape == (3, 5)
+    assert np.all(d.n_recorded > 0)
+    last = np.take_along_axis(
+        d.curves["kkt"], (d.n_recorded[..., None] - 1), axis=-1)[..., 0]
+    np.testing.assert_allclose(last, g.kkts, atol=0)
+
+
+def test_occupancy_metrics_recorded(grid_data):
+    from repro.obs import Obs
+    X, y, lams = grid_data
+    obs = Obs()
+    g = _run_grid(X, y, lams, obs=obs)
+    assert g.occupancy.shape == (g.n_rounds,)
+    assert np.all((g.occupancy > 0) & (g.occupancy <= 1.0))
+    reg = g.diagnostics.registry
+    assert reg.counter("grid.n_rounds") == g.n_rounds
+    assert reg.gauge("grid.lane_occupancy") == \
+        pytest.approx(float(g.occupancy.mean()))
+    assert obs.registry.gauge("grid.lane_occupancy") == \
+        pytest.approx(float(g.occupancy.mean()))
+
+
+# ------------------------------------------------- CV estimator forwarding
+def test_estimator_forwards_checkpoint_and_resume(grid_data, tmp_path):
+    from repro.core import LassoCV
+    X, y, lams = grid_data
+    ckdir = str(tmp_path / "est")
+    est = LassoCV(alphas=lams, cv=3, vmap_chunk=2, tol=1e-10,
+                  checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                              async_save=False))
+    est.fit(np.asarray(X), np.asarray(y))
+    assert latest_step(ckdir) is None or latest_step(ckdir) >= 1
+    ref = est.grid_result_
+    # a second estimator resuming from the final snapshot (if any round was
+    # saved) must agree with the uninterrupted sweep
+    if latest_step(ckdir) is not None:
+        est2 = LassoCV(alphas=lams, cv=3, vmap_chunk=2, tol=1e-10,
+                       resume=ckdir)
+        est2.fit(np.asarray(X), np.asarray(y))
+        assert est2.alpha_ == est.alpha_
+    with pytest.raises(ValueError, match="criterion"):
+        LassoCV(alphas=lams, criterion="bic", resume=ckdir)
+
+
+# ------------------------------------------------- mesh-reshape subprocess
+_RESHAPE_TEST = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.checkpoint import CheckpointConfig
+from repro.core import L1, Quadratic, cross_val_path, lambda_max
+from repro.data.synth import make_correlated_design
+from repro.launch.mesh import make_solver_mesh
+
+X, y, _ = make_correlated_design(n=120, p=256, n_nonzero=10, seed=0)
+X, y = jnp.asarray(X), jnp.asarray(y)
+lams = lambda_max(X, y) * np.geomspace(1.0, 0.1, 4)
+kw = dict(cv=3, vmap_chunk=2, tol=1e-11, seed=0, sync_every=4)
+ref = cross_val_path(X, y, Quadratic(), L1(1.0), lambdas=lams, **kw)
+
+class Boom(RuntimeError):
+    pass
+
+state = {"n": 0}
+def kill(info):
+    if info.get("event") == "bucket":
+        state["n"] += 1
+        if state["n"] == max(2, ref.n_rounds // 2):
+            raise Boom()
+
+ckdir = "/tmp/grid_reshape_ck"
+import shutil; shutil.rmtree(ckdir, ignore_errors=True)
+mesh11 = make_solver_mesh((1, 1))
+try:
+    cross_val_path(X, y, Quadratic(), L1(1.0), lambdas=lams, mesh=mesh11,
+                   progress=kill,
+                   checkpoint=CheckpointConfig(ckdir, every_n_chunks=1,
+                                               async_save=False), **kw)
+    raise SystemExit("kill did not fire")
+except Boom:
+    pass
+mesh24 = make_solver_mesh((2, 4))
+g = cross_val_path(X, y, Quadratic(), L1(1.0), lambdas=lams, mesh=mesh24,
+                   resume=ckdir, **kw)
+assert g.resumed_from is not None
+diff = float(np.max(np.abs(g.betas - ref.betas)))
+ldiff = float(np.max(np.abs(g.cv_loss - ref.cv_loss)))
+assert diff < 1e-10, f"1x1->2x4 resume beta diff {diff}"
+assert ldiff < 1e-10, f"1x1->2x4 resume loss diff {ldiff}"
+assert g.n_dispatches == ref.n_dispatches
+print("GRID-RESHAPE-SMOKE-OK", diff, ldiff)
+"""
+
+
+@pytest.mark.skipif(len(jax.devices()) >= 8,
+                    reason="runs in-process on 8 devices")
+def test_grid_resume_mesh_reshape_subprocess():
+    """Acceptance: save the grid mid-flight on a 1x1 mesh, resume on a real
+    2x4 mesh, <= 1e-10 vs the uninterrupted run with zero extra dispatches
+    (forced host devices must be set before jax initializes, hence the
+    subprocess)."""
+    env = {**os.environ, "PYTHONPATH": "src"}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _RESHAPE_TEST],
+                       capture_output=True, text=True, timeout=900, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    assert "GRID-RESHAPE-SMOKE-OK" in r.stdout

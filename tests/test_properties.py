@@ -122,3 +122,75 @@ if HAVE_HYPOTHESIS:
         # objective history is monotone regardless
         assert all(b <= a + 1e-10 for a, b in
                    zip(res.obj_history, res.obj_history[1:]))
+
+    # ------------------------------------------------- checkpoint invariants
+    _CKPT_DTYPES = (np.float32, np.float64, np.int32, np.int64, np.uint8)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           n_leaves=st.integers(min_value=1, max_value=6),
+           name_len=st.integers(min_value=1, max_value=160),
+           step=st.integers(min_value=1, max_value=10_000))
+    def test_checkpoint_roundtrip_arbitrary_pytrees(seed, n_leaves,
+                                                    name_len, step):
+        """save/restore is a bitwise identity on arbitrary nested pytrees —
+        any dtype (bfloat16 included), any nesting, and leaf names past the
+        filename limit (the >120-char hash path)."""
+        import tempfile
+        import jax.numpy as jnp
+        from repro.checkpoint import restore_pytree, save_pytree
+
+        rng = np.random.default_rng(seed)
+        tree = {"n" * name_len: jnp.asarray(
+            rng.standard_normal((3, 2)), jnp.bfloat16)}
+        node = tree
+        for i in range(n_leaves):
+            dt = _CKPT_DTYPES[int(rng.integers(len(_CKPT_DTYPES)))]
+            shape = tuple(rng.integers(1, 4, size=int(rng.integers(0, 3))))
+            arr = (rng.standard_normal(shape) * 10).astype(dt)
+            node[f"leaf_{i}"] = [arr, np.int64(i)] if i % 2 else arr
+            if i % 3 == 2:                       # deepen the nesting
+                node[f"sub_{i}"] = {}
+                node = node[f"sub_{i}"]
+        with tempfile.TemporaryDirectory() as d:
+            save_pytree(tree, d, step)
+            restored, got = restore_pytree(tree, d)
+        assert got == step
+        la = jax.tree_util.tree_leaves(tree)
+        lb = jax.tree_util.tree_leaves(restored)
+        assert len(la) == len(lb)
+        for a, b in zip(la, lb):
+            a, b = np.asarray(a), np.asarray(b)
+            assert a.dtype == b.dtype and a.shape == b.shape
+            # bitwise: compare same-width uint views (bf16/NaN safe)
+            w = np.dtype(f"u{a.dtype.itemsize}")
+            np.testing.assert_array_equal(a.view(w), b.view(w))
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           steps=st.lists(st.integers(min_value=1, max_value=500),
+                          min_size=1, max_size=4, unique=True),
+           junk=st.integers(min_value=1, max_value=500))
+    def test_checkpoint_ignores_leftover_tmp_dirs(seed, steps, junk):
+        """A crash mid-save leaves a ``step_N.tmp`` (and possibly a bare
+        directory without a manifest); ``latest_step`` must resolve to the
+        newest COMPLETE snapshot and restore must read it."""
+        import os
+        import tempfile
+        from repro.checkpoint import latest_step, restore_pytree, save_pytree
+
+        rng = np.random.default_rng(seed)
+        tree = {"x": rng.standard_normal(4), "s": np.int64(0)}
+        with tempfile.TemporaryDirectory() as d:
+            assert latest_step(d) is None
+            for s in steps:
+                save_pytree({"x": rng.standard_normal(4),
+                             "s": np.int64(s)}, d, s)
+            # simulate torn writes: a .tmp staging dir and a manifest-less
+            # directory, both numerically newer than every real snapshot
+            os.makedirs(os.path.join(d, f"step_{max(steps) + junk}.tmp"))
+            os.makedirs(os.path.join(d, f"step_{max(steps) + junk + 1}"))
+            assert latest_step(d) == max(steps)
+            restored, got = restore_pytree(tree, d)
+        assert got == max(steps)
+        assert int(restored["s"]) == max(steps)
