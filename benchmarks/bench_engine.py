@@ -11,6 +11,12 @@ materializing the dense X. ``fig4_meeg`` measures the block-coordinate
 30-lambda Lasso CV grid (150 simultaneous solves, every fold a 0/1 weight
 leaf on shared data) through the chunked fused step — one compile per
 working-set bucket, well under 1 dispatch + 1 sync per outer iteration.
+``serve_fig`` measures the serving surface (DESIGN.md §13): a
+SparseModelServer bank of synthetic cohort models under a replayed
+open-loop request stream — steady-state p50/p99 latency, throughput, and
+the compile-once-per-(batch, support)-bucket proof. Every entry records
+``compile_s`` (cold pass, compiles included) and ``steady_s`` (warm
+caches) separately; ``wall_s`` is the steady-state alias.
 
 ``PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--out PATH]``
 
@@ -23,7 +29,10 @@ exceeds ``budget_fused_bytes_ratio`` (0.6) of the two-pass baseline
 (DESIGN.md §10), or when the ``telemetry_overhead`` record shows the
 device-side telemetry rings (DESIGN.md §11) adding any extra jit dispatch
 or more than ``BUDGET_TELEMETRY_OVERHEAD`` (2%) wall time over the
-obs=None solve at the smoke shapes. The ``pallas_fused`` block records before (jax two-pass) /
+obs=None solve at the smoke shapes, when the ``serve_fig`` p99 latency
+exceeds the committed ``budget_p99_ms``, or when any serving (batch,
+support) bucket pair compiled more than once.
+The ``pallas_fused`` block records before (jax two-pass) /
 after (Pallas fused kernel) wall clocks at the smoke shapes plus the modeled
 bytes-per-outer; the ``roofline`` block is the full per-stage table printed
 by ``benchmarks/roofline_report.py``.
@@ -160,16 +169,44 @@ CV_CONFIGS = {
 }
 
 
+# the serving-side benchmark (DESIGN.md §13): a SparseModelServer bank of
+# n_models synthetic sparse cohort models under a replayed open-loop request
+# stream with mixed batch sizes. Two identical passes — the first compiles
+# (one fused step per (batch_bucket, support_bucket) pair), the second
+# measures steady-state p50/p99 latency and throughput; --check-budget
+# enforces the recorded p99 latency budget and that the steady pass added
+# ZERO compiles (max_compiles_per_key stays 1).
+SERVE_CONFIGS = {
+    "small": {
+        "serve_fig": dict(n_models=1000, p=512, nnz_lo=4, nnz_hi=40,
+                          n_requests=600, flush_every=8,
+                          batch_sizes=(1, 2, 5, 9, 17, 33, 3, 12, 7, 28),
+                          budget_p99_ms=250.0),
+    },
+    "smoke": {
+        "serve_fig": dict(n_models=200, p=256, nnz_lo=4, nnz_hi=24,
+                          n_requests=150, flush_every=6,
+                          batch_sizes=(1, 3, 8, 17, 5, 12),
+                          budget_p99_ms=250.0),
+    },
+}
+
+
 def _timed_solve(X, y, datafit, penalty, mesh, tol, use_kernels=False):
-    """The shared measurement protocol: compile warm-up, best-of-3 timed
-    solves, per-outer dispatch/sync telemetry. One protocol for every
-    benchmark (scalar, sparse, multitask) so budget semantics can't fork.
-    ``use_kernels=True`` routes through the Pallas backend (the fused
-    score/select/gather head on dense designs)."""
+    """The shared measurement protocol: one timed compile pass, best-of-3
+    timed steady solves, per-outer dispatch/sync telemetry. One protocol
+    for every benchmark (scalar, sparse, multitask) so budget semantics
+    can't fork. Every entry records ``compile_s`` (the cold first solve,
+    compiles included) and ``steady_s`` (best-of-3 with warm caches)
+    separately; ``wall_s`` is kept as an alias of ``steady_s`` for older
+    readers. ``use_kernels=True`` routes through the Pallas backend (the
+    fused score/select/gather head on dense designs)."""
     kw = dict(tol=tol, max_outer=100)
     engine = make_engine(penalty, datafit, mesh=mesh,
                          use_kernels=use_kernels)
-    solve(X, y, datafit, penalty, engine=engine, **kw)       # compile
+    t0 = time.perf_counter()
+    solve(X, y, datafit, penalty, engine=engine, **kw)       # compile pass
+    compile_s = time.perf_counter() - t0
     wall = float("inf")
     for _ in range(3):                                       # best of 3
         engine.n_dispatches = 0
@@ -179,6 +216,8 @@ def _timed_solve(X, y, datafit, penalty, mesh, tol, use_kernels=False):
     iters = max(len(res.kkt_history), 1)
     return {
         "wall_s": wall,
+        "compile_s": compile_s,
+        "steady_s": wall,
         "n_outer": res.n_outer,
         "n_epochs": res.n_epochs,
         "kkt": res.kkt,
@@ -232,7 +271,9 @@ def _measure_cv(cfg):
     """Weighted-grid engine measurement: the simultaneous CV Lasso grid.
 
     Two passes on one fresh engine — the first compiles (one program per
-    bucket), the second measures the steady-state wall clock and the
+    bucket) and is timed as ``compile_s``, the second measures the
+    steady-state wall clock (``steady_s``; ``wall_s`` is its alias — the
+    historical single ``wall_s`` conflated the two) and the
     dispatch/sync-per-outer budget the grid contract promises."""
     from repro.core.path import cross_val_path
 
@@ -245,12 +286,16 @@ def _measure_cv(cfg):
     engine = make_engine(L1(1.0), Quadratic(), shared=False)
     kw = dict(n_lambdas=n_lambdas, lambda_min_ratio=ratio, cv=cv, tol=tol,
               vmap_chunk=vmap_chunk, engine=engine, seed=0)
+    t0 = time.perf_counter()
     cross_val_path(X, y, Quadratic(), L1(1.0), **kw)         # compile pass
+    compile_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     g = cross_val_path(X, y, Quadratic(), L1(1.0), **kw)     # measured pass
     wall = time.perf_counter() - t0
     return {
         "wall_s": wall,
+        "compile_s": compile_s,
+        "steady_s": wall,
         "n_outer": g.n_outer,
         "n_solves": int(np.prod(g.cv_loss.shape)),
         "kkt": float(np.max(g.kkts)),
@@ -264,6 +309,80 @@ def _measure_cv(cfg):
         "retraces": {str(k): v for k, v in engine.retraces.items()},
         "shape": [cfg["n"], cfg["p"]],
         "grid": f"{cv}x{n_lambdas}",
+    }
+
+
+def _measure_serve(cfg):
+    """SparseModelServer under a replayed open-loop request stream.
+
+    Admits ``n_models`` synthetic sparse cohort models (uniform support
+    sizes in [nnz_lo, nnz_hi] — several support buckets), then replays the
+    SAME request schedule twice: mixed batch sizes from ``batch_sizes``,
+    a flush every ``flush_every`` submissions (the micro-batch quantum).
+    The first pass is the compile pass (``compile_s``); latency/dispatch
+    telemetry is then reset and the second pass measures steady state —
+    p50/p99 request latency from the server's own histogram, throughput
+    in rows/s, and the compile-count proof (the steady pass must add zero
+    compiles: ``max_compiles_per_key`` stays 1)."""
+    from repro.serve import SparseModelServer
+
+    rng = np.random.default_rng(0)
+    n_models, p = cfg["n_models"], cfg["p"]
+    srv = SparseModelServer(p=p, batch_minimum=8, support_minimum=8)
+    t0 = time.perf_counter()
+    for i in range(n_models):
+        nnz = int(rng.integers(cfg["nnz_lo"], cfg["nnz_hi"] + 1))
+        coef = np.zeros(p)
+        coef[rng.choice(p, nnz, replace=False)] = rng.standard_normal(nnz)
+        srv.admit(f"m{i}", coef, intercept=float(rng.standard_normal()),
+                  kind="linear")
+    admit_s = time.perf_counter() - t0
+
+    sizes = cfg["batch_sizes"]
+    schedule = [(f"m{int(rng.integers(0, n_models))}",
+                 rng.standard_normal((sizes[j % len(sizes)], p)))
+                for j in range(cfg["n_requests"])]
+
+    def replay():
+        t0 = time.perf_counter()
+        for j, (mid, X) in enumerate(schedule):
+            srv.submit(mid, X)
+            if j % cfg["flush_every"] == cfg["flush_every"] - 1:
+                srv.flush()
+        srv.flush()
+        return time.perf_counter() - t0
+
+    compile_s = replay()                             # compile pass
+    # reset the steady-state telemetry (histograms/counters), keep the
+    # compiled steps and the retrace proof
+    srv.metrics.histogram("serve.latency_ms").clear()
+    srv.metrics.histogram("serve.batch_occupancy").clear()
+    srv.metrics.set_counter("serve.n_dispatches", 0)
+    steady_s = replay()                              # measured pass
+
+    retraces = srv.metrics.mapping("serve.retraces")
+    occ = srv.metrics.histogram("serve.batch_occupancy")
+    rows = sum(X.shape[0] for _, X in schedule)
+    return {
+        "wall_s": steady_s,
+        "compile_s": compile_s,
+        "steady_s": steady_s,
+        "admit_s": admit_s,
+        "n_models": n_models,
+        "n_requests": cfg["n_requests"],
+        "rows": rows,
+        "p50_ms": float(srv.metrics.gauge("serve.p50_ms")),
+        "p99_ms": float(srv.metrics.gauge("serve.p99_ms")),
+        "throughput_rows_per_s": rows / steady_s,
+        "throughput_requests_per_s": cfg["n_requests"] / steady_s,
+        "n_dispatches": srv.metrics.counter("serve.n_dispatches"),
+        "n_compiles": len(retraces),
+        "max_compiles_per_key": max(retraces.values()),
+        "batch_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        "bank_bytes": srv.bank.nbytes,
+        "budget_p99_ms": cfg["budget_p99_ms"],
+        "retraces": dict(retraces),
+        "shape": [n_models, p],
     }
 
 
@@ -427,10 +546,28 @@ def _check_budget(report, budget_path):
             failures.append(
                 f"telemetry_overhead: obs-on wall overhead "
                 f"{tele['overhead_frac']:.4f} exceeds the budget {tele_cap}")
+    # serving latency budget (DESIGN.md §13): the open-loop replay's p99
+    # must stay under the committed budget, and the steady pass must have
+    # added zero compiles (one fused step per (batch, support) bucket pair)
+    sv = report.get("serve_fig")
+    if sv is None:
+        failures.append("serve_fig: no record in this run")
+    else:
+        p99_cap = budget.get("serve_fig", {}).get("budget_p99_ms",
+                                                  sv["budget_p99_ms"])
+        if sv["p99_ms"] > p99_cap + 1e-9:
+            failures.append(
+                f"serve_fig: p99 latency {sv['p99_ms']:.2f}ms exceeds the "
+                f"recorded budget {p99_cap:.2f}ms")
+        if sv["max_compiles_per_key"] > 1:
+            failures.append(
+                f"serve_fig: {sv['max_compiles_per_key']} compiles for one "
+                f"(batch, support) bucket pair (must be 1)")
     if failures:
         raise SystemExit("perf-budget regression:\n  "
                          + "\n  ".join(failures))
-    print(f"dispatch + fused-byte budgets OK (vs {budget_path})")
+    print(f"dispatch + fused-byte + serve-latency budgets OK "
+          f"(vs {budget_path})")
 
 
 def main(argv=None):
@@ -495,6 +632,21 @@ def main(argv=None):
         if m["jit_dispatches_per_outer"] > 1.0 + 1e-9 or \
                 m["host_syncs_per_outer"] > 1.0 + 1e-9:
             raise SystemExit(f"{bench} exceeded 1 dispatch/sync per outer")
+
+    for bench, cfg in SERVE_CONFIGS[scale].items():
+        report[bench] = _measure_serve(cfg)
+        m = report[bench]
+        print(f"{bench} [serve {m['n_models']} models p={m['shape'][1]}]: "
+              f"compile {m['compile_s']:.3f}s, steady {m['steady_s']:.3f}s "
+              f"for {m['n_requests']} requests ({m['rows']} rows), "
+              f"p50 {m['p50_ms']:.2f}ms p99 {m['p99_ms']:.2f}ms, "
+              f"{m['throughput_rows_per_s']:.0f} rows/s, "
+              f"{m['n_compiles']} compiles / {m['n_dispatches']} dispatches")
+        if m["max_compiles_per_key"] > 1:
+            raise SystemExit(
+                f"{bench}: a (batch, support) bucket compiled "
+                f"{m['max_compiles_per_key']}x — the compile-once-per-"
+                f"bucket-pair contract broke: {m['retraces']}")
 
     if not args.no_sparse:
         for bench, cfg in SPARSE_CONFIGS[scale].items():

@@ -53,15 +53,19 @@ def _problem_text(m, fallback):
 BEGIN, END = "<!-- bench-table:begin -->", "<!-- bench-table:end -->"
 
 
+def _fmt_s(m, key):
+    return f"{m[key]:.3f}" if key in m else "—"
+
+
 def build_table(bench_path):
     with open(bench_path) as f:
         b = json.load(f)
     after = b.get("engine_after", {})
     mesh = b.get("mesh_2x4", {})
     lines = [
-        "| workload | problem | wall (s) | dispatches/outer | syncs/outer |"
-        " 2x4-mesh wall (s) |",
-        "|---|---|---|---|---|---|",
+        "| workload | problem | compile (s) | steady (s) | "
+        "dispatches/outer | syncs/outer | 2x4-mesh wall (s) |",
+        "|---|---|---|---|---|---|---|",
     ]
     for key, name, fallback in ROWS:
         m = after.get(key)
@@ -70,14 +74,24 @@ def build_table(bench_path):
         prob = _problem_text(m, fallback)
         mm = mesh.get(key)
         mesh_wall = f"{mm['wall_s']:.3f}" if mm else "—"
+        steady = m.get("steady_s", m["wall_s"])
         lines.append(
-            f"| {name} | {prob} | {m['wall_s']:.3f} | "
+            f"| {name} | {prob} | {_fmt_s(m, 'compile_s')} | {steady:.3f} | "
             f"{m['jit_dispatches_per_outer']:.1f} | "
             f"{m['host_syncs_per_outer']:.1f} | {mesh_wall} |")
+    sv = b.get("serve_fig")
+    if sv:
+        n_models, p = sv["shape"]
+        lines.append(
+            f"| Model serving (p50/p99 {sv['p50_ms']:.1f}/"
+            f"{sv['p99_ms']:.1f} ms, {sv['throughput_rows_per_s']:.0f} "
+            f"rows/s) | {_fmt_count(n_models)} models p={_fmt_count(p)}, "
+            f"{sv['n_requests']} reqs open-loop | {_fmt_s(sv, 'compile_s')} "
+            f"| {sv['steady_s']:.3f} | — | — | — |")
     seed = b.get("seed_before", {}).get("fig2_lasso", {})
     if seed:
         lines.append(
-            f"| _seed host loop (pre-engine), fig. 2_ | same | "
+            f"| _seed host loop (pre-engine), fig. 2_ | same | — | "
             f"{seed['wall_s']:.3f} | "
             f"{seed['jit_dispatches_per_outer']:.1f} | "
             f"{seed['host_syncs_per_outer']:.1f} | — |")

@@ -25,6 +25,7 @@ EXAMPLES = {
     "multitask_meg.py": ([], "done multitask_meg"),
     "lasso_cv.py": ([], "done lasso_cv"),
     "distributed_lasso.py": ([], "done distributed_lasso"),
+    "serve_cohorts.py": ([], "done serve_cohorts"),
     "serve_lm.py": ([], "second call:"),
     "sparse_probe_lm.py": ([], "[mcp probe]"),
     "train_lm.py": (["--steps", "4", "--batch", "2", "--seq", "64"],

@@ -1,0 +1,48 @@
+"""Shared power-of-two bucket rounding.
+
+Every compile-once-per-bucket surface in the repo quantizes a dynamic size
+to a power of two so jitted programs are reused across nearby sizes: the
+solve engine's working-set buckets (``core.working_set.BucketPolicy``), the
+LM serving engine's KV-cache capacities (``serve.engine``), and the sparse
+model server's batch/support buckets (``serve.sparse_server``). This module
+is the single definition of that rounding rule; keeping one copy means one
+set of unit tests covers every bucketed retrace axis.
+"""
+from __future__ import annotations
+
+__all__ = ["next_pow2", "pow2_bucket", "bucket_ladder"]
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (and 1 for x <= 1)."""
+    return 1 << max(0, int(x - 1)).bit_length()
+
+
+def pow2_bucket(n: int, minimum: int = 1, maximum: int | None = None) -> int:
+    """Round ``n`` up to a power-of-two bucket.
+
+    The bucket is ``next_pow2(n)`` clamped below by ``minimum`` (itself
+    rounded to a power of two, so the bucket set stays a pure pow2 ladder)
+    and above by ``maximum`` when given. ``maximum`` wins over ``minimum``
+    when they conflict — a problem with fewer than ``minimum`` units must
+    still fit.
+    """
+    b = max(next_pow2(minimum), next_pow2(n))
+    if maximum is not None:
+        b = min(b, maximum)
+    return b
+
+
+def bucket_ladder(n: int, minimum: int = 1) -> list[int]:
+    """All buckets ``pow2_bucket(k, minimum, n)`` can produce for k <= n.
+
+    Powers of two from ``next_pow2(minimum)`` up, clamped to ``n`` — the
+    enumerable retrace axis of a bucketed compile cache (at most
+    ``len(bucket_ladder(n))`` programs per step family).
+    """
+    out, b = [], min(n, next_pow2(minimum))
+    while b < n:
+        out.append(b)
+        b = next_pow2(b + 1)
+    out.append(n)
+    return out

@@ -7,7 +7,7 @@ from .penalties import (MCP, SCAD, L05, L23, L1, L1L2, BlockL1, BlockMCP,
 from .solver import SolveResult, make_engine, normalize_weights, solve
 from .engine import (Design, DenseDesign, EngineConfig, GramSolver,
                      SolveEngine, SubproblemSolver, XbSolver, as_design,
-                     get_engine)
+                     get_engine, pack_support, scatter_packed)
 from .anderson import anderson_extrapolate
 from .working_set import (BucketPolicy, fixed_point_score, grow_ws_size,
                           next_pow2, select_working_set, violation_scores)
@@ -30,6 +30,7 @@ __all__ = [
     "soft_threshold", "solve", "SolveResult", "make_engine",
     "EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
     "XbSolver", "get_engine", "Design", "DenseDesign", "as_design",
+    "pack_support", "scatter_packed",
     "BucketPolicy", "anderson_extrapolate",
     "violation_scores", "fixed_point_score", "select_working_set",
     "grow_ws_size", "next_pow2", "lambda_max", "lasso", "elastic_net",

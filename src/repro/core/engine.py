@@ -81,7 +81,7 @@ from .working_set import (candidate_columns, gather_ws_cols, gather_ws_vec,
 
 __all__ = ["EngineConfig", "SolveEngine", "SubproblemSolver", "GramSolver",
            "XbSolver", "get_engine", "KERNEL_DATAFIT_KINDS", "Design",
-           "DenseDesign", "as_design"]
+           "DenseDesign", "as_design", "pack_support", "scatter_packed"]
 
 
 # datafit class name -> kernels/cd_epoch.py datafit_kind tag (the Pallas Xb
@@ -1158,6 +1158,49 @@ class SolveEngine:
                 raise ValueError(
                     f"backend='pallas' has no Xb kernel for datafit "
                     f"{type(datafit).__name__}")
+
+
+# ------------------------------------------------- packed-support refit entry
+# Device-side bridge between a dense coefficient vector (what solve()
+# produces and consumes) and the packed (active-index, value) layout the
+# serving bank stores (serve.sparse_server, DESIGN.md §13). Both are traced
+# jax ops so a refit round-trips bank -> solve -> bank without the
+# coefficients ever visiting the host.
+
+def pack_support(beta, bucket: int):
+    """Pack a dense ``[p]`` coefficient vector into ``bucket`` sparse slots.
+
+    Returns ``(idx, val)``: ``idx`` ``[bucket]`` int32 active-coordinate
+    indices, ``val`` ``[bucket]`` the matching coefficients — the
+    ``bucket`` largest-|beta| coordinates (every nonzero, when the support
+    fits, i.e. ``nnz(beta) <= bucket``; callers size the bucket with
+    `repro.bucketing.pow2_bucket` so it always does). Padding slots carry
+    ``idx=0, val=0``, which is exact under `scatter_packed`'s additive
+    scatter. Traced (``lax.top_k``); runs on device.
+    """
+    p = beta.shape[0]
+    k = min(int(bucket), p)
+    _, idx = jax.lax.top_k(jnp.abs(beta), k)
+    val = beta[idx]
+    keep = val != 0
+    idx = jnp.where(keep, idx, 0).astype(jnp.int32)
+    val = jnp.where(keep, val, 0)
+    if k < bucket:
+        idx = jnp.pad(idx, (0, bucket - k))
+        val = jnp.pad(val, (0, bucket - k))
+    return idx, val
+
+
+def scatter_packed(idx, val, p: int):
+    """Dense ``[p]`` coefficient vector from packed ``(idx, val)`` slots.
+
+    Additive scatter, so `pack_support`'s ``idx=0, val=0`` padding
+    contributes nothing and the round trip
+    ``scatter_packed(*pack_support(beta, b), p) == beta`` is exact whenever
+    the support fit the bucket. Traced; the refit path feeds the result
+    straight to ``solve(..., beta0=...)`` as a device-resident warm start.
+    """
+    return jnp.zeros((p,), val.dtype).at[idx].add(val)
 
 
 _ENGINE_CACHE: dict = {}

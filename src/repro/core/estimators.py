@@ -156,10 +156,37 @@ class GeneralizedLinearEstimator:
         self.diagnostics_ = res.diagnostics
         return self
 
+    # serving-side output head for this estimator family: "linear" serves
+    # predict == decision_function; "logistic" adds sigmoid predict_proba +
+    # sign predictions; "svc" serves sign predictions (see DESIGN.md §13)
+    _BANK_KIND = "linear"
+
     def predict(self, X):
         """Linear predictions ``X @ coef_ + intercept_`` (dense, scipy
         sparse, or Design input)."""
         return _design_matmul(X, self.coef_) + self.intercept_
+
+    def export_bank_entry(self):
+        """Fitted state in the serving bank's admission format.
+
+        Returns ``{"coef": [p] float array, "intercept": float, "kind":
+        "linear" | "logistic" | "svc"}`` — exactly what
+        :meth:`repro.serve.SparseModelServer.admit` consumes (DESIGN.md
+        §13). The kind picks the server's output heads; the server packs
+        ``coef`` into its device-resident sparse bank, so only the active
+        coordinates ever travel after admission. Multitask blocks
+        (``coef_`` ``[p, T]``) are not servable yet and raise.
+        """
+        if not hasattr(self, "coef_"):
+            raise ValueError("export_bank_entry() requires a fitted "
+                             "estimator; call fit(X, y) first")
+        coef = np.asarray(self.coef_)
+        if coef.ndim != 1:
+            raise NotImplementedError(
+                "export_bank_entry(): multitask coefficient blocks [p, T] "
+                "are not servable yet")
+        return {"coef": coef, "intercept": float(self.intercept_),
+                "kind": self._BANK_KIND}
 
     def score(self, X, y):
         """R^2 for regressors (classifiers override)."""
@@ -208,6 +235,8 @@ class SparseLogisticRegression(GeneralizedLinearEstimator):
     """L1-penalized logistic regression, labels in {-1, +1}:
     ``Logistic() + L1(alpha)``."""
 
+    _BANK_KIND = "logistic"
+
     def __init__(self, alpha=1.0, **kw):
         super().__init__(Logistic(), L1(alpha), **kw)
         self.alpha = alpha
@@ -227,6 +256,8 @@ class SparseLogisticRegression(GeneralizedLinearEstimator):
 class LinearSVC(GeneralizedLinearEstimator):
     """Dual SVM with hinge loss (paper Eq. 33-35). Accepts dense or scipy
     sparse X (the label-signed design Z^T stays sparse)."""
+
+    _BANK_KIND = "svc"
 
     def __init__(self, C=1.0, **kw):
         super().__init__(QuadraticSVC(), Box(C), **kw)

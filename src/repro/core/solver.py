@@ -147,7 +147,7 @@ def make_engine(penalty, datafit, *, M=5, max_epochs=1000, accel=True,
 
 def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
           M=5, p0=64, use_gram="auto", use_fp_score=None, eps_inner_frac=0.3,
-          beta0=None, n_tasks=None, accel=True, use_ws=True,
+          beta0=None, gsupp0=None, n_tasks=None, accel=True, use_ws=True,
           use_kernels=False, mesh=None, data_axis="data", model_axis="model",
           engine=None, bucket_policy=None, sample_weight=None, obs=None):
     """Solve Problem (1): ``argmin_beta F(X beta) + sum_j g_j(beta_j)``.
@@ -189,7 +189,14 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         Inner tolerance as a fraction of the current outer KKT violation.
     beta0 : array_like, optional
         Warm start; its generalized support sizes the first bucket (one
-        extra probe launch + sync per solve).
+        extra probe launch + sync per solve, unless ``gsupp0`` is given).
+    gsupp0 : int, optional
+        Generalized-support size of ``beta0``, when the caller already
+        knows it host-side (e.g. the serving bank's slot metadata,
+        DESIGN.md §13). Skips the warm-start probe entirely — the solve
+        then launches zero readbacks beyond the per-outer scalar tuple,
+        which is what keeps on-device refits free of coefficient
+        round-trips. Ignored when ``beta0`` is None.
     n_tasks : int, optional
         Number of tasks T (inferred from ``y.ndim == 2`` when omitted).
     accel, use_ws : bool, optional
@@ -302,6 +309,8 @@ def solve(X, y, datafit, penalty, *, tol=1e-6, max_outer=50, max_epochs=1000,
         # per iter)
         if beta0 is None:
             gcount = 0
+        elif gsupp0 is not None:
+            gcount = int(gsupp0)
         else:
             with sp("probe"):
                 _, g0, _ = engine.probe(design, y, beta, Xb, L, offset,

@@ -20,6 +20,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.bucketing import next_pow2
+
 
 def fixed_point_score(penalty, beta, grad, L):
     """score^cd_j = |beta_j - prox_{g_j/L_j}(beta_j - grad_j / L_j)| (Eq. 24)."""
@@ -42,11 +44,6 @@ def violation_scores(penalty, beta, grad, L, use_fixed_point=None):
     if use_fixed_point:
         return fixed_point_score(penalty, beta, grad, L)
     return penalty.subdiff_dist(grad, beta)
-
-
-def next_pow2(x: int) -> int:
-    """Smallest power of two >= x (working-set bucket rounding)."""
-    return 1 << max(0, int(x - 1)).bit_length()
 
 
 def grow_ws_size(prev_size: int, gsupp_count: int, p: int, p0: int = 64,

@@ -12,8 +12,10 @@ The first renders a ``run.json`` written by :meth:`repro.obs.Obs.dump`;
 ``--merge-out`` writes the bench report with the run attached under an
 ``"obs_report"`` key (the artifact the CI ``obs`` job uploads). ``--smoke``
 first GENERATES the run — a tiny sequential ``reg_path`` (so the trace
-holds nested solve/outer/lambda spans) followed by a small
-``cross_val_path`` grid with a progress callback — then renders it.
+holds nested solve/outer/lambda spans), a small ``cross_val_path`` grid
+with a progress callback, and a :class:`~repro.serve.SparseModelServer`
+round (admit / mixed-batch flush / one on-device refit, so the report
+covers the serving counters too) — then renders it.
 """
 from __future__ import annotations
 
@@ -55,6 +57,22 @@ def smoke_run(trace_out=None, run_out=None, seed=0):
                    lambdas=lmax * np.geomspace(1, 0.05, 4), cv=3,
                    vmap_chunk=2, tol=1e-6, obs=obs,
                    progress=lambda ev: None)
+
+    # serving round: the serve.* counters/histograms land in the same
+    # registry so one report covers solve AND serve diagnostics
+    from repro.serve import SparseModelServer
+    srv = SparseModelServer(p=p, obs=obs, batch_minimum=4,
+                            support_minimum=4)
+    for i in range(6):
+        coef = np.zeros(p)
+        sel = rng.choice(p, size=3 + 2 * i, replace=False)
+        coef[sel] = rng.standard_normal(sel.size)
+        srv.admit(f"m{i}", coef, intercept=float(rng.standard_normal()),
+                  kind="logistic" if i % 2 else "linear")
+    for i, rows in enumerate((1, 3, 5, 2)):
+        srv.submit(f"m{i}", rng.standard_normal((rows, p)))
+    srv.flush()
+    srv.refit("m0", X, y, Quadratic(), L1(0.3 * lmax), tol=1e-6)
     if trace_out:
         obs.export_chrome(trace_out)
     if run_out:
@@ -71,6 +89,10 @@ def render(run: dict, bench: dict = None) -> str:
             lines.append(f"  {k}: {reg[kind][k]}")
     for name, m in sorted(reg.get("mappings", {}).items()):
         lines.append(f"  {name}: {m}")
+    for name, h in sorted(reg.get("histograms", {}).items()):
+        if h.get("count"):
+            lines.append(f"  {name}: n={h['count']} mean={h['mean']:.3g} "
+                         f"min={h['min']:.3g} max={h['max']:.3g}")
     spans = run.get("spans", {})
     if spans:
         lines.append("-- spans (wall-time rollup) --")
@@ -110,6 +132,14 @@ def render(run: dict, bench: dict = None) -> str:
                         f"  {section}/{key}: dispatches/outer="
                         f"{rec['jit_dispatches_per_outer']:.3f}, "
                         f"syncs/outer={rec['host_syncs_per_outer']:.3f}")
+        sv = bench.get("serve_fig")
+        if sv:
+            lines.append(
+                f"  serve_fig: p50/p99={sv['p50_ms']:.2f}/"
+                f"{sv['p99_ms']:.2f} ms, "
+                f"{sv['throughput_rows_per_s']:.0f} rows/s, "
+                f"{sv['n_compiles']} compiles / {sv['n_dispatches']} "
+                f"dispatches (budget p99 {sv['budget_p99_ms']:.0f} ms)")
     return "\n".join(lines)
 
 

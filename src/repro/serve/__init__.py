@@ -1,1 +1,28 @@
-from .engine import GenerateResult, ServeEngine
+"""repro.serve — serving surfaces over fitted models (DESIGN.md §13).
+
+Two engines share one idiom (compile once per power-of-two bucket, dynamic
+micro-batching, a device-resident model zoo):
+
+  * :class:`ServeEngine` — batched LM generation (prefill + decode, one
+    compiled decode step per KV-capacity bucket);
+  * :class:`SparseModelServer` — the sparse-GLM predict server: a packed
+    device-resident :class:`CoefficientBank` of thousands of fitted
+    models, ``(batch_bucket, support_bucket)``-keyed fused predict
+    dispatches, and on-device warm-start refits through the solve engine.
+
+Quickstart::
+
+    from repro.core import Lasso
+    from repro.serve import SparseModelServer
+
+    server = SparseModelServer(p=X.shape[1])
+    server.admit("cohort-0", Lasso(alpha=0.1).fit(X, y))
+    y_hat = server.predict("cohort-0", X_new)      # one fused dispatch
+"""
+from .engine import GenerateResult, ServeEngine, sample_tokens
+from .sparse_server import (BANK_KINDS, CoefficientBank, PredictResult,
+                            RefitResult, SparseModelServer)
+
+__all__ = ["ServeEngine", "GenerateResult", "sample_tokens",
+           "SparseModelServer", "CoefficientBank", "PredictResult",
+           "RefitResult", "BANK_KINDS"]

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bucketing import pow2_bucket
 from repro.models.params import abstract_params
 from repro.models.transformer import cache_defs
 from repro.train.steps import make_decode_step, make_prefill_step
@@ -26,6 +27,22 @@ __all__ = ["ServeEngine", "GenerateResult", "sample_tokens"]
 
 @dataclass
 class GenerateResult:
+    """Result of one `ServeEngine.generate` call.
+
+    Attributes
+    ----------
+    tokens : np.ndarray
+        Generated token ids, ``[B, n_new]`` int32.
+    n_prefill : int
+        Prompt length consumed by the prefill step.
+    n_steps : int
+        Number of decode steps executed after the first sampled token.
+    n_decode_compiles : int
+        Total decode-step compilations across the engine's lifetime at the
+        time of this call (one per KV-capacity bucket — the compile-count
+        proof mirrored by `SparseModelServer`).
+    """
+
     tokens: np.ndarray                  # [B, n_new]
     n_prefill: int
     n_steps: int
@@ -33,10 +50,7 @@ class GenerateResult:
 
 
 def _bucket(n: int, minimum: int = 128) -> int:
-    b = minimum
-    while b < n:
-        b *= 2
-    return b
+    return pow2_bucket(n, minimum=minimum)
 
 
 def sample_tokens(logits, key, *, temperature=0.0, top_k=0):
@@ -54,6 +68,16 @@ def sample_tokens(logits, key, *, temperature=0.0, top_k=0):
 
 
 class ServeEngine:
+    """Batched LM serving engine over the model zoo.
+
+    Runs prefill once per prompt batch, then decodes with steps compiled
+    once per power-of-two KV-cache capacity bucket (`repro.bucketing`): a
+    traced ``cur_len`` keeps masking/positions dynamic so one compiled step
+    serves every context length in the bucket. The compile-once-per-bucket
+    + dynamic-batch idiom here is the template `SparseModelServer` applies
+    to sparse GLM prediction.
+    """
+
     def __init__(self, cfg, params, *, mesh=None, act_rules=None,
                  param_rules=None, chunk=512):
         self.cfg = cfg

@@ -1,0 +1,70 @@
+"""Unit tests for the shared pow2 bucket utility (repro.bucketing).
+
+One rounding rule backs every compile-once-per-bucket surface — the solve
+engine's working-set buckets, the LM engine's KV capacities, and the sparse
+server's batch/support buckets — so these tests are the single source of
+truth for it. The cross-wiring tests pin the consumers to the shared
+implementation (the dedup this PR performed).
+"""
+import pytest
+
+from repro.bucketing import bucket_ladder, next_pow2, pow2_bucket
+
+
+@pytest.mark.parametrize("x,want", [
+    (0, 1), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (63, 64), (64, 64),
+    (65, 128), (1000, 1024), (1 << 20, 1 << 20), ((1 << 20) + 1, 1 << 21),
+])
+def test_next_pow2(x, want):
+    assert next_pow2(x) == want
+
+
+def test_next_pow2_is_pow2_and_tight():
+    for x in range(1, 600):
+        b = next_pow2(x)
+        assert b >= x and (b & (b - 1)) == 0
+        assert b < 2 * x or x <= 1      # tight: never more than doubles
+
+
+def test_pow2_bucket_minimum_floor():
+    assert pow2_bucket(3, minimum=128) == 128
+    assert pow2_bucket(129, minimum=128) == 256
+    # a non-pow2 minimum is itself rounded up: the ladder stays pure pow2
+    assert pow2_bucket(1, minimum=100) == 128
+
+
+def test_pow2_bucket_maximum_clamp():
+    assert pow2_bucket(300, maximum=200) == 200
+    # maximum wins over minimum (tiny problems must fit)
+    assert pow2_bucket(1, minimum=64, maximum=10) == 10
+    assert pow2_bucket(17, minimum=8, maximum=1 << 30) == 32
+
+
+def test_bucket_ladder_enumerates_reachable_buckets():
+    lad = bucket_ladder(200, minimum=64)
+    assert lad == [64, 128, 200]
+    for k in range(1, 201):
+        assert pow2_bucket(k, minimum=64, maximum=200) in lad
+    assert bucket_ladder(8, minimum=64) == [8]     # clamp below the floor
+
+
+def test_working_set_uses_shared_next_pow2():
+    # the dedup satellite: core.working_set re-exports the shared helper
+    import repro.bucketing as bucketing
+    import repro.core.working_set as ws
+    assert ws.next_pow2 is bucketing.next_pow2
+    from repro.core import next_pow2 as core_np2
+    assert core_np2 is bucketing.next_pow2
+
+
+def test_bucket_policy_ladder_matches_shared_ladder():
+    from repro.core.working_set import BucketPolicy
+    pol = BucketPolicy(p0=64)
+    assert pol.ladder(500) == bucket_ladder(500, minimum=64)
+    assert pol.ladder(64) == bucket_ladder(64, minimum=64)
+
+
+def test_serve_engine_bucket_uses_shared_helper():
+    from repro.serve.engine import _bucket
+    assert _bucket(1) == 128 and _bucket(129) == 256
+    assert _bucket(5, minimum=4) == pow2_bucket(5, minimum=4) == 8

@@ -24,12 +24,16 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PUBLIC_MODULES = ["repro.core", "repro.sparse", "repro.core.engine",
                   "repro.core.solver", "repro.core.path",
                   "repro.core.estimators", "repro.core.penalties",
-                  "repro.core.datafits", "repro.core.api"]
+                  "repro.core.datafits", "repro.core.api",
+                  "repro.bucketing", "repro.serve",
+                  "repro.serve.sparse_server"]
 
 # classes whose public methods form a documented protocol surface
 PROTOCOL_CLASSES = ["repro.core.engine.Design",
                     "repro.core.engine.SolveEngine",
-                    "repro.core.engine.SubproblemSolver"]
+                    "repro.core.engine.SubproblemSolver",
+                    "repro.serve.sparse_server.SparseModelServer",
+                    "repro.serve.sparse_server.CoefficientBank"]
 
 
 def _has_real_doc(obj, name):

@@ -1,0 +1,338 @@
+"""SparseModelServer suite (DESIGN.md §13).
+
+Covers the PR-10 acceptance criteria:
+
+  * estimator <-> server prediction parity to 1e-12 across dense/CSC fits,
+    including scipy-sparse predict inputs with fit_intercept=True (the
+    server-parity baseline);
+  * <= 1 compile per (batch_bucket, support_bucket) pair across a
+    1000-model / mixed-batch-size request stream (trace-time retrace
+    counters, the solve engine's proof idiom);
+  * on-device refit: the drifted-cohort re-solve from the resident beta
+    matches a cold solve() warm-started from the same beta to <= 1e-10,
+    with zero coefficient host round-trips (every jax.device_get leaf is
+    scalar-sized; the fresh engine's dispatch counter shows no probe).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sparse
+
+from repro.core import (L1, Lasso, LinearSVC, Quadratic,
+                        SparseLogisticRegression, lambda_max, make_engine,
+                        pack_support, scatter_packed, solve)
+from repro.obs import Obs
+from repro.serve import CoefficientBank, SparseModelServer
+
+
+def _problem(seed=0, n=50, p=96, nnz=5, noise=0.01):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    beta = np.zeros(p)
+    sup = rng.choice(p, nnz, replace=False)
+    beta[sup] = 2.0 * rng.standard_normal(nnz)
+    y = X @ beta + noise * rng.standard_normal(n)
+    return X, y, beta
+
+
+# ------------------------------------------------------- pack/scatter bridge
+def test_pack_scatter_round_trip_exact():
+    _, _, beta = _problem(nnz=5)
+    b = jnp.asarray(beta)
+    for bucket in (8, 16, 64):
+        idx, val = pack_support(b, bucket)
+        assert idx.shape == (bucket,) and val.shape == (bucket,)
+        np.testing.assert_array_equal(np.asarray(scatter_packed(
+            idx, val, b.shape[0])), beta)
+
+
+def test_pack_support_bucket_exceeding_p_pads():
+    b = jnp.asarray(np.array([1.0, 0.0, -2.0]))
+    idx, val = pack_support(b, 8)
+    assert idx.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(scatter_packed(idx, val, 3)),
+                                  [1.0, 0.0, -2.0])
+
+
+def test_pack_support_truncates_to_largest_magnitudes():
+    b = jnp.asarray(np.array([0.1, -3.0, 0.2, 2.0]))
+    idx, val = pack_support(b, 2)
+    dense = np.asarray(scatter_packed(idx, val, 4))
+    np.testing.assert_array_equal(dense, [0.0, -3.0, 0.0, 2.0])
+
+
+# ------------------------------------------------------------ predict parity
+def test_parity_dense_fit_intercept_scipy_sparse_predict():
+    """Satellite: estimator predict on scipy-sparse inputs with
+    fit_intercept=True, and the server matches it to 1e-12."""
+    X, y, _ = _problem(seed=1)
+    lam = 0.05 * lambda_max(X, y)
+    est = Lasso(alpha=lam, fit_intercept=True).fit(X, y)
+    assert est.intercept_ != 0.0
+
+    Xnew = _problem(seed=2)[0][:17]
+    ref = est.predict(Xnew)
+    # estimator accepts sparse predict inputs with an intercept
+    for fmt in (sparse.csc_matrix, sparse.csr_matrix):
+        np.testing.assert_allclose(est.predict(fmt(Xnew)), ref,
+                                   rtol=0, atol=1e-12)
+
+    srv = SparseModelServer(p=X.shape[1])
+    srv.admit("cohort", est)
+    np.testing.assert_allclose(srv.predict("cohort", Xnew), ref,
+                               rtol=0, atol=1e-12)
+    # the server also takes sparse request rows
+    np.testing.assert_allclose(
+        srv.predict("cohort", sparse.csc_matrix(Xnew)), ref,
+        rtol=0, atol=1e-12)
+    np.testing.assert_allclose(srv.decision_function("cohort", Xnew), ref,
+                               rtol=0, atol=1e-12)
+
+
+def test_parity_csc_fit():
+    X, y, _ = _problem(seed=3, nnz=4)
+    Xs = sparse.csc_matrix(np.where(np.abs(X) > 0.8, X, 0.0))
+    lam = 0.1 * lambda_max(Xs.toarray(), y)
+    est = Lasso(alpha=lam).fit(Xs, y)
+    srv = SparseModelServer(p=X.shape[1])
+    srv.admit("csc", est)
+    Xnew = _problem(seed=4)[0][:9]
+    np.testing.assert_allclose(srv.predict("csc", Xnew), est.predict(Xnew),
+                               rtol=0, atol=1e-12)
+
+
+def test_parity_logistic_and_svc_heads():
+    X, y, beta = _problem(seed=5, n=60)
+    yl = np.sign(X @ beta + 0.1)
+    log = SparseLogisticRegression(alpha=0.02).fit(X, yl)
+    svc = LinearSVC(C=0.5).fit(X, yl)
+    srv = SparseModelServer(p=X.shape[1])
+    srv.admit("log", log)
+    srv.admit("svc", svc)
+    Xnew = X[:11]
+    np.testing.assert_allclose(srv.predict("log", Xnew), log.predict(Xnew),
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(srv.predict_proba("log", Xnew),
+                               log.predict_proba(Xnew), rtol=0, atol=1e-12)
+    np.testing.assert_allclose(srv.predict("svc", Xnew), svc.predict(Xnew),
+                               rtol=0, atol=1e-12)
+    # all three heads of one request come from ONE fused dispatch
+    n0 = srv.metrics.counter("serve.n_dispatches")
+    t = srv.submit("log", Xnew)
+    (res,) = srv.flush()
+    assert srv.metrics.counter("serve.n_dispatches") == n0 + 1
+    assert res.ticket == t and res.proba is not None
+    np.testing.assert_allclose(res.decision,
+                               np.asarray(X[:11] @ log.coef_), atol=1e-12)
+
+
+def test_mixed_kind_requests_share_a_dispatch():
+    """Requests for different models (and kinds) in the same support bucket
+    coalesce into one fused dispatch."""
+    p = 40
+    ca, cb = np.zeros(p), np.zeros(p)
+    ca[[1, 7, 20]] = [1.5, -0.5, 2.0]
+    cb[[3, 11, 30]] = [-1.0, 0.8, 0.3]
+    srv = SparseModelServer(p=p)
+    sa = srv.admit("a", ca, intercept=0.3, kind="linear")
+    sb = srv.admit("b", cb, intercept=-0.1, kind="logistic")
+    assert sa.bucket == sb.bucket
+    X = np.random.default_rng(6).standard_normal((7, p))
+    n0 = srv.metrics.counter("serve.n_dispatches")
+    srv.submit("a", X[:3])
+    srv.submit("b", X[3:])
+    ra, rb = srv.flush()
+    assert srv.metrics.counter("serve.n_dispatches") == n0 + 1
+    np.testing.assert_allclose(ra.predict, X[:3] @ ca + 0.3, atol=1e-12)
+    np.testing.assert_allclose(rb.predict, np.sign(X[3:] @ cb - 0.1),
+                               atol=1e-12)
+    np.testing.assert_allclose(
+        rb.proba[:, 1], 1.0 / (1.0 + np.exp(-(X[3:] @ cb - 0.1))),
+        atol=1e-12)
+
+
+# --------------------------------------------- compile-once acceptance proof
+def test_compile_once_per_bucket_pair_1000_models():
+    """<= 1 compile per (batch_bucket, support_bucket) pair across a
+    1000-model / mixed-batch-size request stream."""
+    p = 64
+    rng = np.random.default_rng(7)
+    srv = SparseModelServer(p=p, batch_minimum=8, support_minimum=8)
+    for i in range(1000):
+        nnz = int(rng.integers(1, 25))          # support buckets 8/16/32
+        coef = np.zeros(p)
+        coef[rng.choice(p, nnz, replace=False)] = rng.standard_normal(nnz)
+        srv.admit(f"m{i}", coef, intercept=float(rng.standard_normal()),
+                  kind="linear")
+    assert len(srv.bank) == 1000
+
+    sizes = [1, 2, 5, 9, 17, 33, 3, 12, 7, 28]   # batch buckets 8..64
+    ids = [f"m{int(rng.integers(0, 1000))}" for _ in range(120)]
+    for j, mid in enumerate(ids):
+        srv.submit(mid, rng.standard_normal((sizes[j % len(sizes)], p)))
+        if j % 7 == 6:
+            srv.flush()
+    srv.flush()
+
+    retraces = srv.metrics.mapping("serve.retraces")
+    keys = srv.metrics.mapping("serve.dispatch_keys")
+    assert retraces, "no compiles recorded"
+    assert max(retraces.values()) == 1, f"recompiled a bucket: {retraces}"
+    assert set(retraces) == set(keys)
+    assert len(keys) >= 4                        # the stream really mixed
+    # steps are reused: strictly more dispatches than compiles
+    assert srv.metrics.counter("serve.n_dispatches") > len(retraces)
+    assert srv.metrics.counter("serve.requests") == 120
+    occ = srv.metrics.histogram("serve.batch_occupancy")
+    assert occ and all(0.0 < o <= 1.0 for o in occ)
+    assert srv.metrics.gauge("serve.p99_ms") >= \
+        srv.metrics.gauge("serve.p50_ms") > 0.0
+
+
+# ------------------------------------------------------------ on-device refit
+def _drifted(seed):
+    X, y, beta = _problem(seed=seed, n=55, p=80, nnz=6)
+    X2, _, _ = _problem(seed=seed + 100, n=55, p=80)
+    beta2 = np.roll(beta, 3) * 1.4               # the cohort drifted
+    y2 = X2 @ beta2 + 0.01 * np.random.default_rng(seed).standard_normal(55)
+    return X, y, X2, y2
+
+
+def test_refit_matches_cold_warm_started_solve():
+    X, y, X2, y2 = _drifted(8)
+    lam = 0.05 * lambda_max(X, y)
+    est = Lasso(alpha=lam).fit(X, y)
+    srv = SparseModelServer(p=X.shape[1])
+    srv.admit("c", est)
+    resident = np.asarray(srv.bank.beta("c"))
+    np.testing.assert_array_equal(resident, est.coef_)
+
+    lam2 = 0.05 * lambda_max(X2, y2)
+    rr = srv.refit("c", X2, y2, Quadratic(), L1(lam2), tol=1e-10)
+    cold = solve(X2, y2, Quadratic(), L1(lam2), beta0=jnp.asarray(resident),
+                 tol=1e-10)
+    np.testing.assert_allclose(np.asarray(srv.bank.beta("c")),
+                               np.asarray(cold.beta), rtol=0, atol=1e-10)
+    assert rr.n_active == int(np.count_nonzero(np.asarray(cold.beta)))
+    # the probe sync was skipped: one fewer host sync than the cold solve
+    assert rr.result.n_outer == cold.n_outer
+    assert rr.result.n_host_syncs == cold.n_host_syncs - 1
+    # serving continues from the swapped slot
+    pred = srv.predict("c", X2[:5])
+    np.testing.assert_allclose(
+        pred, np.asarray(X2[:5] @ np.asarray(cold.beta)) + est.intercept_,
+        rtol=0, atol=1e-10)
+
+
+def test_refit_zero_coefficient_host_round_trips(monkeypatch):
+    """Every host readback during refit is scalar-sized (solve's per-outer
+    tuple + one nnz scalar); the fresh engine's dispatch counter equals the
+    outer count — no probe launch, no [p]-sized transfer anywhere."""
+    X, y, X2, y2 = _drifted(9)
+    lam = 0.05 * lambda_max(X, y)
+    est = Lasso(alpha=lam).fit(X, y)
+    srv = SparseModelServer(p=X.shape[1])
+    srv.admit("c", est)
+
+    lam2 = 0.05 * lambda_max(X2, y2)
+    eng = make_engine(L1(lam2), Quadratic())     # fresh counters
+    real_get = jax.device_get
+    leaf_sizes = []
+
+    def spy_get(tree):
+        leaf_sizes.extend(int(np.size(l))
+                          for l in jax.tree_util.tree_leaves(tree))
+        return real_get(tree)
+
+    monkeypatch.setattr(jax, "device_get", spy_get)
+    rr = srv.refit("c", X2, y2, Quadratic(), L1(lam2), engine=eng,
+                   tol=1e-10)
+    monkeypatch.setattr(jax, "device_get", real_get)
+
+    assert leaf_sizes, "no readbacks recorded"
+    assert max(leaf_sizes) == 1, \
+        f"non-scalar host transfer during refit: {leaf_sizes}"
+    # dispatch counter: exactly one fused step per outer iteration, no probe
+    assert eng.n_dispatches == rr.result.n_host_syncs
+    assert rr.result.converged
+
+
+def test_refit_can_change_support_bucket():
+    X, y, X2, y2 = _drifted(10)
+    lam = 0.05 * lambda_max(X, y)
+    est = Lasso(alpha=lam).fit(X, y)
+    srv = SparseModelServer(p=X.shape[1], support_minimum=4)
+    s0 = srv.admit("c", est)
+    # a much weaker penalty densifies the refit solution
+    lam2 = 0.001 * lambda_max(X2, y2)
+    rr = srv.refit("c", X2, y2, Quadratic(), L1(lam2), tol=1e-8)
+    assert rr.n_active > s0.n_active
+    if rr.bucket != s0.bucket:
+        assert rr.moved
+        # the old row was released for reuse
+        assert s0.row in srv.bank.group(s0.bucket).free
+    srv.predict("c", X2[:3])                     # still servable
+
+
+# -------------------------------------------------------------- bank details
+def test_bank_capacity_growth_and_readmission():
+    p = 32
+    bank = CoefficientBank(p, support_minimum=4, capacity0=2)
+    rng = np.random.default_rng(11)
+    for i in range(9):                           # forces pow2 growth 2->16
+        coef = np.zeros(p)
+        coef[rng.choice(p, 3, replace=False)] = 1.0
+        bank.admit(f"m{i}", coef)
+    assert len(bank) == 9 and bank.n_grows >= 2
+    grp = bank.group(4)
+    assert grp.capacity >= 9 and grp.n == 9
+    # re-admission replaces atomically and frees the old row
+    old = bank.slot("m0")
+    coef = np.zeros(p)
+    coef[:6] = 2.0                               # bucket 8 now
+    bank.admit("m0", coef)
+    assert bank.slot("m0").bucket == 8
+    assert old.row in bank.group(old.bucket).free
+    np.testing.assert_array_equal(np.asarray(bank.beta("m0")), coef)
+    assert bank.nbytes > 0
+
+
+def test_entry_errors():
+    srv = SparseModelServer(p=16)
+    with pytest.raises(KeyError, match="not resident"):
+        srv.submit("ghost", np.zeros((2, 16)))
+    with pytest.raises(ValueError, match="kind"):
+        srv.admit("m", np.zeros(16), kind="tree")
+    with pytest.raises(ValueError, match=r"\[p\]"):
+        srv.admit("m", np.zeros(8))
+    srv.admit("m", np.arange(16.0))
+    with pytest.raises(ValueError, match="rows must be"):
+        srv.submit("m", np.zeros((2, 8)))
+    with pytest.raises(ValueError, match="logistic"):
+        srv.predict_proba("m", np.zeros((1, 16)))
+    est = Lasso(alpha=1.0)
+    with pytest.raises(ValueError, match="fit"):
+        est.export_bank_entry()
+
+
+def test_export_bank_entry_kinds():
+    X, y, beta = _problem(seed=12, n=40, p=48)
+    yl = np.sign(X @ beta + 0.1)
+    assert Lasso(alpha=1.0).fit(X, y).export_bank_entry()["kind"] == \
+        "linear"
+    assert SparseLogisticRegression(alpha=0.1).fit(X, yl) \
+        .export_bank_entry()["kind"] == "logistic"
+    assert LinearSVC(C=0.5).fit(X, yl).export_bank_entry()["kind"] == "svc"
+
+
+def test_obs_integration_counters_and_spans():
+    X, y, _ = _problem(seed=13)
+    obs = Obs(rings=False)
+    srv = SparseModelServer(p=X.shape[1], obs=obs)
+    srv.admit("m", Lasso(alpha=0.05 * lambda_max(X, y)).fit(X, y))
+    srv.predict("m", X[:4])
+    assert srv.metrics is obs.registry
+    assert obs.registry.counter("serve.requests") == 1
+    names = set(obs.tracer.summary())
+    assert {"serve.flush", "serve.dispatch"} <= names
